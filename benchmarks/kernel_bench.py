@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks.  On this CPU container the Pallas bodies run
+in interpret mode (pure-Python — not a performance datum), so throughput
+is measured on the XLA-compiled ref path, which computes the identical
+math the TPU kernel implements; interpret-mode correctness is covered by
+tests/test_kernels.py."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=20) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> list:
+    rows = []
+    r = np.random.default_rng(0)
+
+    x = jnp.asarray(r.standard_normal((256, 2048)), jnp.float32)
+    codes = jnp.asarray(r.integers(-127, 128, (2048, 2048)), jnp.int8)
+    scale = jnp.asarray(np.abs(r.standard_normal(2048)) * 0.02, jnp.float32)
+    f = jax.jit(lambda a, b, c: ref.quant_matmul(a, b, c))
+    dt = _time(f, x, codes, scale)
+    flops = 2 * 256 * 2048 * 2048
+    rows.append({"name": "kernel/quant_matmul_256x2048x2048",
+                 "us_per_call": dt * 1e6,
+                 "gflops_s": round(flops / dt / 1e9, 1)})
+
+    codes2 = jnp.asarray(r.integers(-127, 128, (4096, 4096)), jnp.int8)
+    scale2 = jnp.full((4096,), 0.01, jnp.float32)
+    lo, hi = jnp.asarray([0.5] + [0.0] * 7, jnp.float32), jnp.asarray([0.8] + [0.0] * 7, jnp.float32)
+    g = jax.jit(lambda c, s, l, h: ref.masked_dequant(c, s[None, :], l, h))
+    dt = _time(g, codes2, scale2, lo, hi)
+    gb = 4096 * 4096 * (1 + 4) / 1e9
+    rows.append({"name": "kernel/masked_dequant_4096x4096",
+                 "us_per_call": dt * 1e6,
+                 "gb_s": round(gb / dt, 1)})
+
+    buf = jnp.asarray(r.standard_normal(1 << 22), jnp.float32)
+    idx = jnp.asarray(r.choice(1 << 22, 4096, replace=False), jnp.int32)
+    vals = jnp.asarray(r.standard_normal(4096), jnp.float32)
+    h = jax.jit(lambda b, i, v: ref.delta_apply(b, i, v))
+    dt = _time(h, buf, idx, vals)
+    rows.append({"name": "kernel/delta_apply_4M_buf_4k_delta",
+                 "us_per_call": dt * 1e6,
+                 "updates_per_s": round(4096 / dt)})
+    return rows

@@ -1,0 +1,51 @@
+"""Assemble the §Roofline table from dryrun_results/*.json into markdown
+(printed and written to benchmarks/roofline_table.md)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "dryrun_results"
+OUT = Path(__file__).resolve().parent / "roofline_table.md"
+
+COLS = ("arch", "shape", "mesh", "dominant", "compute_s", "memory_s",
+        "collective_s", "useful_flops_ratio", "bytes_per_device", "note")
+
+
+def rows():
+    out = []
+    for f in sorted(RESULTS.glob("*.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def render(data=None) -> str:
+    data = data or rows()
+    lines = ["| arch | shape | mesh | dominant | compute (s) | memory (s) | "
+             "collective (s) | useful-FLOP ratio | GiB/dev | note |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(data, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | **{r['dominant']}** | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{(r.get('bytes_per_device') or 0) / 2**30:.2f} | {r.get('note', '')} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> list:
+    data = rows()
+    md = render(data)
+    OUT.write_text(md + "\n")
+    agg = {}
+    for r in data:
+        agg.setdefault(r["dominant"], 0)
+        agg[r["dominant"]] += 1
+    return [{"name": "roofline/table", "us_per_call": 0.0,
+             "combos": len(data), "dominant_histogram": agg,
+             "written": str(OUT)}]
+
+
+if __name__ == "__main__":
+    print(render())

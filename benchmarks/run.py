@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/claim + framework benches.
+
+Prints ``name,us_per_call,derived...`` CSV rows.  Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only storage,licensing,...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+
+SUITES = ("storage", "update", "licensing", "kernels", "serving", "roofline")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma list from {SUITES}")
+    args = ap.parse_args(argv)
+    picked = args.only.split(",") if args.only else list(SUITES)
+
+    from benchmarks import (kernel_bench, licensing_ladder, roofline_table,
+                            serving_bench, storage_cost, update_latency)
+
+    modules = {
+        "storage": storage_cost,        # paper Table 1
+        "update": update_latency,       # paper §4.3 low-latency update
+        "licensing": licensing_ladder,  # paper §3.5 / Algorithm 1
+        "kernels": kernel_bench,
+        "serving": serving_bench,
+        "roofline": roofline_table,     # deliverable (g)
+    }
+
+    failures = 0
+    print("name,us_per_call,derived")
+    for name in picked:
+        mod = modules[name]
+        try:
+            for row in mod.run():
+                base = {k: row.pop(k) for k in ("name", "us_per_call")}
+                print(f"{base['name']},{base['us_per_call']:.1f},"
+                      + json.dumps(row, default=str))
+        except Exception:  # noqa: BLE001 — report all suites
+            failures += 1
+            print(f"{name},FAILED,", file=sys.stdout)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

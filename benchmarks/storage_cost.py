@@ -1,0 +1,77 @@
+"""Paper Table 1 reproduction: DB storage cost of ~100k-param MLPs under
+full / pruned-80% / pruned+quantized storage.
+
+Paper numbers (64-bit values in Postgres): 109386 params -> 13 MB full,
+2.92 MB pruned, 2.34 MB pruned+quant; 101770 -> 12 / 2.65 / 2.09 MB.
+We report the same three columns from our sqlite WeightStore (row mode,
+8B REAL values like the paper's baseline) plus the pipeline's accounting.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.paper_mlp import TABLE1_A, TABLE1_B
+from repro.core import compress_pipeline, flatten_params, prune_params
+from repro.core.weightstore import WeightStore
+from repro.training import init_mlp_params
+
+
+def _store_size(params) -> dict:
+    """Commit to an on-disk sqlite DB and report BOTH the pure payload
+    accounting and the actual database file size (the paper's 13 MB for
+    109k params is Postgres file cost incl. tuple/index overhead — the
+    honest comparison is file-to-file)."""
+    import os
+    import tempfile
+
+    fd, path = tempfile.mkstemp(suffix=".db")
+    os.close(fd)
+    os.unlink(path)
+    store = WeightStore(path)
+    store.register_model("m", "mlp")
+    store.commit("m", params)
+    store.conn.commit()
+    store.conn.execute("VACUUM")
+    out = store.storage_bytes("m")
+    out["file_bytes"] = os.path.getsize(path)
+    store.close()
+    os.unlink(path)
+    return out
+
+
+def run() -> list:
+    rows = []
+    for mlp_cfg in (TABLE1_A, TABLE1_B):
+        key = jax.random.PRNGKey(0)
+        params = init_mlp_params(key, mlp_cfg)
+        n_params = mlp_cfg.num_params
+
+        t0 = time.perf_counter()
+        full = _store_size(params)
+        t_full = time.perf_counter() - t0
+
+        pruned, quant, stats = compress_pipeline(params, sparsity=0.8)
+        t0 = time.perf_counter()
+        pruned_sz = _store_size(pruned)
+        t_pruned = time.perf_counter() - t0
+
+        mb = 1e6
+        rows.append({
+            "name": f"table1/{mlp_cfg.name}",
+            "us_per_call": t_full * 1e6,
+            "n_params": n_params,
+            "full_file_MB": round(full["file_bytes"] / mb, 2),
+            "pruned_file_MB": round(pruned_sz["file_bytes"] / mb, 2),
+            "full_payload_MB": round(full["row_bytes"] / mb, 2),
+            "pruned_payload_MB": round(pruned_sz["row_bytes"] / mb, 2),
+            "pruned_quant_MB": round(stats.quantized_bytes / mb, 2),
+            "shared_MB": round(stats.shared_bytes / mb, 2),
+            "sparsity": round(stats.sparsity, 3),
+            "paper_full_MB": 13.0 if mlp_cfg is TABLE1_A else 12.0,
+            "paper_pruned_MB": 2.92 if mlp_cfg is TABLE1_A else 2.65,
+            "paper_quant_MB": 2.34 if mlp_cfg is TABLE1_A else 2.09,
+        })
+    return rows

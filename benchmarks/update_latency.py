@@ -1,0 +1,82 @@
+"""Low-latency-update benchmark (paper §3.1.2 / §4.3): bytes + time for a
+delta update vs a full re-download, across change fractions, including the
+skip-intermediate-patches query (§4.2)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.protocol import EdgeClient, LicenseServer
+from repro.core.weightstore import WeightStore
+from repro.configs.paper_mlp import TABLE1_A
+from repro.training import init_mlp_params
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    from repro.core import flatten_params
+
+    params = flatten_params(jax.device_get(init_mlp_params(key, TABLE1_A)))
+    rng = np.random.default_rng(0)
+
+    for frac in (0.001, 0.01, 0.1, 1.0):
+        store = WeightStore(":memory:")
+        store.register_model("m", "mlp")
+        server = LicenseServer(store)
+        v1 = server.publish("m", params)
+        client = EdgeClient("m", {k: np.zeros_like(np.asarray(v))
+                                  for k, v in params.items()})
+        first = client.request_update(server)
+
+        new = {k: np.array(v, copy=True) for k, v in params.items()}
+        for k in new:
+            flat = new[k].reshape(-1)
+            n = max(1, int(frac * flat.size))
+            idx = rng.choice(flat.size, n, replace=False)
+            flat[idx] += 0.5
+        server.publish("m", new, parent=v1)
+
+        t0 = time.perf_counter()
+        packet = client.request_update(server)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "name": f"update/delta_frac_{frac}",
+            "us_per_call": dt * 1e6,
+            "delta_bytes": packet.nbytes,
+            "full_bytes": first.nbytes,
+            "savings_x": round(first.nbytes / max(packet.nbytes, 1), 1),
+            "entries": packet.num_entries,
+        })
+        store.close()
+
+    # skip-intermediate-patches: 5 server versions, one client pull (§4.2)
+    store = WeightStore(":memory:")
+    store.register_model("m", "mlp")
+    server = LicenseServer(store)
+    v = server.publish("m", params)
+    client = EdgeClient("m", {k: np.zeros_like(v) for k, v in params.items()})
+    client.request_update(server)
+    cur = params
+    total_patch_bytes = 0
+    for step in range(5):
+        cur = {k: np.array(v, copy=True) for k, v in cur.items()}
+        flat = cur["layer1/kernel"].reshape(-1)
+        idx = rng.choice(flat.size, 100, replace=False)
+        flat[idx] += 0.1
+        server.publish("m", cur)
+        total_patch_bytes += 100 * 12
+    t0 = time.perf_counter()
+    packet = client.request_update(server)
+    dt = time.perf_counter() - t0
+    rows.append({
+        "name": "update/skip_5_patches",
+        "us_per_call": dt * 1e6,
+        "combined_bytes": packet.nbytes,
+        "entries": packet.num_entries,
+        "note": "<=500 entries since repeated indices collapse",
+    })
+    store.close()
+    return rows

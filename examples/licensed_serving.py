@@ -1,0 +1,48 @@
+"""Licensed batched serving across the architecture zoo.
+
+Instantiates reduced variants of three assigned archs (dense GQA, MoE,
+SSM), builds a tier ladder per model, and serves mixed-tier request
+batches — the paper's dynamic-licensing deployment (Fig. 2) generalized
+from a single edge MLP to modern LM families.
+
+Run:  PYTHONPATH=src python examples/licensed_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.licensing import LicenseTier, license_stats
+from repro.models import init_params
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+    for arch in ("qwen2.5-3b", "deepseek-moe-16b", "mamba2-130m"):
+        cfg = smoke_variant(get_config(arch))
+        params = init_params(key, cfg)
+        tiers = {
+            "free": LicenseTier(name="free", masks={"*": ((0.0, 0.006),)}),
+            "pro": LicenseTier(name="pro", masks={"*": ((0.0, 0.002),)}),
+        }
+        engine = ServingEngine(cfg, params, tiers=tiers)
+        reqs = [
+            Request(prompt=rng.integers(0, cfg.vocab_size, 24, dtype=np.int32),
+                    max_new_tokens=6, license=lic)
+            for lic in ("full", "pro", "free", "free")
+        ]
+        t0 = time.perf_counter()
+        engine.generate(reqs)
+        dt = time.perf_counter() - t0
+        st = license_stats(params, tiers["free"])
+        print(f"{arch:22s} served 4 reqs x 6 tok in {dt:.2f}s; "
+              f"free tier hides {st['masked_frac'] * 100:.1f}% of weights")
+        for r in reqs[:3]:
+            print(f"   [{r.license:4s}] {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

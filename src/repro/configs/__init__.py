@@ -1,0 +1,36 @@
+"""Architecture registry — importing this package registers every config.
+
+Assigned pool (10 archs spanning 6 types), each citing its source, plus
+the paper's own MLP (paper_mlp).  Select with ``--arch <name>``.
+"""
+from repro.configs.base import ModelConfig, get_config, list_configs, register, smoke_variant
+
+# registration side effects
+from repro.configs import (  # noqa: F401
+    deepseek_moe_16b,
+    deepseek_v2_lite_16b,
+    granite_34b,
+    internvl2_26b,
+    mamba2_130m,
+    minitron_8b,
+    musicgen_large,
+    nemotron_4_15b,
+    qwen2_5_3b,
+    recurrentgemma_2b,
+)
+
+ASSIGNED_ARCHS = (
+    "mamba2-130m",
+    "qwen2.5-3b",
+    "musicgen-large",
+    "recurrentgemma-2b",
+    "deepseek-v2-lite-16b",
+    "nemotron-4-15b",
+    "internvl2-26b",
+    "minitron-8b",
+    "deepseek-moe-16b",
+    "granite-34b",
+)
+
+__all__ = ["ModelConfig", "get_config", "list_configs", "register",
+           "smoke_variant", "ASSIGNED_ARCHS"]

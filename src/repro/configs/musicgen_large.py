@@ -1,0 +1,25 @@
+"""musicgen-large — decoder-only transformer over EnCodec tokens
+[arXiv:2306.05284].
+
+48L d_model=2048 32H (kv=32, MHA) d_ff=8192 vocab=2048 (codec codebook).
+LayerNorm (GPT-style), learned-positional in the original; we use RoPE as
+the positional scheme for the backbone (noted in DESIGN.md) and omit the
+text-conditioning cross-attention (frontend stub per assignment carve-out).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="musicgen-large",
+    arch_type="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    mlp_type="swiglu",
+    norm_layernorm=True,
+    frontend="audio",
+    source="arXiv:2306.05284 (MusicGen)",
+))

@@ -1,0 +1,35 @@
+"""Core: the paper's contribution — versioned weight storage, delta updates,
+compression, and dynamic licensing — as composable JAX-side modules."""
+from repro.core.compression import (
+    CompressionStats,
+    QuantizedTensor,
+    SharedTensor,
+    compress_pipeline,
+    dequantize,
+    magnitude_prune,
+    prune_params,
+    quantize_int8,
+    unshare,
+    weight_share,
+)
+from repro.core.delta import apply_packet, encode_delta, shard_delta
+from repro.core.licensing import (
+    FULL_TIER,
+    LicenseTier,
+    apply_license,
+    calibrate_license,
+    license_stats,
+    make_static_tiers,
+)
+from repro.core.protocol import EdgeClient, LicenseServer
+from repro.core.pytree_io import flatten_params, unflatten_like
+from repro.core.weightstore import LayerDelta, UpdatePacket, WeightStore
+
+__all__ = [
+    "CompressionStats", "QuantizedTensor", "SharedTensor", "compress_pipeline",
+    "dequantize", "magnitude_prune", "prune_params", "quantize_int8", "unshare",
+    "weight_share", "apply_packet", "encode_delta", "shard_delta", "FULL_TIER",
+    "LicenseTier", "apply_license", "calibrate_license", "license_stats",
+    "make_static_tiers", "EdgeClient", "LicenseServer", "flatten_params",
+    "unflatten_like", "LayerDelta", "UpdatePacket", "WeightStore",
+]

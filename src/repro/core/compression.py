@@ -1,0 +1,185 @@
+"""Model-compression pipeline (paper §3.2, Fig. 3).
+
+prune -> (fine-tune, done by the caller's training loop) -> quantize ->
+weight-share.  All steps are pure JAX and jit-able; the pipeline returns
+both compressed representations and accounting stats for the paper's
+Table 1 reproduction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Parameters whose magnitude encodes recurrence *dynamics* rather than a
+# linear map.  Pruning/masking these can make an SSM non-contractive
+# (DESIGN.md §4) — every compression / licensing entry point excludes them.
+DYNAMICS_PARAM_KEYWORDS = ("A_log", "dt_bias", "a_param", "norm", "scale", "bias_embed")
+
+
+def is_dynamics_param(name: str) -> bool:
+    return any(k in name for k in DYNAMICS_PARAM_KEYWORDS)
+
+
+# ------------------------------------------------------------------- pruning
+def magnitude_threshold(w: jnp.ndarray, sparsity: float) -> jnp.ndarray:
+    """|w| value below which ``sparsity`` fraction of entries fall."""
+    return jnp.quantile(jnp.abs(w.reshape(-1)).astype(jnp.float32), sparsity)
+
+
+def magnitude_prune(w: jnp.ndarray, sparsity: float) -> jnp.ndarray:
+    """Magnitude pruning [Han et al. 2016]: zero the smallest-|w| fraction."""
+    thr = magnitude_threshold(w, sparsity)
+    return jnp.where(jnp.abs(w) >= thr, w, jnp.zeros_like(w))
+
+
+def prune_params(params: Any, sparsity: float, *, exclude: Callable[[str], bool] = is_dynamics_param) -> Any:
+    """Per-layer magnitude pruning over a pytree, skipping dynamics params."""
+    from repro.core.pytree_io import flatten_params, unflatten_like
+
+    flat = flatten_params(params)
+    out = {}
+    for name, arr in flat.items():
+        if exclude(name) or arr.ndim < 2:
+            out[name] = arr
+        else:
+            out[name] = np.asarray(magnitude_prune(jnp.asarray(arr), sparsity))
+    return unflatten_like(params, out)
+
+
+# -------------------------------------------------------------- quantization
+@dataclass(frozen=True)
+class QuantizedTensor:
+    """Symmetric int8 quantization with per-channel (axis 0 of the flattened
+    2D view) scales — §3.2 "converting weights from 64-bit to 8-bit"."""
+
+    codes: jnp.ndarray      # int8, same shape as the original
+    scale: jnp.ndarray      # f32, broadcastable to codes
+    shape: Tuple[int, ...]
+    dtype: Any
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) + int(np.prod(self.scale.shape)) * 4
+
+
+def quantize_int8(w: jnp.ndarray, *, per_channel: bool = True) -> QuantizedTensor:
+    w32 = w.astype(jnp.float32)
+    if per_channel and w.ndim >= 2:
+        axes = tuple(range(1, w.ndim))
+        amax = jnp.max(jnp.abs(w32), axis=axes, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w32))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    codes = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(codes=codes, scale=scale, shape=tuple(w.shape), dtype=w.dtype)
+
+
+def dequantize(q: QuantizedTensor) -> jnp.ndarray:
+    return (q.codes.astype(jnp.float32) * q.scale).astype(q.dtype)
+
+
+# ------------------------------------------------------------ weight sharing
+@dataclass(frozen=True)
+class SharedTensor:
+    """Weight sharing [Deep Compression]: k-means codebook + per-entry index."""
+
+    codebook: jnp.ndarray   # (k,) f32
+    indices: jnp.ndarray    # uint8, same shape as original
+    shape: Tuple[int, ...]
+    dtype: Any
+
+    @property
+    def nbytes(self) -> int:
+        # index matrix at ceil(log2 k) bits + codebook
+        k = int(self.codebook.shape[0])
+        bits = max(1, int(np.ceil(np.log2(max(k, 2)))))
+        return int(np.prod(self.shape)) * bits // 8 + k * 4
+
+
+def kmeans_1d(x: jnp.ndarray, k: int, iters: int = 25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """1-D k-means via Lloyd iterations in ``lax.fori_loop`` (jit-able).
+
+    Initialization is linear over [min, max] (Deep Compression's recommended
+    linear init).  Empty clusters keep their previous centroid.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    lo, hi = jnp.min(flat), jnp.max(flat)
+    init = lo + (hi - lo) * (jnp.arange(k, dtype=jnp.float32) + 0.5) / k
+
+    def assign(centroids):
+        return jnp.argmin(jnp.abs(flat[:, None] - centroids[None, :]), axis=1)
+
+    def body(_, centroids):
+        a = assign(centroids)
+        sums = jax.ops.segment_sum(flat, a, num_segments=k)
+        counts = jax.ops.segment_sum(jnp.ones_like(flat), a, num_segments=k)
+        return jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), centroids)
+
+    centroids = jax.lax.fori_loop(0, iters, body, init)
+    return centroids, assign(centroids).astype(jnp.uint8)
+
+
+def weight_share(w: jnp.ndarray, k: int = 32, iters: int = 25) -> SharedTensor:
+    codebook, idx = kmeans_1d(w, k, iters)
+    return SharedTensor(codebook=codebook, indices=idx.reshape(w.shape),
+                        shape=tuple(w.shape), dtype=w.dtype)
+
+
+def unshare(s: SharedTensor) -> jnp.ndarray:
+    return s.codebook[s.indices.astype(jnp.int32)].astype(s.dtype)
+
+
+# ---------------------------------------------------------------- pipeline
+@dataclass
+class CompressionStats:
+    full_bytes: int
+    pruned_nonzero: int
+    pruned_bytes: int          # sparse: 8B index + value bytes per nonzero
+    quantized_bytes: int       # sparse int8: 8B index + 1B code (+ scales)
+    shared_bytes: int          # sparse shared: index + log2(k)-bit code
+    sparsity: float
+
+
+def compress_pipeline(
+    params: Any,
+    *,
+    sparsity: float = 0.8,
+    codebook_size: Optional[int] = 32,
+    value_bytes_full: int = 8,   # the paper's pre-quant baseline is 64-bit
+) -> Tuple[Any, Dict[str, QuantizedTensor], CompressionStats]:
+    """Fig. 3 pipeline: prune -> quantize -> share.  Returns the pruned
+    (dense, zeros in place) params for fine-tuning, the quantized per-layer
+    tensors for storage/serving, and Table-1-style accounting."""
+    from repro.core.pytree_io import flatten_params
+
+    pruned = prune_params(params, sparsity)
+    flat = flatten_params(pruned)
+
+    total = int(sum(a.size for a in flat.values()))
+    nonzero = int(sum(int(np.count_nonzero(a)) for a in flat.values()))
+
+    quantized: Dict[str, QuantizedTensor] = {}
+    shared_bytes = 0
+    for name, arr in flat.items():
+        q = quantize_int8(jnp.asarray(arr))
+        quantized[name] = q
+        if codebook_size:
+            nz = int(np.count_nonzero(arr))
+            bits = max(1, int(np.ceil(np.log2(max(codebook_size, 2)))))
+            shared_bytes += nz * (8 + bits / 8) + codebook_size * 4
+        else:
+            shared_bytes += int(np.count_nonzero(arr)) * 9
+
+    stats = CompressionStats(
+        full_bytes=total * value_bytes_full,
+        pruned_nonzero=nonzero,
+        pruned_bytes=nonzero * (8 + value_bytes_full),
+        quantized_bytes=nonzero * 9 + sum(int(np.prod(q.scale.shape)) * 4 for q in quantized.values()),
+        shared_bytes=int(shared_bytes),
+        sparsity=1.0 - nonzero / max(total, 1),
+    )
+    return pruned, quantized, stats

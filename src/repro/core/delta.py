@@ -1,0 +1,119 @@
+"""Sparse weight-delta encode/apply (the low-latency-update hot path, §4.3).
+
+The wire format is ``LayerDelta`` (indices + values / chunk pages) from
+``weightstore``.  On-device application is a flat scatter; the jit path uses
+``delta_apply`` from ``repro.kernels.ops`` (Pallas on TPU, jnp fallback).
+
+Shard-aware distribution (beyond paper, DESIGN.md §2): ``shard_delta``
+splits a delta by a host's flat-index range so each data-parallel host
+fetches only the bytes its shard needs — turning the paper's single-device
+update into a multi-host collective-free update.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pytree_io import flatten_params, unflatten_like
+from repro.core.weightstore import LayerDelta, UpdatePacket
+
+
+def encode_delta(old_params: Any, new_params: Any) -> UpdatePacket:
+    """Client-side / test helper: sparse diff of two pytrees."""
+    old_flat = flatten_params(old_params)
+    new_flat = flatten_params(new_params)
+    packet = UpdatePacket(model="local", from_version=None, to_version=-1)
+    for name, new in new_flat.items():
+        old = old_flat[name]
+        a = np.asarray(new, dtype=np.float32).reshape(-1)
+        b = np.asarray(old, dtype=np.float32).reshape(-1)
+        idx = np.nonzero(a != b)[0]
+        if idx.size == 0:
+            continue
+        packet.deltas.append(
+            LayerDelta(layer=name, shape=tuple(np.shape(new)), dtype=str(np.asarray(new).dtype),
+                       indices=idx.astype(np.int64), values=a[idx])
+        )
+    return packet
+
+
+def delta_to_dense(delta: LayerDelta) -> np.ndarray:
+    """Materialize a LayerDelta into a dense update-or-zero buffer + mask."""
+    size = int(np.prod(delta.shape)) if delta.shape else 1
+    buf = np.zeros(size, dtype=np.float32)
+    if delta.chunks is not None:
+        import zlib
+
+        ce = delta.chunk_elems
+        for ci, payload in zip(delta.indices, delta.chunks):
+            try:
+                raw = zlib.decompress(payload)
+            except zlib.error:
+                raw = payload
+            page = np.frombuffer(raw, dtype=np.float32)
+            buf[int(ci) * ce : int(ci) * ce + page.size] = page
+    else:
+        buf[delta.indices] = delta.values
+    return buf.reshape(delta.shape)
+
+
+def apply_packet(params: Any, packet: UpdatePacket, *, use_kernel: bool = True) -> Any:
+    """Apply an update packet to local params (edge-device side, §3.1.2)."""
+    flat = flatten_params(params)
+    out = dict(flat)
+    for d in packet.deltas:
+        if d.layer not in flat:
+            raise KeyError(f"delta for unknown layer {d.layer!r}")
+        base = jnp.asarray(flat[d.layer]).reshape(-1)
+        if d.chunks is not None:
+            dense = jnp.asarray(delta_to_dense(d)).reshape(-1)
+            # chunk pages overwrite whole ranges
+            mask = np.zeros(base.shape[0], dtype=bool)
+            ce = d.chunk_elems
+            for ci in d.indices:
+                mask[int(ci) * ce : (int(ci) + 1) * ce] = True
+            new = jnp.where(jnp.asarray(mask), dense.astype(base.dtype), base)
+        elif use_kernel:
+            from repro.kernels import ops
+
+            new = ops.delta_apply(base, jnp.asarray(d.indices), jnp.asarray(d.values, dtype=base.dtype))
+        else:
+            new = base.at[jnp.asarray(d.indices)].set(jnp.asarray(d.values, dtype=base.dtype))
+        out[d.layer] = np.asarray(new).reshape(flat[d.layer].shape)
+    return unflatten_like(params, out)
+
+
+def shard_delta(packet: UpdatePacket, shard_ranges: Dict[str, Tuple[int, int]]) -> UpdatePacket:
+    """Restrict a packet to one host's flat-index range per layer.
+
+    ``shard_ranges[layer] = (start, stop)`` over the flattened tensor;
+    layers absent from the map are shipped whole (replicated params).
+    """
+    out = UpdatePacket(model=packet.model, from_version=packet.from_version,
+                       to_version=packet.to_version)
+    for d in packet.deltas:
+        rng = shard_ranges.get(d.layer)
+        if rng is None:
+            out.deltas.append(d)
+            continue
+        start, stop = rng
+        if d.chunks is not None:
+            ce = d.chunk_elems
+            keep = [(i, c) for i, c in zip(d.indices, d.chunks)
+                    if int(i) * ce < stop and (int(i) + 1) * ce > start]
+            if not keep:
+                continue
+            out.deltas.append(LayerDelta(
+                layer=d.layer, shape=d.shape, dtype=d.dtype,
+                indices=np.array([i for i, _ in keep], dtype=np.int64),
+                chunks=[c for _, c in keep], chunk_elems=ce))
+        else:
+            sel = (d.indices >= start) & (d.indices < stop)
+            if not sel.any():
+                continue
+            out.deltas.append(LayerDelta(
+                layer=d.layer, shape=d.shape, dtype=d.dtype,
+                indices=d.indices[sel], values=d.values[sel]))
+    return out

@@ -1,0 +1,135 @@
+"""Client/server update + licensing protocol (paper §3.1, Fig. 2).
+
+The paper's deployment plane is Django + Hasura/GraphQL over Postgres; we
+model the same message flow in-process (DESIGN.md §2) and account for the
+measurable quantity — bytes on the wire — exactly.
+
+Message flow (paper §3.1.2):
+  1. edge device sends (model, current_version, license) to the server;
+  2. server answers with an UpdatePacket of weights created/updated since
+     that version (skipping intermediate patches, §4.2), with the tier's
+     license mask applied to the *shipped values* so unlicensed weights
+     never leave the server (the paper's access-control-in-the-DB);
+  3. device applies the sparse delta locally (Pallas ``delta_apply``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import delta as delta_lib
+from repro.core.licensing import FULL_TIER, LicenseTier, mask_weight
+from repro.core.pytree_io import flatten_params
+from repro.core.weightstore import LayerDelta, UpdatePacket, WeightStore
+
+
+@dataclass
+class UpdateLog:
+    model: str
+    from_version: Optional[int]
+    to_version: int
+    tier: str
+    bytes_sent: int
+    entries: int
+
+
+class LicenseServer:
+    """Cloud side: wraps the WeightStore + Accuracy-table tiers."""
+
+    def __init__(self, store: WeightStore):
+        self.store = store
+        self.log: List[UpdateLog] = []
+
+    # -- publishing -------------------------------------------------------
+    def publish(self, model: str, params: Any, **commit_kw) -> int:
+        return self.store.commit(model, params, **commit_kw)
+
+    def publish_tier(self, model: str, tier: LicenseTier) -> None:
+        version = self.store.production_version(model)
+        self.store.register_tier(
+            model, version, tier.name, tier.accuracy or 0.0, tier.as_json()
+        )
+
+    def tier(self, model: str, name: str) -> LicenseTier:
+        if name == "full":
+            return FULL_TIER
+        acc, masks = self.store.get_tier(model, name)
+        return LicenseTier.from_json(name, masks, acc)
+
+    # -- update requests ---------------------------------------------------
+    def handle_update(
+        self, model: str, client_version: Optional[int], license_name: str = "full"
+    ) -> UpdatePacket:
+        """§3.1.2: respond with only created/updated weights since the
+        client's version, masked per the client's license tier."""
+        tier = self.tier(model, license_name)
+        packet = self.store.delta_since(model, client_version)
+        packet = _mask_packet(packet, tier)
+        self.log.append(UpdateLog(
+            model=model, from_version=client_version, to_version=packet.to_version,
+            tier=license_name, bytes_sent=packet.nbytes, entries=packet.num_entries,
+        ))
+        return packet
+
+
+def _mask_packet(packet: UpdatePacket, tier: LicenseTier) -> UpdatePacket:
+    """Apply license masks to the values being shipped (server-side access
+    control: free-tier clients never receive masked weights)."""
+    if not tier.masks:
+        return packet
+    import jax.numpy as jnp
+
+    from repro.core.compression import is_dynamics_param
+
+    out = UpdatePacket(model=packet.model, from_version=packet.from_version,
+                       to_version=packet.to_version)
+    for d in packet.deltas:
+        ivs = tier.intervals_for(d.layer)
+        if not ivs or is_dynamics_param(d.layer) or len(d.shape) < 2 or d.chunks is not None:
+            if d.chunks is not None and ivs and not is_dynamics_param(d.layer) and len(d.shape) >= 2:
+                # chunk mode: mask inside each page
+                masked_chunks = []
+                import zlib
+                for payload in d.chunks:
+                    try:
+                        raw = zlib.decompress(payload)
+                        compressed = True
+                    except zlib.error:
+                        raw, compressed = payload, False
+                    page = np.frombuffer(raw, dtype=np.float32).copy()
+                    page = np.asarray(mask_weight(jnp.asarray(page), ivs))
+                    blob = page.tobytes()
+                    masked_chunks.append(zlib.compress(blob, 1) if compressed else blob)
+                out.deltas.append(LayerDelta(layer=d.layer, shape=d.shape, dtype=d.dtype,
+                                             indices=d.indices, chunks=masked_chunks,
+                                             chunk_elems=d.chunk_elems))
+            else:
+                out.deltas.append(d)
+            continue
+        vals = np.asarray(mask_weight(jnp.asarray(d.values), ivs))
+        out.deltas.append(LayerDelta(layer=d.layer, shape=d.shape, dtype=d.dtype,
+                                     indices=d.indices, values=vals))
+    return out
+
+
+class EdgeClient:
+    """Edge-device side: holds local params + version, pulls delta updates."""
+
+    def __init__(self, model: str, params_template: Any, license_name: str = "full"):
+        self.model = model
+        self.params = params_template
+        self.version: Optional[int] = None
+        self.license_name = license_name
+        self.bytes_downloaded = 0
+        self.updates = 0
+
+    def request_update(self, server: LicenseServer) -> UpdatePacket:
+        packet = server.handle_update(self.model, self.version, self.license_name)
+        if packet.to_version != self.version:
+            self.params = delta_lib.apply_packet(self.params, packet)
+            self.version = packet.to_version
+            self.bytes_downloaded += packet.nbytes
+            self.updates += 1
+        return packet

@@ -1,0 +1,52 @@
+"""Pytree <-> flat {layer_name: ndarray} conversion at the WeightStore boundary.
+
+The paper's database schema (Fig. 4) is keyed by *layer name*; JAX params are
+arbitrary pytrees.  We canonicalize with '/'-joined key paths so any model's
+params round-trip through the store.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        elif isinstance(p, jax.tree_util.FlattenedIndexKey):
+            parts.append(str(p.key))
+        else:  # pragma: no cover - future key types
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def flatten_params(params: Any) -> Dict[str, np.ndarray]:
+    """Pytree -> ordered {path: np.ndarray}."""
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    return {_path_str(path): np.asarray(leaf) for path, leaf in leaves}
+
+
+def unflatten_like(template: Any, flat: Dict[str, np.ndarray]) -> Any:
+    """Rebuild a pytree with `template`'s structure from a flat dict."""
+    paths_and_leaves = jax.tree_util.tree_leaves_with_path(template)
+    treedef = jax.tree_util.tree_structure(template)
+    new_leaves = []
+    for path, leaf in paths_and_leaves:
+        key = _path_str(path)
+        if key not in flat:
+            raise KeyError(f"missing layer {key!r} in store payload")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {key!r}: store {arr.shape} vs template {np.shape(leaf)}"
+            )
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

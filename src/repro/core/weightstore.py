@@ -1,0 +1,537 @@
+"""Versioned weight database — the paper's Fig. 4 schema on sqlite3.
+
+Faithful reproduction of the paper's storage design:
+
+* Tables ``model``, ``layer``, ``weight``, ``version``, ``accuracy``
+  (§3.3, Fig. 4).  ``weight`` stores (layer_fk, version_fk, flat_index,
+  value) — row per *non-zero changed* weight, so successive versions share
+  unchanged entries (§3.1.2, §3.4).
+* ``version.is_production`` mirrors the paper's Boolean status field; only
+  one production version per model at a time.
+* ``delta_since`` answers the client update query of §3.1.2 / §4.2: all
+  weights created/updated after the client's version, across *skipped*
+  intermediate patches, in one query.
+* ``accuracy`` stores license tiers: per-layer magnitude-interval masks with
+  the measured accuracy (§3.5) — static licensing is a lookup here.
+
+Scale adaptation (DESIGN.md §2): row-per-weight is faithful but is O(1e10)
+rows at 34B params.  Above ``row_limit`` parameters per layer the store
+transparently switches that layer to *chunk mode*: the flattened tensor is
+split into fixed-size pages, each page content-hashed; a new version stores
+only pages whose hash changed.  Delta/checkout/rollback semantics are
+identical — the unit of change is a page instead of a scalar.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import sqlite3
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.pytree_io import flatten_params, unflatten_like
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS model (
+    id INTEGER PRIMARY KEY,
+    name TEXT UNIQUE NOT NULL,
+    arch TEXT NOT NULL,
+    created_at REAL NOT NULL
+);
+CREATE TABLE IF NOT EXISTS layer (
+    id INTEGER PRIMARY KEY,
+    model_fk INTEGER NOT NULL REFERENCES model(id),
+    name TEXT NOT NULL,
+    layer_index INTEGER NOT NULL,
+    shape TEXT NOT NULL,
+    dtype TEXT NOT NULL,
+    storage TEXT NOT NULL DEFAULT 'rows',   -- 'rows' | 'chunks'
+    UNIQUE(model_fk, name)
+);
+CREATE TABLE IF NOT EXISTS version (
+    id INTEGER PRIMARY KEY,
+    model_fk INTEGER NOT NULL REFERENCES model(id),
+    parent_fk INTEGER REFERENCES version(id),
+    tag TEXT,
+    message TEXT,
+    is_major INTEGER NOT NULL DEFAULT 0,
+    is_production INTEGER NOT NULL DEFAULT 0,
+    created_at REAL NOT NULL
+);
+CREATE TABLE IF NOT EXISTS weight (
+    id INTEGER PRIMARY KEY,
+    layer_fk INTEGER NOT NULL REFERENCES layer(id),
+    version_fk INTEGER NOT NULL REFERENCES version(id),
+    flat_index INTEGER NOT NULL,
+    value REAL NOT NULL,
+    created_at REAL NOT NULL
+);
+CREATE INDEX IF NOT EXISTS weight_layer_version ON weight(layer_fk, version_fk);
+CREATE TABLE IF NOT EXISTS weight_chunk (
+    id INTEGER PRIMARY KEY,
+    layer_fk INTEGER NOT NULL REFERENCES layer(id),
+    version_fk INTEGER NOT NULL REFERENCES version(id),
+    chunk_index INTEGER NOT NULL,
+    hash TEXT NOT NULL,
+    data BLOB NOT NULL,
+    nbytes INTEGER NOT NULL,
+    created_at REAL NOT NULL
+);
+CREATE INDEX IF NOT EXISTS chunk_layer_version ON weight_chunk(layer_fk, version_fk);
+CREATE TABLE IF NOT EXISTS accuracy (
+    id INTEGER PRIMARY KEY,
+    model_fk INTEGER NOT NULL REFERENCES model(id),
+    version_fk INTEGER NOT NULL REFERENCES version(id),
+    tier_name TEXT NOT NULL,
+    accuracy REAL NOT NULL,
+    masks TEXT NOT NULL,           -- JSON: {layer_pattern: [[lo, hi], ...]}
+    created_at REAL NOT NULL,
+    UNIQUE(model_fk, tier_name)
+);
+"""
+
+
+@dataclass
+class LayerDelta:
+    """Sparse update for one layer: values at flat indices (or whole chunks)."""
+
+    layer: str
+    shape: Tuple[int, ...]
+    dtype: str
+    indices: np.ndarray          # int64 flat indices (rows mode) or chunk ids
+    values: Optional[np.ndarray] = None   # rows mode: scalar per index
+    chunks: Optional[List[bytes]] = None  # chunks mode: raw page payloads
+    chunk_elems: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        if self.chunks is not None:
+            return int(sum(len(c) for c in self.chunks) + self.indices.nbytes)
+        return int(self.indices.nbytes + self.values.nbytes)
+
+
+@dataclass
+class UpdatePacket:
+    """Server -> client payload for one update request (§3.1.2)."""
+
+    model: str
+    from_version: Optional[int]
+    to_version: int
+    deltas: List[LayerDelta] = field(default_factory=list)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(d.nbytes for d in self.deltas)
+
+    @property
+    def num_entries(self) -> int:
+        return int(sum(len(d.indices) for d in self.deltas))
+
+
+class WeightStore:
+    """sqlite3-backed versioned weight store (paper Fig. 4)."""
+
+    def __init__(
+        self,
+        path: str = ":memory:",
+        *,
+        row_limit: int = 262_144,
+        chunk_elems: int = 65_536,
+        compress_chunks: bool = True,
+    ):
+        self.conn = sqlite3.connect(path)
+        self.conn.executescript(_SCHEMA)
+        self.path = path
+        self.row_limit = int(row_limit)
+        self.chunk_elems = int(chunk_elems)
+        self.compress_chunks = compress_chunks
+
+    # ------------------------------------------------------------------ model
+    def register_model(self, name: str, arch: str = "generic") -> int:
+        cur = self.conn.execute(
+            "INSERT OR IGNORE INTO model(name, arch, created_at) VALUES (?,?,?)",
+            (name, arch, time.time()),
+        )
+        self.conn.commit()
+        if cur.lastrowid:
+            return cur.lastrowid
+        return self._model_id(name)
+
+    def _model_id(self, name: str) -> int:
+        row = self.conn.execute("SELECT id FROM model WHERE name=?", (name,)).fetchone()
+        if row is None:
+            raise KeyError(f"unknown model {name!r}")
+        return row[0]
+
+    def _layer_id(self, model_id: int, name: str) -> Tuple[int, Tuple[int, ...], str, str]:
+        row = self.conn.execute(
+            "SELECT id, shape, dtype, storage FROM layer WHERE model_fk=? AND name=?",
+            (model_id, name),
+        ).fetchone()
+        if row is None:
+            raise KeyError(f"unknown layer {name!r}")
+        return row[0], tuple(json.loads(row[1])), row[2], row[3]
+
+    def _ensure_layers(self, model_id: int, flat: Dict[str, np.ndarray]) -> None:
+        for i, (name, arr) in enumerate(flat.items()):
+            storage = "chunks" if arr.size > self.row_limit else "rows"
+            self.conn.execute(
+                "INSERT OR IGNORE INTO layer(model_fk, name, layer_index, shape, dtype, storage)"
+                " VALUES (?,?,?,?,?,?)",
+                (model_id, name, i, json.dumps(list(arr.shape)), str(arr.dtype), storage),
+            )
+
+    # ---------------------------------------------------------------- commits
+    def commit(
+        self,
+        model: str,
+        params,
+        *,
+        parent: Optional[int] = None,
+        tag: Optional[str] = None,
+        message: str = "",
+        major: bool = False,
+        set_production: bool = True,
+        store_zeros: bool = False,
+    ) -> int:
+        """Store a new version.  Only weights that changed vs ``parent`` get
+        new rows (paper §3.1.2); pruned zeros are skipped unless
+        ``store_zeros`` (paper §3.3: "only the nonzero weights")."""
+        model_id = self._model_id(model) if self._exists(model) else self.register_model(model)
+        flat = flatten_params(params)
+        self._ensure_layers(model_id, flat)
+
+        if parent is None:
+            parent = self.production_version(model, missing_ok=True)
+        parent_flat = (
+            self._reconstruct(model_id, parent) if parent is not None and not major else {}
+        )
+
+        now = time.time()
+        cur = self.conn.execute(
+            "INSERT INTO version(model_fk, parent_fk, tag, message, is_major, created_at)"
+            " VALUES (?,?,?,?,?,?)",
+            (model_id, None if major else parent, tag, message, int(major), now),
+        )
+        version_id = cur.lastrowid
+
+        for name, arr in flat.items():
+            layer_id, _, _, storage = self._layer_id(model_id, name)
+            flat_arr = np.asarray(arr, dtype=np.float32).reshape(-1)
+            old = parent_flat.get(name)
+            if storage == "rows":
+                self._commit_rows(layer_id, version_id, flat_arr, old, store_zeros, now)
+            else:
+                self._commit_chunks(layer_id, version_id, flat_arr, old, now)
+
+        if set_production:
+            self._set_production(model_id, version_id)
+        self.conn.commit()
+        return version_id
+
+    def _commit_rows(self, layer_id, version_id, flat_arr, old, store_zeros, now) -> None:
+        if old is None:
+            changed = np.arange(flat_arr.size, dtype=np.int64)
+        else:
+            changed = np.nonzero(flat_arr != old.reshape(-1))[0]
+        if not store_zeros:
+            changed = changed[flat_arr[changed] != 0.0]
+            # a weight that *became* zero must still be recorded as a change
+            if old is not None:
+                zeroed = np.nonzero((flat_arr == 0.0) & (old.reshape(-1) != 0.0))[0]
+                changed = np.union1d(changed, zeroed)
+        rows = [
+            (layer_id, version_id, int(i), float(flat_arr[i]), now) for i in changed
+        ]
+        self.conn.executemany(
+            "INSERT INTO weight(layer_fk, version_fk, flat_index, value, created_at)"
+            " VALUES (?,?,?,?,?)",
+            rows,
+        )
+
+    def _commit_chunks(self, layer_id, version_id, flat_arr, old, now) -> None:
+        ce = self.chunk_elems
+        n_chunks = -(-flat_arr.size // ce)
+        old_flat = None if old is None else old.reshape(-1)
+        rows = []
+        for ci in range(n_chunks):
+            page = flat_arr[ci * ce : (ci + 1) * ce]
+            if old_flat is not None:
+                old_page = old_flat[ci * ce : (ci + 1) * ce]
+                if page.size == old_page.size and np.array_equal(page, old_page):
+                    continue
+            payload = page.tobytes()
+            if self.compress_chunks:
+                payload = zlib.compress(payload, level=1)
+            h = hashlib.sha1(payload).hexdigest()
+            rows.append((layer_id, version_id, ci, h, payload, len(payload), now))
+        self.conn.executemany(
+            "INSERT INTO weight_chunk(layer_fk, version_fk, chunk_index, hash, data, nbytes,"
+            " created_at) VALUES (?,?,?,?,?,?,?)",
+            rows,
+        )
+
+    def _exists(self, model: str) -> bool:
+        return (
+            self.conn.execute("SELECT 1 FROM model WHERE name=?", (model,)).fetchone()
+            is not None
+        )
+
+    # --------------------------------------------------------------- versions
+    def history(self, model: str) -> List[dict]:
+        model_id = self._model_id(model)
+        rows = self.conn.execute(
+            "SELECT id, parent_fk, tag, message, is_major, is_production, created_at"
+            " FROM version WHERE model_fk=? ORDER BY id",
+            (model_id,),
+        ).fetchall()
+        keys = ("id", "parent", "tag", "message", "is_major", "is_production", "created_at")
+        return [dict(zip(keys, r)) for r in rows]
+
+    def production_version(self, model: str, missing_ok: bool = False) -> Optional[int]:
+        model_id = self._model_id(model)
+        row = self.conn.execute(
+            "SELECT id FROM version WHERE model_fk=? AND is_production=1", (model_id,)
+        ).fetchone()
+        if row is None:
+            if missing_ok:
+                return None
+            raise KeyError(f"no production version for {model!r}")
+        return row[0]
+
+    def _set_production(self, model_id: int, version_id: int) -> None:
+        self.conn.execute(
+            "UPDATE version SET is_production=0 WHERE model_fk=?", (model_id,)
+        )
+        self.conn.execute(
+            "UPDATE version SET is_production=1 WHERE id=?", (version_id,)
+        )
+
+    def rollback(self, model: str, version: int) -> None:
+        """Paper §3.4: rollback = repoint the production flag."""
+        model_id = self._model_id(model)
+        row = self.conn.execute(
+            "SELECT 1 FROM version WHERE id=? AND model_fk=?", (version, model_id)
+        ).fetchone()
+        if row is None:
+            raise KeyError(f"version {version} does not belong to model {model!r}")
+        self._set_production(model_id, version)
+        self.conn.commit()
+
+    def _ancestry(self, version_id: int) -> List[int]:
+        """Root-first chain of versions ending at ``version_id``."""
+        chain = []
+        cur: Optional[int] = version_id
+        while cur is not None:
+            chain.append(cur)
+            row = self.conn.execute(
+                "SELECT parent_fk, is_major FROM version WHERE id=?", (cur,)
+            ).fetchone()
+            if row is None:
+                raise KeyError(f"unknown version {cur}")
+            parent, is_major = row
+            cur = None if is_major else parent
+        return chain[::-1]
+
+    # --------------------------------------------------------------- checkout
+    def checkout(self, model: str, version: Optional[int] = None, template=None):
+        """Reconstruct full params at ``version`` (default: production).
+
+        Paper §3.3: build a zeroed model layer-by-layer, then place stored
+        values at their flattened indices; we replay the ancestor chain so
+        minor versions inherit unchanged weights.
+        """
+        model_id = self._model_id(model)
+        if version is None:
+            version = self.production_version(model)
+        flat = self._reconstruct(model_id, version)
+        if template is not None:
+            return unflatten_like(template, flat)
+        return flat
+
+    def _reconstruct(self, model_id: int, version_id: int) -> Dict[str, np.ndarray]:
+        chain = self._ancestry(version_id)
+        layers = self.conn.execute(
+            "SELECT id, name, shape, dtype, storage FROM layer WHERE model_fk=?"
+            " ORDER BY layer_index",
+            (model_id,),
+        ).fetchall()
+        out: Dict[str, np.ndarray] = {}
+        for layer_id, name, shape, dtype, storage in layers:
+            shape = tuple(json.loads(shape))
+            size = int(np.prod(shape)) if shape else 1
+            buf = np.zeros(size, dtype=np.float32)
+            touched = False
+            for v in chain:
+                if storage == "rows":
+                    rows = self.conn.execute(
+                        "SELECT flat_index, value FROM weight WHERE layer_fk=? AND version_fk=?",
+                        (layer_id, v),
+                    ).fetchall()
+                    if rows:
+                        touched = True
+                        idx = np.fromiter((r[0] for r in rows), dtype=np.int64, count=len(rows))
+                        val = np.fromiter((r[1] for r in rows), dtype=np.float32, count=len(rows))
+                        buf[idx] = val
+                else:
+                    rows = self.conn.execute(
+                        "SELECT chunk_index, data FROM weight_chunk"
+                        " WHERE layer_fk=? AND version_fk=?",
+                        (layer_id, v),
+                    ).fetchall()
+                    if rows:
+                        touched = True
+                        ce = self.chunk_elems
+                        for ci, payload in rows:
+                            raw = zlib.decompress(payload) if self.compress_chunks else payload
+                            page = np.frombuffer(raw, dtype=np.float32)
+                            buf[ci * ce : ci * ce + page.size] = page
+            if touched or True:  # layers with all-zero weights are legal (fully pruned)
+                out[name] = buf.reshape(shape).astype(dtype, copy=False)
+        return out
+
+    # ------------------------------------------------------------------ delta
+    def delta_since(
+        self, model: str, client_version: Optional[int], target: Optional[int] = None
+    ) -> UpdatePacket:
+        """All weights changed after ``client_version`` up to ``target``
+        (default: production) — one query across skipped patches (§4.2)."""
+        model_id = self._model_id(model)
+        if target is None:
+            target = self.production_version(model)
+        packet = UpdatePacket(model=model, from_version=client_version, to_version=target)
+        if client_version == target:
+            return packet
+
+        chain = self._ancestry(target)
+        if client_version is not None and client_version in chain:
+            new_versions = chain[chain.index(client_version) + 1 :]
+            full = False
+        else:
+            # client is on a different branch (or None): ship a full snapshot
+            new_versions = chain
+            full = True
+
+        layers = self.conn.execute(
+            "SELECT id, name, shape, dtype, storage FROM layer WHERE model_fk=?"
+            " ORDER BY layer_index",
+            (model_id,),
+        ).fetchall()
+        if full:
+            flat = self._reconstruct(model_id, target)
+            for layer_id, name, shape, dtype, storage in layers:
+                arr = flat[name].reshape(-1).astype(np.float32)
+                nz = np.nonzero(arr)[0]
+                packet.deltas.append(
+                    LayerDelta(
+                        layer=name, shape=tuple(json.loads(shape)), dtype=dtype,
+                        indices=nz.astype(np.int64), values=arr[nz],
+                    )
+                )
+            return packet
+
+        qmarks = ",".join("?" * len(new_versions))
+        for layer_id, name, shape, dtype, storage in layers:
+            shape_t = tuple(json.loads(shape))
+            if storage == "rows":
+                rows = self.conn.execute(
+                    f"SELECT flat_index, value, version_fk FROM weight"
+                    f" WHERE layer_fk=? AND version_fk IN ({qmarks}) ORDER BY version_fk",
+                    (layer_id, *new_versions),
+                ).fetchall()
+                if not rows:
+                    continue
+                last: Dict[int, float] = {}
+                for fi, val, _v in rows:  # later versions override earlier
+                    last[fi] = val
+                idx = np.array(sorted(last), dtype=np.int64)
+                val = np.array([last[i] for i in idx], dtype=np.float32)
+                packet.deltas.append(
+                    LayerDelta(layer=name, shape=shape_t, dtype=dtype, indices=idx, values=val)
+                )
+            else:
+                rows = self.conn.execute(
+                    f"SELECT chunk_index, data, version_fk FROM weight_chunk"
+                    f" WHERE layer_fk=? AND version_fk IN ({qmarks}) ORDER BY version_fk",
+                    (layer_id, *new_versions),
+                ).fetchall()
+                if not rows:
+                    continue
+                last_c: Dict[int, bytes] = {}
+                for ci, data, _v in rows:
+                    last_c[ci] = data
+                idx = np.array(sorted(last_c), dtype=np.int64)
+                packet.deltas.append(
+                    LayerDelta(
+                        layer=name, shape=shape_t, dtype=dtype, indices=idx,
+                        chunks=[last_c[int(i)] for i in idx], chunk_elems=self.chunk_elems,
+                    )
+                )
+        return packet
+
+    # ------------------------------------------------------------- accounting
+    def storage_bytes(self, model: str) -> Dict[str, int]:
+        """Bytes attributable to this model's stored weights (paper Table 1).
+
+        ``db_rows``: faithful accounting — each weight row costs
+        index (8B) + value (paper: value storage depends on quantization;
+        sqlite REAL is 8B, matching the paper's 64-bit baseline).
+        ``payload``: pure payload bytes (indices + values / compressed pages).
+        """
+        model_id = self._model_id(model)
+        n_rows, = self.conn.execute(
+            "SELECT COUNT(*) FROM weight w JOIN layer l ON w.layer_fk=l.id"
+            " WHERE l.model_fk=?",
+            (model_id,),
+        ).fetchone()
+        chunk_bytes, = self.conn.execute(
+            "SELECT COALESCE(SUM(c.nbytes),0) FROM weight_chunk c JOIN layer l"
+            " ON c.layer_fk=l.id WHERE l.model_fk=?",
+            (model_id,),
+        ).fetchone()
+        return {
+            "weight_rows": int(n_rows),
+            "row_bytes": int(n_rows) * 16,  # 8B flat_index + 8B REAL value
+            "chunk_bytes": int(chunk_bytes),
+            "payload": int(n_rows) * 16 + int(chunk_bytes),
+        }
+
+    # ------------------------------------------------------------- accuracies
+    def register_tier(
+        self, model: str, version: int, tier_name: str, accuracy: float,
+        masks: Dict[str, Sequence[Tuple[float, float]]],
+    ) -> None:
+        model_id = self._model_id(model)
+        self.conn.execute(
+            "INSERT OR REPLACE INTO accuracy(model_fk, version_fk, tier_name, accuracy,"
+            " masks, created_at) VALUES (?,?,?,?,?,?)",
+            (model_id, version, tier_name, accuracy,
+             json.dumps({k: [list(iv) for iv in v] for k, v in masks.items()}),
+             time.time()),
+        )
+        self.conn.commit()
+
+    def get_tier(self, model: str, tier_name: str) -> Tuple[float, Dict[str, list]]:
+        model_id = self._model_id(model)
+        row = self.conn.execute(
+            "SELECT accuracy, masks FROM accuracy WHERE model_fk=? AND tier_name=?",
+            (model_id, tier_name),
+        ).fetchone()
+        if row is None:
+            raise KeyError(f"no tier {tier_name!r} for model {model!r}")
+        return row[0], {k: [tuple(iv) for iv in v] for k, v in json.loads(row[1]).items()}
+
+    def list_tiers(self, model: str) -> List[Tuple[str, float]]:
+        model_id = self._model_id(model)
+        rows = self.conn.execute(
+            "SELECT tier_name, accuracy FROM accuracy WHERE model_fk=? ORDER BY accuracy DESC",
+            (model_id,),
+        ).fetchall()
+        return [(r[0], r[1]) for r in rows]
+
+    def close(self) -> None:
+        self.conn.close()

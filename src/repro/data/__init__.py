@@ -1,0 +1,3 @@
+from repro.data.pipeline import LMDataConfig, classification_data, lm_batches
+
+__all__ = ["LMDataConfig", "classification_data", "lm_batches"]

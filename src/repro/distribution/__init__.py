@@ -1,0 +1,15 @@
+from repro.distribution.sharding import (
+    batch_spec,
+    cache_shardings,
+    data_shardings,
+    dp_axes,
+    opt_state_shardings,
+    param_spec,
+    params_shardings,
+    replicated,
+)
+
+__all__ = [
+    "batch_spec", "cache_shardings", "data_shardings", "dp_axes",
+    "opt_state_shardings", "param_spec", "params_shardings", "replicated",
+]

@@ -1,0 +1,221 @@
+"""Partition rules: param/activation/cache PartitionSpecs per architecture.
+
+Scheme (baseline):
+  * batch over ("pod", "data")  — pure DP across pods;
+  * tensor parallel over "model" — column-parallel in-projections,
+    row-parallel out-projections, vocab-sharded embed/head;
+  * expert parallel over "model" — MoE expert stacks shard on E;
+  * ZeRO-1: AdamW m/v additionally shard a replicated dim over "data"
+    (needed to fit 34B-param training on 16 GB/chip, see DESIGN.md);
+  * every rule checks divisibility and falls back to replication, so any
+    (arch × mesh) combination lowers.
+
+Long-context decode (batch 1) can't batch-shard: attention caches shard
+their sequence dim over "data" instead (sequence-parallel KV).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# parameter name -> (sharded_dim_from_end, kind)
+_COL = ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w_x", "w_r", "w_i",
+        "w_ukv", "vision_proj", "lm_head")
+_ROW = ("wo", "w_down", "out_proj", "w_out")
+_REPL = ("router", "conv_w", "conv_b", "A_log", "dt_bias", "D_skip", "a_param",
+         "norm", "bias", "ckv_norm", "w_dkv", "bq", "bk", "bv")
+
+
+def _divisible(dim: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and dim % mesh.shape[axis] == 0
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p)))))
+    return "/".join(parts)
+
+
+def param_spec(name: str, shape: Tuple[int, ...], mesh: Mesh,
+               replicate_keywords: Tuple[str, ...] = ()) -> P:
+    """PartitionSpec for one parameter, identified by its tree path."""
+    leaf = name.split("/")[-1]
+    if leaf == "codes" and len(name.split("/")) >= 2:
+        leaf = name.split("/")[-2]       # int8 codes shard like their weight
+    elif leaf == "scale":
+        return P()                       # per-channel scales are tiny
+    if any(k in leaf for k in replicate_keywords):
+        return P()
+    stacked = name.startswith("units/")          # leading unit-scan dim
+    nd = len(shape)
+    base = [None] * nd
+    off = 1 if stacked else 0
+    in_experts = "/experts/" in name
+
+    def set_if(idx: int, axis: str):
+        if 0 <= idx < nd and _divisible(shape[idx], mesh, axis):
+            base[idx] = axis
+
+    if leaf == "tok":                             # embed (V, D): shard vocab
+        set_if(off + 0, "model")
+    elif in_experts:                              # (U, E, D, F): expert parallel
+        set_if(off + 0, "model")
+    elif any(k in leaf for k in _REPL):
+        pass
+    elif leaf in _COL or leaf == "lm_head":
+        set_if(nd - 1, "model")                   # column parallel (output dim)
+    elif leaf in _ROW:
+        set_if(nd - 2, "model")                   # row parallel (input dim)
+    elif nd >= 2:
+        set_if(nd - 1, "model")
+    return P(*base)
+
+
+def opt_spec(pspec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: shard one replicated dim of m/v over 'data'."""
+    base = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, (s, d) in enumerate(zip(base, shape)):
+        if s is None and _divisible(d, mesh, "data") and d >= mesh.shape["data"]:
+            base[i] = "data"
+            break
+    return P(*base)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_spec(batch: int, mesh: Mesh) -> Any:
+    """Spec for a batch dim: full DP if divisible, partial, or replicated."""
+    axes = dp_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch % total == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if batch % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def tp_replicate_keywords(cfg, mesh: Mesh) -> Tuple[str, ...]:
+    """Params to exclude from tensor parallelism for this (arch, mesh).
+
+    Mamba-2's head count (e.g. 24) rarely divides the model axis; splitting
+    d_inner mid-head makes GSPMD reshard every segment of the fused in_proj
+    (measured: collective-dominant).  Such archs train DP-only on the
+    mixer."""
+    out: Tuple[str, ...] = ()
+    if cfg is not None and "ssm" in cfg.layer_pattern:
+        from repro.models.ssm import n_heads
+
+        if n_heads(cfg) % mesh.shape.get("model", 1) != 0:
+            out = out + ("in_proj", "out_proj")
+    # GQA/MQA kv-replication: fewer kv heads than model shards would split
+    # single heads across chips — GSPMD then reshards per attention op
+    # (measured: per-layer collective-permute storms).  Replicating the
+    # small kv projections is the standard TP practice.
+    if (cfg is not None and not cfg.use_mla and 0 < cfg.num_kv_heads
+            and cfg.num_kv_heads < mesh.shape.get("model", 1)):
+        out = out + ("wk", "wv", "bk", "bv")
+    return out
+
+
+def fsdp_spec(pspec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """FSDP: additionally shard the largest replicated dim over 'data'."""
+    base = list(pspec) + [None] * (len(shape) - len(pspec))
+    cand = [i for i, (s, d) in enumerate(zip(base, shape))
+            if s is None and _divisible(d, mesh, "data")]
+    if cand:
+        best = max(cand, key=lambda i: shape[i])
+        base[best] = "data"
+    return P(*base)
+
+
+def params_shardings(params_shapes: Any, mesh: Mesh, cfg=None) -> Any:
+    """Tree of NamedShardings matching a params (or grads) shape tree."""
+    repl = tp_replicate_keywords(cfg, mesh)
+    use_fsdp = bool(getattr(cfg, "fsdp", False))
+
+    def one(path, leaf):
+        spec = param_spec(_leaf_name(path), leaf.shape, mesh, repl)
+        if use_fsdp and len(leaf.shape) >= 2:
+            spec = fsdp_spec(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def opt_state_shardings(opt_shapes: Any, params_shapes: Any, mesh: Mesh) -> Any:
+    """AdamW state: step replicated; m/v like params + ZeRO-1 data shard."""
+    def mv(path, leaf):
+        ps = param_spec(_leaf_name(path), leaf.shape, mesh)
+        return NamedSharding(mesh, opt_spec(ps, leaf.shape, mesh))
+
+    m = jax.tree_util.tree_map_with_path(mv, opt_shapes.m)
+    v = jax.tree_util.tree_map_with_path(mv, opt_shapes.v)
+    step = NamedSharding(mesh, P())
+    return type(opt_shapes)(step=step, m=m, v=v)
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh, batch: int) -> Any:
+    """KV/SSM/LRU caches: batch-shard when possible, else sequence-shard."""
+    bspec = batch_spec(batch, mesh)
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        stacked = name.startswith("units/")
+        off = 1 if stacked else 0
+        base: list = [None] * nd
+        if bspec is not None:
+            base[off] = bspec
+        leafname = name.split("/")[-1]
+        if leafname in ("k", "v", "k_scale", "v_scale"):  # (U, B, cap, KH, hd|1)
+            # sequence-parallel KV: the cache's seq dim shards over "model"
+            # (decode scores stay local per shard; only softmax stats and the
+            # small PV partials cross chips).  Heads stay whole.
+            if _divisible(leaf.shape[off + 1], mesh, "model"):
+                base[off + 1] = "model"
+            elif _divisible(leaf.shape[off + 2], mesh, "model"):
+                base[off + 2] = "model"
+            if bspec is None and _divisible(leaf.shape[off + 1], mesh, "data") \
+                    and base[off + 1] is None:
+                base[off + 1] = "data"
+        elif leafname in ("ckv", "k_rope"):        # (U, B, cap, r)
+            if _divisible(leaf.shape[off + 1], mesh, "model"):
+                base[off + 1] = "model"
+            elif bspec is None and _divisible(leaf.shape[off + 1], mesh, "data"):
+                base[off + 1] = "data"
+        elif leafname == "state" and nd - off == 4:  # ssm (U,B,H,N,P)
+            if _divisible(leaf.shape[off + 1], mesh, "model"):
+                base[off + 1] = "model"
+        elif leafname == "state" and nd - off == 2:  # rglru (U,B,W)
+            if _divisible(leaf.shape[off + 1], mesh, "model"):
+                base[off + 1] = "model"
+        elif leafname == "conv":                   # (U,B,K-1,C)
+            if _divisible(leaf.shape[off + 2], mesh, "model"):
+                base[off + 2] = "model"
+        elif leafname == "len":
+            base = [None] * nd
+            if bspec is not None:
+                base[off] = bspec
+        return NamedSharding(mesh, P(*base))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def data_shardings(batch_shapes: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    """tokens/labels (B,S), patch_embeds (B,P,D)."""
+    out = {}
+    for k, v in batch_shapes.items():
+        bspec = batch_spec(v.shape[0], mesh)
+        spec = [bspec] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

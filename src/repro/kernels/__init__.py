@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's serve/update hot paths.
+
+- quant_matmul:    int8-weight matmul (post-compression serving, §3.2)
+- masked_dequant:  fused dequant + license-interval mask (§3.5)
+- delta_apply:     sparse weight-delta scatter (low-latency update, §4.3)
+- flash_attention: online-softmax attention (GQA via index-map, sliding
+  window, decode offsets) — the roofline-directed fix for the score-
+  materialization traffic that dominates dense train/prefill rows
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

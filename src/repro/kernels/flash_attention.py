@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: flash attention (online-softmax, O(1) HBM scores).
+
+The roofline table (EXPERIMENTS.md §Roofline) shows every dense train/
+prefill row is memory-dominated by the pure-JAX attention's (chunk × S)
+score materialization.  This kernel keeps the running (m, l, acc) state in
+VMEM across the innermost KV-block grid axis, so scores never touch HBM:
+per-layer attention traffic drops from O(S·S) to O(S·d).
+
+Layout: q (BH, Sq, hd), k/v (BKH, Sk, hd); GQA is handled in the index
+map (kv block index = bh // group) — kv heads are never replicated in HBM.
+Running stats live in the m/l output refs (f32), which persist across the
+sequential innermost kk axis; the final kk step normalizes in-register.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, q_offset: int,
+            block_q: int, block_k: int, n_k: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale                  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                          # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    qi = pl.program_id(1)
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kk * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0]                                         # (bq,)
+    l_prev = l_ref[0]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # rows with no valid key yet keep m == NEG_INF; guard the exps
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    alpha = jnp.where(m_prev == NEG_INF, 0.0, alpha)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc = o_ref[0].astype(jnp.float32) * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+    @pl.when(kk == n_k - 1)
+    def _normalize():
+        denom = jnp.maximum(l_ref[0], 1e-20)
+        o_ref[0] = (o_ref[0].astype(jnp.float32) / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k",
+                     "groups", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,    # (BH, Sq, hd)
+    k: jnp.ndarray,    # (BKH, Sk, hd)
+    v: jnp.ndarray,    # (BKH, Sk, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 256,
+    block_k: int = 256,
+    groups: int = 1,    # q heads per kv head (BH == BKH * groups)
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, sq, hd = q.shape
+    bkh, sk, _ = k.shape
+    assert bh == bkh * groups, (bh, bkh, groups)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    scale = 1.0 / np.sqrt(hd)
+    grid = (bh, sq // block_q, sk // block_k)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, n_k=grid[2],
+    )
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, kk: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda b, qi, kk, g=groups: (b // g, kk, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda b, qi, kk, g=groups: (b // g, kk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, kk: (b, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda b, qi, kk: (b, qi)),
+            pl.BlockSpec((1, block_q), lambda b, qi, kk: (b, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

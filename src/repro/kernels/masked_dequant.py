@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: fused int8 dequant + license-interval masking.
+
+The paper applies license masks in the database layer (§3.5); at serve time
+that would mean a dequant pass *plus* a mask pass over the weights — two
+HBM round-trips for a purely memory-bound op.  Fusing them means the
+licensed weight tensor is produced in exactly one read of the int8 codes
+and one write of the output: dynamic licensing at zero marginal bandwidth.
+
+Interval bounds arrive as two small (MAX_INTERVALS,) f32 arrays replicated
+to every block (index_map -> 0); padding intervals have lo == hi and are
+inert.  The interval loop is unrolled (MAX_INTERVALS is static), so the
+kernel body is branch-free elementwise VPU work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAX_INTERVALS = 8
+
+
+def _kernel(codes_ref, scale_ref, lo_ref, hi_ref, out_ref, *, n_intervals: int):
+    w = codes_ref[...].astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+    mag = jnp.abs(w)
+    dead = jnp.zeros(w.shape, dtype=jnp.bool_)
+    for i in range(n_intervals):  # static unroll
+        lo = lo_ref[0, i]
+        hi = hi_ref[0, i]
+        dead = dead | ((mag >= lo) & (mag < hi))
+    out_ref[...] = jnp.where(dead, jnp.zeros_like(w), w).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_r", "block_c", "out_dtype", "interpret")
+)
+def masked_dequant(
+    codes: jnp.ndarray,
+    scale: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    *,
+    block_r: int = 256,
+    block_c: int = 256,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """codes (R,C) int8, scale (1,C) or (R,1) f32, lo/hi (MAX_INTERVALS,).
+
+    Returns licensed bf16/f32 weights: dequantized, zeroed where
+    lo[i] <= |w| < hi[i] for any i.  Shapes pre-padded to block multiples.
+    """
+    r, c = codes.shape
+    assert r % block_r == 0 and c % block_c == 0, (r, c, block_r, block_c)
+    assert lo.shape == hi.shape == (MAX_INTERVALS,)
+    # broadcast scale to a full-block-compatible layout
+    if scale.shape == (1, c):
+        scale_spec = pl.BlockSpec((1, block_c), lambda i, j: (0, j))
+    elif scale.shape == (r, 1):
+        scale_spec = pl.BlockSpec((block_r, 1), lambda i, j: (i, 0))
+    elif scale.shape == (1, 1):
+        scale_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    else:
+        raise ValueError(f"scale shape {scale.shape} not broadcastable to {(r, c)}")
+
+    grid = (r // block_r, c // block_c)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_intervals=MAX_INTERVALS),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            scale_spec,
+            pl.BlockSpec((1, MAX_INTERVALS), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, MAX_INTERVALS), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), out_dtype),
+        interpret=interpret,
+    )(codes, scale, lo.reshape(1, -1), hi.reshape(1, -1))

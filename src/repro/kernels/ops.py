@@ -1,0 +1,135 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to block multiples, backend selection (interpret=True on
+CPU so the kernel *body* is what runs in tests), and the pure-jnp fallback
+for shapes too small to tile.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import delta_apply as _delta
+from repro.kernels import masked_dequant as _mask
+from repro.kernels import quant_matmul as _qmm
+from repro.kernels import ref
+
+MAX_INTERVALS = _mask.MAX_INTERVALS
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jnp.ndarray, mults: Tuple[int, ...], value=0) -> jnp.ndarray:
+    pads = []
+    for dim, m in zip(x.shape, mults):
+        pads.append((0, (-dim) % m))
+    if not any(p[1] for p in pads):
+        return x
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def quant_matmul(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    out_dtype=None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Activation (…,K) × int8 weights (K,N) with per-channel scales (N,)."""
+    out_dtype = out_dtype or x.dtype
+    interpret = _on_cpu() if interpret is None else interpret
+    lead = x.shape[:-1]
+    m = int(np.prod(lead)) if lead else 1
+    k = x.shape[-1]
+    n = codes.shape[-1]
+    x2 = x.reshape(m, k)
+    # tiny shapes: pallas tiling has no win; use the oracle (identical math)
+    if m * n * k < 128 * 128 * 128:
+        return ref.quant_matmul(x2, codes, scale, out_dtype).reshape(*lead, n)
+    bm = min(block_m, max(8, 1 << (m - 1).bit_length()))
+    xp = _pad_to(x2, (bm, block_k))
+    cp = _pad_to(codes, (block_k, block_n))
+    sp = _pad_to(scale, (block_n,))
+    out = _qmm.quant_matmul(
+        xp, cp, sp, block_m=bm, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:m, :n].reshape(*lead, n)
+
+
+def pack_intervals(intervals: Sequence[Tuple[float, float]]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pad a license tier's interval list to (MAX_INTERVALS,) lo/hi arrays."""
+    ivs = list(intervals)[:MAX_INTERVALS]
+    lo = np.zeros(MAX_INTERVALS, np.float32)
+    hi = np.zeros(MAX_INTERVALS, np.float32)
+    for i, (a, b) in enumerate(ivs):
+        lo[i], hi[i] = a, b
+    return jnp.asarray(lo), jnp.asarray(hi)
+
+
+def masked_dequant(
+    codes: jnp.ndarray,
+    scale: jnp.ndarray,
+    intervals: Sequence[Tuple[float, float]] = (),
+    *,
+    out_dtype=jnp.float32,
+    block_r: int = 256,
+    block_c: int = 256,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Licensed weights from int8 codes in one fused pass (paper §3.5)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    lo, hi = pack_intervals(intervals)
+    r, c = codes.shape
+    if r * c < 256 * 256:
+        return ref.masked_dequant(codes, jnp.broadcast_to(scale, codes.shape), lo, hi, out_dtype)
+    br = min(block_r, r) if r % min(block_r, r) == 0 else block_r
+    cp = _pad_to(codes, (block_r, block_c))
+    if scale.ndim != 2:
+        scale = scale.reshape((1, -1)) if scale.size == c else scale.reshape((-1, 1))
+    sp = scale
+    if scale.shape == (1, c):
+        sp = _pad_to(scale, (1, block_c))
+    elif scale.shape == (r, 1):
+        sp = _pad_to(scale, (block_r, 1))
+    out = _mask.masked_dequant(
+        cp, sp, lo, hi, block_r=block_r, block_c=block_c,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:r, :c]
+
+
+def delta_apply(
+    buf: jnp.ndarray,
+    indices: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    block: int = 4096,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """buf.at[indices].set(values) via the Pallas scatter kernel."""
+    interpret = _on_cpu() if interpret is None else interpret
+    (n,) = buf.shape
+    if n < block or indices.shape[0] == 0:
+        return ref.delta_apply(buf, indices, values)
+    # interpret mode executes the kernel body in Python per grid cell —
+    # O(tiles × n_delta) work is fine compiled on TPU but pathological
+    # interpreted; large updates take the (identical-semantics) ref path
+    if interpret and (n // block) * indices.shape[0] > 1 << 22:
+        return ref.delta_apply(buf, indices, values)
+    pad = (-n) % block
+    bufp = jnp.pad(buf, (0, pad)) if pad else buf
+    out = _delta.delta_apply(
+        bufp, indices.astype(jnp.int32), values.astype(buf.dtype),
+        block=block, interpret=interpret,
+    )
+    return out[:n]

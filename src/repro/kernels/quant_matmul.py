@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: bf16-activation × int8-weight matmul with per-channel
+dequantization — the licensed-serving hot path once the paper's quantization
+pipeline (§3.2) is adopted.
+
+TPU mapping (DESIGN.md §2): int8 codes stay packed in VMEM (half the bytes
+of bf16, ~1/4 of f32), dequantize in-register right before the MXU dot.
+Block shapes are MXU-aligned (multiples of 128 on M/N, 128 on K); the K grid
+axis accumulates into the output block (revisiting — K is the innermost,
+sequential grid dim).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, codes_ref, scale_ref, out_ref, *, n_k: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)                       # (bm, bk)
+    w = codes_ref[...].astype(jnp.float32)                   # (bk, bn)
+    w = w * scale_ref[...].astype(jnp.float32)               # (1, bn) broadcast
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] += acc.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def quant_matmul(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x (M,K) @ (codes (K,N) * scale (N,)) -> (M,N) in out_dtype.
+
+    Shapes must be pre-padded to block multiples (``ops.quant_matmul`` pads).
+    """
+    m, k = x.shape
+    k2, n = codes.shape
+    assert k == k2 and scale.shape == (n,)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"unpadded shapes {(m, k, n)} vs blocks {(block_m, block_k, block_n)}"
+    )
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=grid[2], out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(x, codes, scale.reshape(1, n))

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernel tests
+``assert_allclose`` against (interpret=True on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul(x: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
+                 out_dtype=jnp.float32) -> jnp.ndarray:
+    """x (M,K) @ dequant(codes (K,N), scale (N,)) -> (M,N).
+
+    Per-output-channel symmetric int8 dequant: W = codes * scale[None, :].
+    Accumulation in f32 regardless of input dtype (MXU semantics).
+    """
+    w = codes.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
+    acc = jnp.dot(x.astype(jnp.float32), w, precision="highest")
+    return acc.astype(out_dtype)
+
+
+def masked_dequant(codes: jnp.ndarray, scale: jnp.ndarray, lo: jnp.ndarray,
+                   hi: jnp.ndarray, out_dtype=jnp.float32) -> jnp.ndarray:
+    """Fused dequant + license-interval mask (paper §3.5).
+
+    w = codes * scale (per-channel, axis -1); w is zeroed where
+    lo[i] <= |w| < hi[i] for any interval i.  Intervals with lo == hi are
+    inert padding.
+    """
+    w = codes.astype(jnp.float32) * scale.astype(jnp.float32)
+    mag = jnp.abs(w)
+    dead = jnp.zeros(w.shape, dtype=bool)
+    for i in range(lo.shape[0]):
+        dead = dead | ((mag >= lo[i]) & (mag < hi[i]))
+    return jnp.where(dead, jnp.zeros_like(w), w).astype(out_dtype)
+
+
+def delta_apply(buf: jnp.ndarray, indices: jnp.ndarray, values: jnp.ndarray) -> jnp.ndarray:
+    """Sparse scatter-set of ``values`` at flat ``indices`` (unique) into buf.
+
+    Out-of-range indices (used as padding, index == buf.size) are dropped.
+    """
+    valid = indices < buf.shape[0]
+    safe = jnp.where(valid, indices, 0)
+    vals = jnp.where(valid, values, buf[safe])
+    return buf.at[safe].set(vals.astype(buf.dtype))
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0, q_offset: int = 0,
+                    groups: int = 1) -> jnp.ndarray:
+    """Oracle for the flash kernel: materialized-softmax attention.
+
+    q (BH,Sq,hd); k/v (BKH,Sk,hd) with BH == BKH*groups (GQA).
+    """
+    import numpy as _np
+
+    bh, sq, hd = q.shape
+    kr = jnp.repeat(k, groups, axis=0)
+    vr = jnp.repeat(v, groups, axis=0)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / _np.sqrt(hd)
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(kr.shape[1])[None, :]
+    mask = jnp.ones((sq, kr.shape[1]), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask[None], -1, keepdims=True), p, 0.0)
+    return jnp.einsum("bqk,bkh->bqh", p, vr.astype(jnp.float32))

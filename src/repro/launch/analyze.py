@@ -1,0 +1,126 @@
+"""Dry-run deep-dive: attribute loop-aware traffic/flops/collectives to
+HLO op_name provenance for one (arch × shape × mesh) combo.
+
+  PYTHONPATH=src python -m repro.launch.analyze --arch granite-34b \
+      --shape train_4k [--mesh multi] [--top 15]
+"""
+import os
+os.environ["XLA_FLAGS"] = (  # noqa: E402
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import re
+from collections import Counter
+
+import jax
+
+from repro.configs import get_config
+from repro.distribution import sharding as shd
+from repro.launch import hlo_cost
+from repro.launch.dryrun import _abstract_params
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, adapt_config, input_specs
+from repro.serving.engine import prefill_step, serve_step
+from repro.training import OptimizerConfig, make_train_step
+from repro.training import optimizer as opt_lib
+
+
+def compile_combo(arch: str, shape_name: str, multi: bool = False,
+                  cfg_override=None, grad_accum: int = 4):
+    mesh = make_production_mesh(multi_pod=multi)
+    cfg, note = adapt_config(get_config(arch), SHAPES[shape_name])
+    if cfg_override:
+        cfg = cfg.replace(**cfg_override)
+    kind, spec = input_specs(cfg, SHAPES[shape_name])
+    params_shapes = _abstract_params(cfg)
+    p_sh = shd.params_shardings(params_shapes, mesh, cfg)
+    with mesh:
+        if kind == "train":
+            opt_shapes = jax.eval_shape(opt_lib.init_state, params_shapes)
+            o_sh = shd.opt_state_shardings(opt_shapes, params_shapes, mesh)
+            d_sh = shd.data_shardings(spec["batch"], mesh)
+            step = make_train_step(cfg, OptimizerConfig(grad_accum=grad_accum))
+            compiled = jax.jit(step, in_shardings=(p_sh, o_sh, d_sh)).lower(
+                params_shapes, opt_shapes, spec["batch"]).compile()
+        elif kind == "prefill":
+            c_sh = shd.cache_shardings(spec["cache"], mesh, SHAPES[shape_name].batch)
+            d_sh = shd.data_shardings(
+                {k: v for k, v in spec.items() if k != "cache"}, mesh)
+            fn = lambda p, t, c: prefill_step(p, cfg, t, c)
+            compiled = jax.jit(fn, in_shardings=(p_sh, d_sh["tokens"], c_sh)).lower(
+                params_shapes, spec["tokens"], spec["cache"]).compile()
+        else:
+            c_sh = shd.cache_shardings(spec["cache"], mesh, SHAPES[shape_name].batch)
+            d_sh = shd.data_shardings({"tokens": spec["tokens"]}, mesh)
+            fn = lambda p, t, c, pos: serve_step(p, cfg, t, c, pos)
+            compiled = jax.jit(
+                fn, in_shardings=(p_sh, d_sh["tokens"], c_sh, shd.replicated(mesh)),
+            ).lower(params_shapes, spec["tokens"], spec["cache"], spec["pos"]).compile()
+    return compiled, mesh, cfg
+
+
+def attribute(hlo: str, top: int = 15):
+    """Loop-aware per-op_name tallies of traffic/flops/collective bytes."""
+    comps = hlo_cost.parse_computations(hlo)
+    traffic = Counter()
+    flops = Counter()
+    coll = Counter()
+
+    def opname(ins):
+        m = re.search(r'op_name="([^"]*)"', ins.rhs)
+        if not m:
+            return f"<{ins.op}>"
+        return re.sub(r"/\d+", "", m.group(1))[:100]
+
+    def visit(name, mult, depth=0):
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return
+        _, calls = hlo_cost._local_cost(comp, comps)
+        for ins in comp.instrs:
+            one = hlo_cost._Computation(name="x", instrs=[ins], shapes=comp.shapes)
+            c, _ = hlo_cost._local_cost(one, comps)
+            if c.traffic_bytes:
+                traffic[opname(ins)] += c.traffic_bytes * mult
+            if c.flops:
+                flops[opname(ins)] += c.flops * mult
+            if c.collective_bytes:
+                coll[opname(ins)] += c.collective_bytes * mult
+        for callee, m in calls:
+            if m:
+                visit(callee, mult * m, depth + 1)
+
+    visit(comps["__entry__"].name, 1.0)
+    return traffic, flops, coll
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args(argv)
+
+    compiled, mesh, cfg = compile_combo(args.arch, args.shape,
+                                        multi=args.mesh == "multi")
+    hlo = compiled.as_text()
+    traffic, flops, coll = attribute(hlo, args.top)
+    total = hlo_cost.analyze(hlo)
+    print(f"== totals: flops {total.flops:.3e}  traffic {total.traffic_bytes/2**40:.2f} TiB"
+          f"  collective {total.collective_bytes/2**30:.2f} GiB")
+    mem = compiled.memory_analysis()
+    print(f"== memory: temp {mem.temp_size_in_bytes/2**30:.2f} GiB  "
+          f"args {mem.argument_size_in_bytes/2**30:.2f} GiB")
+    print(f"\n-- top traffic (TiB, loop-aware) --")
+    for k, v in traffic.most_common(args.top):
+        print(f"{v/2**40:8.3f}  {k}")
+    print(f"\n-- top collectives (GiB) --")
+    for k, v in coll.most_common(args.top):
+        print(f"{v/2**30:8.2f}  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination against the production mesh with ShapeDtypeStruct inputs —
+no allocation, real SPMD partitioning.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  python -m repro.launch.dryrun --all
+  python -m repro.launch.dryrun --all --mesh multi
+
+Outputs one JSON per combo under benchmarks/dryrun_results/.
+"""
+import os
+os.environ["XLA_FLAGS"] = (  # noqa: E402 — MUST precede any jax import
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.distribution import sharding as shd
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, adapt_config, input_specs
+from repro.models import model as model_lib
+from repro.serving.engine import prefill_step, serve_step
+from repro.training import OptimizerConfig, make_train_step
+from repro.training import optimizer as opt_lib
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_results"
+
+
+def _abstract_params(cfg):
+    return jax.eval_shape(lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def lower_combo(arch: str, shape_name: str, mesh, mesh_name: str,
+                cfg_override=None, note_suffix: str = "", quantized: bool = False):
+    """Lower + compile one combination; returns (report_dict)."""
+    base_cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cfg, note = adapt_config(base_cfg, shape)
+    if cfg_override:
+        cfg = cfg.replace(**cfg_override)
+        note = (note + "; " if note else "") + note_suffix
+    kind, spec = input_specs(cfg, shape)
+
+    params_shapes = _abstract_params(cfg)
+    p_sh = shd.params_shardings(params_shapes, mesh, cfg)
+
+    t0 = time.time()
+    with mesh:
+        if kind == "train":
+            opt_shapes = jax.eval_shape(opt_lib.init_state, params_shapes)
+            o_sh = shd.opt_state_shardings(opt_shapes, params_shapes, mesh)
+            d_sh = shd.data_shardings(spec["batch"], mesh)
+            step = make_train_step(cfg, OptimizerConfig(grad_accum=4))
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, o_sh, d_sh)
+            ).lower(params_shapes, opt_shapes, spec["batch"])
+        elif kind == "prefill":
+            c_sh = shd.cache_shardings(spec["cache"], mesh, shape.batch)
+            d_sh = shd.data_shardings(
+                {k: v for k, v in spec.items() if k != "cache"}, mesh
+            )
+            if "patch_embeds" in spec:
+                fn = lambda p, t, c, pe: prefill_step(p, cfg, t, c, patch_embeds=pe)
+                lowered = jax.jit(
+                    fn, in_shardings=(p_sh, d_sh["tokens"], c_sh, d_sh["patch_embeds"]),
+                ).lower(params_shapes, spec["tokens"], spec["cache"], spec["patch_embeds"])
+            else:
+                fn = lambda p, t, c: prefill_step(p, cfg, t, c)
+                lowered = jax.jit(
+                    fn, in_shardings=(p_sh, d_sh["tokens"], c_sh),
+                ).lower(params_shapes, spec["tokens"], spec["cache"])
+        else:  # decode
+            c_sh = shd.cache_shardings(spec["cache"], mesh, shape.batch)
+            d_sh = shd.data_shardings({"tokens": spec["tokens"]}, mesh)
+            if quantized:
+                from repro.serving.quantized import quantize_serving_params
+
+                params_shapes = jax.eval_shape(quantize_serving_params, params_shapes)
+                p_sh = shd.params_shardings(params_shapes, mesh, cfg)
+                lo = jax.ShapeDtypeStruct((8,), jnp.float32)
+                fn = lambda p, t, c, pos, lo_, hi_: serve_step(
+                    p, cfg, t, c, pos, license_intervals=(lo_, hi_))
+                lowered = jax.jit(
+                    fn, in_shardings=(p_sh, d_sh["tokens"], c_sh,
+                                      shd.replicated(mesh), shd.replicated(mesh),
+                                      shd.replicated(mesh)),
+                ).lower(params_shapes, spec["tokens"], spec["cache"], spec["pos"],
+                        lo, lo)
+            else:
+                fn = lambda p, t, c, pos: serve_step(p, cfg, t, c, pos)
+                lowered = jax.jit(
+                    fn, in_shardings=(p_sh, d_sh["tokens"], c_sh, shd.replicated(mesh)),
+                ).lower(params_shapes, spec["tokens"], spec["cache"], spec["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_stats = {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "generated_code_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        }
+    except Exception:  # pragma: no cover - backend-dependent
+        mem_stats = {}
+
+    hlo = compiled.as_text()
+    chips = mesh.devices.size
+    report = rl.build_report(
+        arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
+        cost=cost, hlo_text=hlo,
+        model_flops=rl.model_step_flops(cfg, shape),
+        memory_stats=mem_stats, note=note,
+    )
+    out = report.as_dict()
+    out.update(mem_stats)
+    out["lower_s"] = round(t_lower, 2)
+    out["compile_s"] = round(t_compile, 2)
+    out["step_kind"] = kind
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable); tags the "
+                         "result file with __opt")
+    ap.add_argument("--tag", default="opt")
+    ap.add_argument("--quantized", action="store_true",
+                    help="decode shapes: int8 fused masked-dequant serving")
+    args = ap.parse_args(argv)
+
+    override = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        override[k] = {"true": True, "false": False}.get(
+            v.lower(), int(v) if v.isdigit() else v)
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    mesh_name = "2x16x16" if args.mesh == "multi" else "16x16"
+
+    combos = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape in SHAPES:
+                combos.append((arch, shape))
+    else:
+        combos.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape in combos:
+        tag = f"{arch}__{shape}__{mesh_name}"
+        if override or args.quantized:
+            tag += f"__{args.tag}"
+        try:
+            rep = lower_combo(arch, shape, mesh, mesh_name,
+                              cfg_override=override or None,
+                              note_suffix=args.tag + ": "
+                              + ",".join(args.set), quantized=args.quantized)
+            (outdir / f"{tag}.json").write_text(json.dumps(rep, indent=1))
+            print(f"OK   {tag}: dominant={rep['dominant']} "
+                  f"compute={rep['compute_s']:.4f}s memory={rep['memory_s']:.4f}s "
+                  f"collective={rep['collective_s']:.4f}s "
+                  f"bytes/dev={rep.get('bytes_per_device', 0)/2**30:.2f}GiB "
+                  f"compile={rep['compile_s']}s", flush=True)
+        except Exception as e:  # noqa: BLE001 - report and continue the sweep
+            failures += 1
+            print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The dry-run sets XLA_FLAGS for 512 host devices before any jax
+import; real deployments get the same mesh over real chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke/bench runs (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

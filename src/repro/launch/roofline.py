@@ -1,0 +1,161 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute   = HLO_FLOPs / (chips × peak)        [s]
+memory    = HLO_bytes / (chips × HBM_bw)      [s]
+collective= coll_bytes / (chips × link_bw)    [s]
+
+``cost_analysis`` on the SPMD-partitioned executable reports the
+PER-DEVICE module, so compute/memory terms divide by ONE chip's peak;
+collective bytes are summed from the partitioned HLO's collective ops
+(output-operand sizes) and likewise per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12       # bf16 FLOP/s
+HBM_BW = 819e9            # B/s
+LINK_BW = 50e9            # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO instruction result, e.g.:  %x = f32[256,1024]{1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^ ]*\s+(" + "|".join(_COLLECTIVES) + r")\("
+)
+# tuple-result collectives:  = (f32[8,128], f32[8,128]) all-to-all(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]+)\)\s+(" + "|".join(_COLLECTIVES) + r")\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        if "-start" in line and "-done" not in line:
+            pass  # count the -start; the -done reuses the same buffer
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            b = _shape_bytes(dtype, dims)
+        else:
+            m2 = _TUPLE_RE.search(line)
+            if not m2:
+                continue
+            shapes, kind = m2.groups()
+            b = sum(_shape_bytes(dt, dd) for dt, dd in _SHAPE_RE.findall(shapes))
+        kind = kind.replace("-start", "")
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # per device
+    hlo_bytes: float              # per device
+    collective_bytes: float       # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float            # 6·N(_active)·D, whole step, all chips
+    useful_flops_ratio: float     # model_flops / (hlo_flops × chips)
+    bytes_per_device: Optional[float] = None
+    collectives: Dict[str, int] = field(default_factory=dict)
+    note: str = ""
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def build_report(
+    *, arch: str, shape: str, mesh_name: str, chips: int,
+    cost: Dict[str, float], hlo_text: str, model_flops: float,
+    memory_stats: Optional[Dict[str, float]] = None, note: str = "",
+) -> RooflineReport:
+    """Loop-aware terms from the partitioned HLO (``hlo_cost``); XLA's own
+    cost_analysis (which counts while-bodies once) is kept as xla_raw_*."""
+    from repro.launch import hlo_cost
+
+    hc = hlo_cost.analyze(hlo_text)
+    flops = hc.flops
+    raw_bytes = hc.traffic_bytes
+    coll_bytes = hc.collective_bytes
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = raw_bytes / HBM_BW
+    collective_s = coll_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops / (flops * chips) if flops else 0.0
+    collectives = (
+        {f"{k}_bytes": v for k, v in hc.collective_by_kind.items()}
+        | {f"{k}_count": v for k, v in hc.collective_counts.items()}
+        | {"xla_raw_flops": float(cost.get("flops", 0.0)),
+           "xla_raw_bytes": float(cost.get("bytes accessed", 0.0))}
+    )
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=raw_bytes, collective_bytes=coll_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops, useful_flops_ratio=useful,
+        bytes_per_device=(memory_stats or {}).get("bytes_per_device"),
+        collectives=collectives,
+        note=note,
+    )
+
+
+def model_step_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D for train (fwd+bwd), 2·N·D per generated/scored
+    token otherwise; N = active params."""
+    counts = cfg.param_counts()
+    n = counts["active"]
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.batch  # decode: one token per sequence

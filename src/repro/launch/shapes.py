@@ -1,0 +1,81 @@
+"""Assigned input shapes + ``input_specs`` ShapeDtypeStruct builders.
+
+``input_specs(cfg, shape)`` returns (step_kind, kwargs-tree of
+ShapeDtypeStructs) — weak-type-correct, shardable, zero allocation.
+
+``long_500k`` requires sub-quadratic attention: SSM/hybrid run natively;
+full-attention archs run their sliding-window variant (window=4096), which
+is a first-class config flag — the KV cache is window-sized.  The variant
+used is recorded in the dry-run output.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+SWA_WINDOW = 4096
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str        # train | prefill | decode
+    seq_len: int
+    batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape) -> Tuple[ModelConfig, str]:
+    """Per-shape config adaptation (returns (cfg, note))."""
+    note = ""
+    if shape.name == "long_500k" and cfg.window == 0 and "attn" in cfg.layer_pattern:
+        cfg = cfg.replace(window=SWA_WINDOW)
+        note = f"sliding-window variant (window={SWA_WINDOW}) for 500k decode"
+    if shape.kind == "train" and shape.seq_len >= 32_768:
+        cfg = cfg.replace(q_chunk=512)
+    return cfg, note
+
+
+def token_struct(batch: int, seq: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Tuple[str, Dict[str, Any]]:
+    """(kind, kwargs) for the step function this shape lowers."""
+    b, s = shape.batch, shape.seq_len
+    vlm = cfg.frontend == "vision"
+    p = cfg.num_patches if vlm else 0
+
+    if shape.kind == "train":
+        batch = {"tokens": token_struct(b, s - p), "labels": token_struct(b, s - p)}
+        if vlm:
+            batch["patch_embeds"] = jax.ShapeDtypeStruct((b, p, cfg.d_model), cfg.dtype)
+        return "train", {"batch": batch}
+
+    if shape.kind == "prefill":
+        cache = jax.eval_shape(lambda: model_lib.init_cache(cfg, b, s))
+        spec: Dict[str, Any] = {"tokens": token_struct(b, s - p), "cache": cache}
+        if vlm:
+            spec["patch_embeds"] = jax.ShapeDtypeStruct((b, p, cfg.d_model), cfg.dtype)
+        return "prefill", spec
+
+    # decode: ONE token against a seq_len cache
+    cache = jax.eval_shape(lambda: model_lib.init_cache(cfg, b, s))
+    return "decode", {
+        "tokens": token_struct(b, 1),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

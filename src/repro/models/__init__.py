@@ -1,0 +1,5 @@
+"""Model zoo: unified decoder covering dense/GQA, MLA, MoE, Mamba-2 SSD,
+RG-LRU hybrid, audio- and vision-conditioned backbones."""
+from repro.models.model import forward, init_cache, init_params, lm_loss
+
+__all__ = ["forward", "init_cache", "init_params", "lm_loss"]

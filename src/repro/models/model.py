@@ -1,0 +1,278 @@
+"""Unified decoder-only model over all supported block kinds.
+
+Layers are grouped into *pattern units* (one unit = one cycle of
+``cfg.layer_pattern``), stacked over units, and evaluated with
+``lax.scan`` so an 88-layer model lowers to the HLO of one unit — compile
+time and HLO size stay bounded.  KV/SSM/LRU caches ride the scan as
+stacked xs/ys.  ``remat`` checkpoints each unit for training.
+
+Entry points:
+  init_params(key, cfg)                      -> param pytree
+  forward(params, cfg, tokens/embeds, ...)   -> logits (+ aux, + cache)
+  init_cache(cfg, batch, capacity)           -> cache pytree
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.configs.base import ModelConfig
+
+
+# ------------------------------------------------------------------- blocks
+def _init_block(key, cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    dtype = cfg.dtype
+    ln = cfg.norm_layernorm
+    if kind == "attn":
+        mixer = (L.init_mla(ks[0], cfg, dtype) if cfg.use_mla
+                 else L.init_attention(ks[0], cfg, dtype))
+        p = {"norm1": L.init_norm(cfg.d_model, dtype, ln), "mixer": mixer,
+             "norm2": L.init_norm(cfg.d_model, dtype, ln)}
+        if cfg.num_experts:
+            p["ffn"] = M.init_moe(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = L.init_mlp(ks[1], cfg, dtype)
+        return p
+    if kind == "ssm":
+        return {"norm1": L.init_norm(cfg.d_model, dtype, ln),
+                "mixer": S.init_ssm(ks[0], cfg, dtype)}
+    if kind == "rec":
+        return {"norm1": L.init_norm(cfg.d_model, dtype, ln),
+                "mixer": R.init_rglru(ks[0], cfg, dtype),
+                "norm2": L.init_norm(cfg.d_model, dtype, ln),
+                "ffn": L.init_mlp(ks[1], cfg, dtype)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _apply_block(
+    p: Dict[str, Any], kind: str, x: jnp.ndarray, cfg: ModelConfig, *,
+    cache: Optional[Dict[str, Any]], pos,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict[str, Any]]]:
+    """Pre-norm residual block.  Returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(x, p["norm1"], cfg)
+    if kind == "attn":
+        window = cfg.window
+        if cfg.use_mla:
+            y, new_cache = L.mla_block(p["mixer"], h, cfg, cache=cache, pos=pos,
+                                       window=window)
+        else:
+            y, new_cache = L.attention_block(p["mixer"], h, cfg, cache=cache,
+                                             pos=pos, window=window)
+        x = x + y.astype(x.dtype)
+        h2 = L.apply_norm(x, p["norm2"], cfg)
+        if cfg.num_experts:
+            y2, aux = M.moe_block(p["ffn"], h2, cfg)
+        else:
+            y2 = L.mlp_block(p["ffn"], h2, cfg)
+        return x + y2.astype(x.dtype), aux, new_cache
+    if kind == "ssm":
+        y, new_cache = S.ssm_block(p["mixer"], h, cfg, cache=cache)
+        return x + y, aux, new_cache
+    if kind == "rec":
+        y, new_cache = R.rglru_block(p["mixer"], h, cfg, cache=cache)
+        x = x + y
+        h2 = L.apply_norm(x, p["norm2"], cfg)
+        return x + L.mlp_block(p["ffn"], h2, cfg), aux, new_cache
+    raise ValueError(kind)
+
+
+def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, capacity: int):
+    dtype = cfg.dtype
+    if kind == "attn":
+        cap = min(capacity, cfg.window) if cfg.window else capacity
+        if cfg.use_mla:
+            return L.init_mla_cache(cfg, batch, cap, dtype)
+        return L.init_attn_cache(cfg, batch, cap, dtype)
+    if kind == "ssm":
+        return S.init_ssm_cache(cfg, batch, dtype)
+    if kind == "rec":
+        return R.init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------------- params
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    dtype = cfg.dtype
+    n_units = cfg.pattern_units
+    pattern = cfg.layer_pattern
+
+    def unit(k):
+        kk = jax.random.split(k, len(pattern))
+        return {f"b{j}": _init_block(kk[j], cfg, kind)
+                for j, kind in enumerate(pattern)}
+
+    unit_keys = jax.random.split(ks[0], n_units)
+    units = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[unit(k) for k in unit_keys]
+    ) if n_units > 1 else jax.tree_util.tree_map(
+        lambda x: x[None], unit(unit_keys[0])
+    )
+
+    params: Dict[str, Any] = {
+        "embed": {"tok": (jax.random.normal(ks[1], (cfg.padded_vocab, cfg.d_model),
+                                            jnp.float32) * 0.02).astype(dtype)},
+        "units": units,
+        "final_norm": L.init_norm(cfg.d_model, dtype, cfg.norm_layernorm),
+        "lm_head": L.dense_init(ks[2], cfg.d_model, cfg.padded_vocab, dtype, scale=0.02),
+    }
+    tail = cfg.tail_pattern
+    if tail:
+        tk = jax.random.split(ks[3], len(tail))
+        params["tail"] = {f"t{j}": _init_block(tk[j], cfg, kind)
+                          for j, kind in enumerate(tail)}
+    if cfg.frontend == "vision":
+        # projector from the (stub) vision encoder's output to d_model
+        params["vision_proj"] = L.dense_init(ks[4], cfg.d_model, cfg.d_model, dtype)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Dict[str, Any]:
+    n_units = cfg.pattern_units
+    pattern = cfg.layer_pattern
+
+    def unit_cache():
+        return {f"b{j}": _init_block_cache(cfg, kind, batch, capacity)
+                for j, kind in enumerate(pattern)}
+
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_units, *x.shape)), unit_cache()
+    )
+    cache: Dict[str, Any] = {"units": stacked}
+    tail = cfg.tail_pattern
+    if tail:
+        cache["tail"] = {f"t{j}": _init_block_cache(cfg, kind, batch, capacity)
+                         for j, kind in enumerate(tail)}
+    return cache
+
+
+# ------------------------------------------------------------------ forward
+def forward(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    tokens: Optional[jnp.ndarray] = None,       # (B, S_text) int32
+    *,
+    patch_embeds: Optional[jnp.ndarray] = None,  # (B, P, D) vision stub output
+    cache: Optional[Dict[str, Any]] = None,
+    pos=0,
+    license_intervals=None,   # (lo, hi) f32[MAX_INTERVALS] — fused-dequant licensing
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict[str, Any]]]:
+    """Returns (logits (B,S,V), aux_loss, new_cache or None).
+
+    ``params`` may contain int8 {"codes","scale"} leaves (see
+    serving/quantized.py); they are dequantized INSIDE the layer scan with
+    ``license_intervals`` masks fused in, so weight HBM reads stay int8 and
+    every license tier shares one stored model."""
+    parts = []
+    if patch_embeds is not None:
+        proj = params.get("vision_proj")
+        pe = jnp.einsum("bpd,df->bpf", patch_embeds, proj) if proj is not None else patch_embeds
+        parts.append(pe.astype(cfg.dtype))
+    if tokens is not None:
+        parts.append(params["embed"]["tok"][tokens])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if cfg.pin_acts and x.shape[1] > 1:
+        # pin the entry activation: the vocab-sharded embedding gather (and
+        # the VLM patch/text concat) otherwise seed feature-sharded
+        # residuals through the whole layer stack
+        x = L.hint_sharding(x, "batch", None, None)
+
+    pattern = cfg.layer_pattern
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def unit_step(carry, xs):
+        x, aux = carry
+        unit_params, unit_cache = xs
+        from repro.serving.quantized import dequant_tree, is_qleaf
+
+        unit_params = dequant_tree(unit_params, license_intervals, cfg.dtype)
+        new_caches = {}
+        for j, kind in enumerate(pattern):
+            c = None if unit_cache is None else unit_cache[f"b{j}"]
+            x, a, nc = _apply_block(unit_params[f"b{j}"], kind, x, cfg,
+                                    cache=c, pos=pos)
+            aux = aux + a
+            new_caches[f"b{j}"] = nc if nc is not None else ()
+        if cache is None and x.shape[1] > 1:
+            # Pin the residual stream (== the per-unit activation checkpoint
+            # jax.checkpoint saves): batch over DP axes, optionally
+            # seq-sharded over "model" (Megatron-SP).
+            if cfg.seq_sharded_acts:
+                x = L.hint_sharding(x, "batch", "model", None)
+            elif cfg.pin_acts:
+                x = L.hint_sharding(x, "batch", None, None)
+        return (x, aux), new_caches
+
+    step = unit_step
+    if cfg.remat and cache is None:
+        step = jax.checkpoint(unit_step, prevent_cse=False)
+
+    if cache is not None:
+        (x, aux_total), new_unit_caches = jax.lax.scan(
+            step, (x, aux_total), (params["units"], cache["units"])
+        )
+    else:
+        n_units = cfg.pattern_units
+        dummy = jax.tree_util.tree_map(lambda _: None, ())  # placeholder
+        (x, aux_total), _ = jax.lax.scan(
+            lambda c, p_: (step(c, (p_, None))[0], ()), (x, aux_total),
+            params["units"],
+        )
+        new_unit_caches = None
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"units": new_unit_caches}
+
+    tail = cfg.tail_pattern
+    if tail:
+        from repro.serving.quantized import dequant_tree as _dq
+
+        new_tail = {}
+        for j, kind in enumerate(tail):
+            c = None if cache is None else cache["tail"][f"t{j}"]
+            tp = _dq(params["tail"][f"t{j}"], license_intervals, cfg.dtype)
+            x, a, nc = _apply_block(tp, kind, x, cfg,
+                                    cache=c, pos=pos)
+            aux_total = aux_total + a
+            new_tail[f"t{j}"] = nc if nc is not None else ()
+        if new_cache is not None:
+            new_cache["tail"] = new_tail
+
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_ids = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_ids[None, None, :], -1e9, logits)
+    return logits, aux_total, new_cache
+
+
+# --------------------------------------------------------------------- loss
+def lm_loss(
+    params: Dict[str, Any], cfg: ModelConfig, tokens: jnp.ndarray,
+    labels: jnp.ndarray, *, patch_embeds: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Causal LM cross-entropy (+ MoE aux).  labels = next-token ids, with
+    -100 entries masked out.  For VLM inputs the patch prefix positions are
+    excluded from the loss by construction (labels cover text only)."""
+    logits, aux, _ = forward(params, cfg, tokens, patch_embeds=patch_embeds)
+    if patch_embeds is not None:
+        logits = logits[:, patch_embeds.shape[1]:]
+    mask = labels != -100
+    safe = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    loss = jnp.sum(jnp.where(mask, nll, 0.0)) / denom
+    total = loss + cfg.moe_aux_weight * aux
+    return total, {"lm_loss": loss, "aux_loss": aux}

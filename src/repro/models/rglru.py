@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t), with the real-gated
+decay a_t = exp(-c · r_t · softplus(Λ)).  Training/prefill evaluates the
+linear recurrence with ``lax.associative_scan`` (log-depth on TPU); decode
+is the single step.  The block wraps the RG-LRU with the Griffin recipe:
+parallel gate branch, causal conv1d on the recurrent branch, gated output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def init_rglru(key, cfg, dtype) -> Dict[str, Any]:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ [0.9, 0.999] at r=1 (Griffin appendix)
+    u = np.random.default_rng(42).uniform(0.9, 0.999, size=(w,)) ** 2
+    a_param = np.log(np.expm1(-np.log(u) / _C))  # inverse softplus
+    return {
+        "w_gate": dense_init(ks[0], d, w, dtype),
+        "w_x": dense_init(ks[1], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, w), jnp.float32)
+                   / np.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": dense_init(ks[3], w, w, dtype),
+        "w_i": dense_init(ks[4], w, w, dtype),
+        "a_param": jnp.asarray(a_param, jnp.float32),
+        "w_out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def _rglru_scan(u: jnp.ndarray, r: jnp.ndarray, i: jnp.ndarray, a_param: jnp.ndarray,
+                h0: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """u,r,i: (B,L,W) f32.  Returns (h (B,L,W), final state (B,W))."""
+    log_a = -_C * r * jax.nn.softplus(a_param)[None, None]       # (B,L,W) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u)
+
+    if h0 is not None:
+        # fold the entering state into the first step: h_1 = a_1 h0 + b_1
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_r * a_l, a_r * b_l + b_r
+
+    a_acc, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h, h[:, -1]
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    padded = jnp.concatenate([state, x], axis=1)
+    out = sum(padded[:, j : j + x.shape[1]] * w[j][None, None] for j in range(k))
+    return out + b[None, None], padded[:, -(k - 1) :]
+
+
+def rglru_block(
+    p: Dict[str, Any], xin: jnp.ndarray, cfg, *,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    b, l, _ = xin.shape
+    gate = jnp.einsum("bld,dw->blw", xin, p["w_gate"])
+    u = jnp.einsum("bld,dw->blw", xin, p["w_x"])
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"],
+                               cache["conv"] if cache is not None else None)
+
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", u32, p["w_r"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", u32, p["w_i"].astype(jnp.float32)))
+
+    if l == 1 and cache is not None:
+        h_prev = cache["state"].astype(jnp.float32)
+        log_a = -_C * r[:, 0] * jax.nn.softplus(p["a_param"])[None]
+        a = jnp.exp(log_a)
+        h_new = a * h_prev + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * (i[:, 0] * u32[:, 0])
+        h = h_new[:, None]
+        final = h_new
+    else:
+        h0 = cache["state"].astype(jnp.float32) if cache is not None else None
+        h, final = _rglru_scan(u32, r, i, p["a_param"], h0)
+
+    out = jax.nn.gelu(gate.astype(jnp.float32)) * h
+    out = jnp.einsum("blw,wd->bld", out.astype(xin.dtype), p["w_out"])
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "state": final.astype(cache["state"].dtype)}
+    return out, new_cache
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.lru_width), dtype),
+        "state": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }

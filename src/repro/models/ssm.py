@@ -1,0 +1,197 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD form: quadratic attention-like
+within-chunk term + a linear inter-chunk state recurrence (``lax.scan``
+over chunks), so 500k-token contexts never build an S×S matrix and decode
+state is O(1) in sequence length.  Decode is the single-step SSM
+recurrence.  TPU adaptation: the within-chunk einsums are MXU matmuls over
+(chunk × chunk) and (state × head_dim) tiles; chunk size (default 256) is
+the VMEM/MXU tiling knob.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_heads(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def conv_dim(cfg) -> int:
+    return d_inner(cfg) + 2 * cfg.ssm_state  # x plus B and C (single group)
+
+
+def init_ssm(key, cfg, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    di, h, n = d_inner(cfg), n_heads(cfg), cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim(cfg)), jnp.float32)
+                   / np.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim(cfg),), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D_skip": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[3], di, d, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, h, n = d_inner(cfg), n_heads(cfg), cfg.ssm_state
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d.  xbc (B,L,C), w (K,C).  Returns (out, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    padded = jnp.concatenate([state, xbc], axis=1)               # (B, L+K-1, C)
+    out = sum(padded[:, i : i + xbc.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = padded[:, -(k - 1) :]
+    return jax.nn.silu(out + b[None, None]), new_state
+
+
+def ssd_chunked(
+    x: jnp.ndarray,    # (B, L, H, P)  input (unscaled)
+    dt: jnp.ndarray,   # (B, L, H)     softplus'd step
+    A: jnp.ndarray,    # (H,)          negative
+    Bm: jnp.ndarray,   # (B, L, N)
+    Cm: jnp.ndarray,   # (B, L, N)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, N, P)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.  Returns (y (B,L,H,P), final_state (B,H,N,P))."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, h, p).swapaxes(0, 1).astype(f32)   # (nc,B,Q,H,P)
+    dtc = dt.reshape(b, nc, chunk, h).swapaxes(0, 1).astype(f32)
+    Bc = Bm.reshape(b, nc, chunk, n).swapaxes(0, 1).astype(f32)
+    Cc = Cm.reshape(b, nc, chunk, n).swapaxes(0, 1).astype(f32)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    s0 = (jnp.zeros((b, h, n, p), f32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def chunk_step(s_prev, inp):
+        """One chunk: within-chunk quadratic term + state read/update.
+
+        Live memory per step is O(B·Q·Q·H) (one chunk's decay), not
+        O(B·nc·Q·Q·H); the body is checkpointed so backward recomputes it
+        instead of saving nc copies.
+        """
+        xci, dtci, Bci, Cci = inp                       # (B,Q,...)
+        a = dtci * A[None, None, :]                     # (B,Q,H) log-decay <= 0
+        cum_a = jnp.cumsum(a, axis=1)
+        total_a = cum_a[:, -1, :]                       # (B,H)
+        xdt = xci * dtci[..., None]
+
+        # within-chunk: L[i,j] = exp(cum_a[i]-cum_a[j]) for i >= j.
+        # Mask BEFORE exp: above the diagonal diff > 0 explodes, and
+        # where(mask, inf, 0) back-propagates 0·inf = NaN.
+        diff = cum_a[:, :, None, :] - cum_a[:, None, :, :]       # (B,Q,Q,H)
+        decay = jnp.exp(jnp.where(causal[None, :, :, None], diff, -1e30))
+        scores = jnp.einsum("bin,bjn->bij", Cci, Bci)            # (B,Q,Q)
+        y = jnp.einsum("bij,bijh,bjhp->bihp", scores, decay, xdt)
+
+        # off-diagonal: contribution of the entering state
+        y += jnp.einsum("bin,bih,bhnp->bihp", Cci, jnp.exp(cum_a), s_prev)
+
+        # state update: S' = exp(total_a)·S + Σ_j exp(total_a-cum_a[j]) B_j⊗xdt_j
+        w_state = jnp.exp(total_a[:, None, :] - cum_a)           # (B,Q,H)
+        S_c = jnp.einsum("bjn,bjh,bjhp->bhnp", Bci, w_state, xdt)
+        s_new = s_prev * jnp.exp(total_a)[:, :, None, None] + S_c
+        return s_new, y
+
+    final, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step, prevent_cse=False), s0, (xc, dtc, Bc, Cc)
+    )
+    y = ys.swapaxes(0, 1).reshape(b, l, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssm_block(
+    p: Dict[str, Any], xin: jnp.ndarray, cfg, *,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full Mamba-2 block: in_proj -> conv -> SSD -> gated norm -> out_proj."""
+    b, l, _ = xin.shape
+    di, h, n, pd = d_inner(cfg), n_heads(cfg), cfg.ssm_state, cfg.ssm_head_dim
+
+    proj = jnp.einsum("bld,df->blf", xin, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :di].reshape(b, l, h, pd)
+    Bm = xbc[..., di : di + n]
+    Cm = xbc[..., di + n :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+
+    if l == 1 and cache is not None:
+        # -------- decode: single-step recurrence --------------------------
+        s_prev = cache["state"].astype(jnp.float32)              # (B,H,N,P)
+        a = jnp.exp(dt[:, 0] * A[None, :])                       # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+                         dt[:, 0], xs[:, 0].astype(jnp.float32))
+        s_new = s_prev * a[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), s_new)
+        y = y[:, None]                                           # (B,1,H,P)
+        final = s_new
+    else:
+        init_state = cache["state"] if cache is not None else None
+        chunk = min(cfg.ssm_chunk, l)
+        pad = (-l) % chunk
+        if pad:
+            # zero-pad is exact: dt=0 at padded steps means no input
+            # contribution and unit decay, so y[:l] and the state both match
+            xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+            y, final = ssd_chunked(xs_p, dt_p, A, Bm_p, Cm_p, chunk, init_state)
+            y = y[:, :l]
+        else:
+            y, final = ssd_chunked(xs, dt, A, Bm, Cm, chunk, init_state)
+
+    y = y + xs.astype(jnp.float32) * p["D_skip"][None, None, :, None]
+    y = y.reshape(b, l, di).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    out = jnp.einsum("bld,df->blf", y, p["out_proj"])
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "state": final.astype(cache["state"].dtype)}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim(cfg)), dtype),
+        "state": jnp.zeros((batch, n_heads(cfg), cfg.ssm_state, cfg.ssm_head_dim),
+                           jnp.float32),
+    }

@@ -1,0 +1,3 @@
+from repro.serving.engine import Request, ServingEngine, prefill_step, sample, serve_step
+
+__all__ = ["Request", "ServingEngine", "prefill_step", "sample", "serve_step"]

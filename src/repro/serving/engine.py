@@ -1,0 +1,159 @@
+"""Serving engine: batched prefill + decode with KV/SSM caches, and the
+paper's *licensed serving* as a first-class feature — a request's license
+tier selects the interval-masked weight view served to it (one stored
+weight set, many accuracy tiers, §3.5).
+
+``serve_step`` / ``prefill_step`` are the pure functions the multi-pod
+dry-run lowers; ``ServingEngine`` is the host-side driver (edge-device or
+serving-pod role from Fig. 2).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.licensing import FULL_TIER, LicenseTier, apply_license
+from repro.models import model as model_lib
+
+
+def prefill_step(params, cfg: ModelConfig, tokens, cache,
+                 patch_embeds=None, license_intervals=None):
+    """Fill the cache from a token batch; returns (last-token logits, cache)."""
+    logits, _, cache = model_lib.forward(
+        params, cfg, tokens, patch_embeds=patch_embeds, cache=cache, pos=0,
+        license_intervals=license_intervals,
+    )
+    return logits[:, -1], cache
+
+
+def serve_step(params, cfg: ModelConfig, tokens, cache, pos,
+               license_intervals=None):
+    """ONE decode step: tokens (B,1) + cache at fill-level ``pos``.
+
+    With int8 ``params`` (serving/quantized.py) and ``license_intervals``,
+    this is the fused masked-dequant licensed decode."""
+    logits, _, cache = model_lib.forward(params, cfg, tokens, cache=cache,
+                                         pos=pos, license_intervals=license_intervals)
+    return logits[:, -1], cache
+
+
+def sample(logits: jnp.ndarray, key, *, temperature: float = 1.0,
+           top_k: int = 0) -> jnp.ndarray:
+    if temperature <= 0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    license: str = "full"
+    temperature: float = 0.0
+    out_tokens: List[int] = field(default_factory=list)
+
+
+class ServingEngine:
+    """Batched serving with per-tier licensed weight views.
+
+    Weight views are materialized once per tier (masking is elementwise and
+    cheap relative to serving) and cached — the paper's "unlimited licenses,
+    one stored model".
+    """
+
+    def __init__(self, cfg: ModelConfig, params,
+                 tiers: Optional[Dict[str, LicenseTier]] = None,
+                 quantized: bool = False):
+        """``quantized=True``: ONE int8 weight store serves all tiers with
+        license masks fused into the in-scan dequant (beyond-paper mode;
+        see serving/quantized.py).  Default is the paper's mask-at-load."""
+        self.cfg = cfg
+        self.quantized = quantized
+        if quantized:
+            from repro.serving.quantized import quantize_serving_params
+
+            self.base_params = quantize_serving_params(params)
+        else:
+            self.base_params = params
+        self.tiers = dict(tiers or {})
+        self.tiers.setdefault("full", FULL_TIER)
+        self._views: Dict[str, Any] = {}
+        self._intervals: Dict[str, Any] = {}
+        self._prefill = jax.jit(
+            lambda p, t, c, li: prefill_step(p, cfg, t, c, license_intervals=li)
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, pos, li: serve_step(p, cfg, t, c, pos,
+                                                license_intervals=li)
+        )
+
+    def params_for(self, license_name: str):
+        tier = self.tiers.get(license_name)
+        if tier is None:
+            raise KeyError(f"unknown license tier {license_name!r}")
+        if self.quantized:
+            return self.base_params  # one store, every tier
+        if license_name not in self._views:
+            self._views[license_name] = apply_license(self.base_params, tier)
+        return self._views[license_name]
+
+    def intervals_for(self, license_name: str):
+        if not self.quantized:
+            return None
+        if license_name not in self._intervals:
+            from repro.serving.quantized import tier_intervals
+
+            tier = self.tiers.get(license_name)
+            if tier is None:
+                raise KeyError(f"unknown license tier {license_name!r}")
+            self._intervals[license_name] = tier_intervals(tier)
+        return self._intervals[license_name]
+
+    def generate(self, requests: List[Request], *, seed: int = 0) -> List[Request]:
+        """Serve a batch of same-tier requests (mixed tiers are grouped)."""
+        by_tier: Dict[str, List[Request]] = {}
+        for r in requests:
+            by_tier.setdefault(r.license, []).append(r)
+        for tier_name, group in by_tier.items():
+            self._generate_group(group, tier_name, seed)
+        return requests
+
+    def _generate_group(self, group: List[Request], tier_name: str, seed: int):
+        params = self.params_for(tier_name)
+        li = self.intervals_for(tier_name)
+        cfg = self.cfg
+        b = len(group)
+        max_prompt = max(len(r.prompt) for r in group)
+        max_new = max(r.max_new_tokens for r in group)
+        capacity = max_prompt + max_new
+
+        toks = np.zeros((b, max_prompt), np.int32)
+        for i, r in enumerate(group):  # left-pad-free: right-align via repeat
+            toks[i, max_prompt - len(r.prompt):] = r.prompt
+            toks[i, : max_prompt - len(r.prompt)] = r.prompt[0]
+
+        cache = model_lib.init_cache(cfg, b, capacity)
+        logits, cache = self._prefill(params, jnp.asarray(toks), cache, li)
+        key = jax.random.PRNGKey(seed)
+        cur = sample(logits, key, temperature=group[0].temperature)
+        for i, r in enumerate(group):
+            r.out_tokens.append(int(cur[i]))
+        for step in range(max_new - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(
+                params, cur[:, None], cache, max_prompt + step, li
+            )
+            cur = sample(logits, sub, temperature=group[0].temperature)
+            for i, r in enumerate(group):
+                if len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(cur[i]))

@@ -1,0 +1,106 @@
+"""Quantized licensed serving (beyond-paper §Perf).
+
+The paper's licensing masks weights in the DB and ships a *separate* weight
+view per tier (mask-at-load).  Here ONE int8 weight store serves every
+tier: block weights are kept as (codes int8, scale f32) and dequantized
+*inside* the layer scan with the license's magnitude intervals fused into
+the dequant — the semantics of ``kernels/masked_dequant`` (the Pallas
+kernel is the TPU drop-in; the jnp form here lowers through XLA fusion).
+
+Wins vs mask-at-load:
+  * weight HBM reads are int8 — ~2x less than bf16, 4x less than f32;
+  * a new tier costs ZERO extra weight memory (masks are 8 floats);
+  * the licensed view can't leak: full-precision weights never exist in
+    the serving process.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.licensing import LicenseTier
+from repro.kernels.ops import MAX_INTERVALS, pack_intervals
+
+# leaves excluded from quantization (precision- or structure-critical)
+_SKIP = ("norm", "bias", "router", "conv", "A_log", "dt_bias", "D_skip",
+         "a_param", "tok", "lm_head", "scale")
+
+
+def _eligible(name: str, leaf) -> bool:
+    short = name.split("/")[-1]
+    if any(k in short for k in _SKIP):
+        return False
+    if not hasattr(leaf, "ndim"):
+        return False
+    # unit-stacked weights are (U, in, out[, ...]); plain 2-D under units are
+    # stacked biases — leave those alone
+    if "units/" in name:
+        return leaf.ndim >= 3
+    return "tail/" in name and leaf.ndim >= 2
+
+
+def quantize_serving_params(params: Any) -> Any:
+    """Same-structure tree; eligible weights become {"codes","scale"} dicts.
+
+    Per-output-channel symmetric int8: scale reduces over the second-to-last
+    dim (the contraction dim of every block matmul)."""
+    from repro.core.pytree_io import _path_str
+
+    def q(path, leaf):
+        name = _path_str(path)
+        if not _eligible(name, leaf):
+            return leaf
+        w = leaf.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        codes = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+        return {"codes": codes, "scale": scale}
+
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+def is_qleaf(leaf) -> bool:
+    return isinstance(leaf, dict) and "codes" in leaf and "scale" in leaf
+
+
+def dequant_leaf(leaf, lo: Optional[jnp.ndarray], hi: Optional[jnp.ndarray],
+                 dtype) -> jnp.ndarray:
+    """Fused dequant + license-interval mask (ref semantics of the
+    ``masked_dequant`` Pallas kernel, applied per layer-scan slice)."""
+    if not is_qleaf(leaf):
+        return leaf
+    w = leaf["codes"].astype(jnp.float32) * leaf["scale"]
+    if lo is not None:
+        mag = jnp.abs(w)
+        dead = jnp.zeros(w.shape, bool)
+        for i in range(MAX_INTERVALS):
+            dead = dead | ((mag >= lo[i]) & (mag < hi[i]))
+        w = jnp.where(dead, 0.0, w)
+    return w.astype(dtype)
+
+
+def dequant_tree(tree: Any, license_intervals, dtype) -> Any:
+    lo, hi = (None, None) if license_intervals is None else license_intervals
+    return jax.tree_util.tree_map(
+        lambda l: dequant_leaf(l, lo, hi, dtype), tree, is_leaf=is_qleaf
+    )
+
+
+def tier_intervals(tier: Optional[LicenseTier]) -> Optional[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Pack a tier's '*'-pattern intervals for the fused dequant path.
+
+    The in-scan dequant applies one global interval set (per-layer patterns
+    would need per-unit interval tensors — supported by stacking, omitted
+    for brevity); '*' tiers are the common production case."""
+    if tier is None or not tier.masks:
+        return None
+    ivs = list(tier.masks.get("*", ()))
+    for pat, v in tier.masks.items():
+        if pat != "*":
+            ivs.extend(v)
+    if not ivs:
+        return None
+    return pack_intervals(ivs)

@@ -1,0 +1,17 @@
+from repro.training.optimizer import AdamWState, OptimizerConfig, apply_updates, init_state
+from repro.training.train_lib import (
+    TrainState,
+    finetune_pruned_mlp,
+    init_mlp_params,
+    make_train_step,
+    mlp_accuracy,
+    mlp_forward,
+    train_loop,
+    train_mlp,
+)
+
+__all__ = [
+    "AdamWState", "OptimizerConfig", "apply_updates", "init_state", "TrainState",
+    "finetune_pruned_mlp", "init_mlp_params", "make_train_step", "mlp_accuracy",
+    "mlp_forward", "train_loop", "train_mlp",
+]

@@ -1,0 +1,99 @@
+"""AdamW + cosine schedule + global-norm clipping, from scratch (no optax
+offline).  Optimizer state mirrors the param tree (m, v in f32 regardless
+of param dtype — mixed-precision discipline) and shards identically to the
+params under pjit, so data-parallel training needs no extra sharding rules.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray       # () int32
+    m: Any                  # f32 tree like params
+    v: Any                  # f32 tree like params
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_accum: int = 1      # microbatches per step (activation-memory knob)
+
+
+def init_state(params: Any) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/biases/1-D dynamics params."""
+    name = "/".join(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+    return not any(k in name for k in ("norm", "bias", "A_log", "dt_bias",
+                                       "a_param", "D_skip"))
+
+
+def apply_updates(
+    params: Any, grads: Any, state: AdamWState, cfg: OptimizerConfig,
+) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    flat_params = jax.tree_util.tree_leaves_with_path(params)
+    decay_flags = [_decay_mask(path) for path, _ in flat_params]
+    treedef = jax.tree_util.tree_structure(params)
+    decay_tree = jax.tree_util.tree_unflatten(treedef, decay_flags)
+
+    def upd(p, g, m, v, decay):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v, decay_tree)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), metrics

@@ -1,0 +1,201 @@
+"""Training loop library: train_step (fwd+bwd+AdamW), metrics, and
+WeightStore-backed checkpointing (the paper's versioned storage IS the
+checkpoint substrate — every checkpoint is a delta commit)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.training import optimizer as opt_lib
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: opt_lib.AdamWState
+
+    def as_tuple(self):
+        return (self.params, self.opt_state)
+
+
+def make_train_step(
+    cfg: ModelConfig, ocfg: opt_lib.OptimizerConfig,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``batch`` = {tokens (B,S), labels (B,S)} (+ patch_embeds for VLM).
+    Pure function — jit/pjit it with the mesh shardings at the call site.
+    """
+
+    def grad_fn(params, batch):
+        def loss_fn(p):
+            return model_lib.lm_loss(
+                p, cfg, batch["tokens"], batch["labels"],
+                patch_embeds=batch.get("patch_embeds"),
+            )
+
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        m = ocfg.grad_accum
+        if m <= 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            # microbatch over the leading batch dim; grads accumulate in f32
+            from repro.models.layers import hint_sharding
+
+            micro = jax.tree_util.tree_map(
+                lambda x: hint_sharding(
+                    x.reshape(m, x.shape[0] // m, *x.shape[1:]),
+                    None, "batch", *([None] * (x.ndim - 1)),
+                ),
+                batch,
+            )
+
+            def accum(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (l, parts_i), g = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l, a_acc + parts_i["aux_loss"]), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss, aux), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros(()), jnp.zeros(())), micro
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / m, grads)
+            loss = loss / m
+            parts = {"lm_loss": loss, "aux_loss": aux / m}
+        new_params, new_opt, om = opt_lib.apply_updates(params, grads, opt_state, ocfg)
+        metrics = {"loss": loss, **parts, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def train_loop(
+    cfg: ModelConfig,
+    ocfg: opt_lib.OptimizerConfig,
+    batches: Iterator[Dict[str, np.ndarray]],
+    num_steps: int,
+    *,
+    seed: int = 0,
+    params: Any = None,
+    log_every: int = 10,
+    store=None,
+    store_model: Optional[str] = None,
+    checkpoint_every: int = 0,
+    log_fn: Callable[[str], None] = print,
+) -> Tuple[Any, Dict[str, list]]:
+    """Single-host training driver (CPU-scale; the launcher handles pjit)."""
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = model_lib.init_params(key, cfg)
+    opt_state = opt_lib.init_state(params)
+    step_fn = jax.jit(make_train_step(cfg, ocfg))
+
+    history: Dict[str, list] = {"loss": [], "step": []}
+    t0 = time.time()
+    for step in range(num_steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == num_steps - 1:
+            loss = float(metrics["loss"])
+            history["loss"].append(loss)
+            history["step"].append(step)
+            log_fn(f"step {step:5d}  loss {loss:.4f}  "
+                   f"gnorm {float(metrics['grad_norm']):.3f}  "
+                   f"lr {float(metrics['lr']):.2e}  "
+                   f"({time.time() - t0:.1f}s)")
+        if store is not None and checkpoint_every and (step + 1) % checkpoint_every == 0:
+            store.commit(store_model or cfg.name, jax.device_get(params),
+                         message=f"step {step + 1}")
+    return params, history
+
+
+# ------------------------------------------------------- paper-scale MLP
+def init_mlp_params(key, mlp_cfg) -> Dict[str, Any]:
+    dims = (mlp_cfg.in_dim, *mlp_cfg.hidden, mlp_cfg.num_classes)
+    ks = jax.random.split(key, len(dims))
+    params = {}
+    for i in range(len(dims) - 1):
+        params[f"layer{i + 1}"] = {
+            "kernel": jax.random.normal(ks[i], (dims[i], dims[i + 1]), jnp.float32)
+            * np.sqrt(2.0 / dims[i]),
+            "bias_vec": jnp.zeros((dims[i + 1],), jnp.float32),
+        }
+    return params
+
+
+def mlp_forward(params: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    n = len(params)
+    for i in range(1, n + 1):
+        p = params[f"layer{i}"]
+        x = x @ p["kernel"] + p["bias_vec"]
+        if i < n:
+            x = jax.nn.relu(x)
+    return x
+
+
+def mlp_accuracy(params, x: np.ndarray, y: np.ndarray) -> float:
+    logits = mlp_forward(params, jnp.asarray(x))
+    return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))
+
+
+def train_mlp(
+    mlp_cfg, x: np.ndarray, y: np.ndarray, *, steps: int = 300, lr: float = 1e-2,
+    seed: int = 0, params=None, batch: int = 256,
+) -> Dict[str, Any]:
+    """Train the paper's small classifier to ~98% (or fine-tune pruned)."""
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = init_mlp_params(key, mlp_cfg)
+
+    @jax.jit
+    def step_fn(p, xb, yb):
+        def loss(p):
+            logits = mlp_forward(p, xb)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1))
+
+        g = jax.grad(loss)(p)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        idx = rng.integers(0, len(x), batch)
+        params = step_fn(params, jnp.asarray(x[idx]), jnp.asarray(y[idx]))
+    return params
+
+
+def finetune_pruned_mlp(mlp_cfg, params, x, y, *, steps: int = 150, lr: float = 5e-3,
+                        seed: int = 1):
+    """Fine-tune while preserving the pruned mask (Fig. 3's fine-tune stage)."""
+    masks = jax.tree_util.tree_map(lambda p: (np.asarray(p) != 0).astype(np.float32),
+                                   params)
+
+    @jax.jit
+    def step_fn(p, xb, yb):
+        def loss(p):
+            logits = mlp_forward(p, xb)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1))
+
+        g = jax.grad(loss)(p)
+        return jax.tree_util.tree_map(lambda a, b, m: (a - lr * b) * m, p, g, masks)
+
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        idx = rng.integers(0, len(x), 256)
+        params = step_fn(params, jnp.asarray(x[idx]), jnp.asarray(y[idx]))
+    return params

@@ -1,0 +1,97 @@
+"""End-to-end: the paper's lifecycle on a real (reduced) LM.
+
+train -> compress -> publish (versioned store) -> licensed clients pull ->
+delta update -> licensed LM serving (both mask-at-load and fused-int8).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core import (
+    EdgeClient,
+    LicenseServer,
+    LicenseTier,
+    WeightStore,
+    compress_pipeline,
+    flatten_params,
+    unflatten_like,
+)
+from repro.data import LMDataConfig, lm_batches
+from repro.models import forward, init_params
+from repro.serving import Request, ServingEngine
+from repro.training import OptimizerConfig, train_loop
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = smoke_variant(get_config("qwen2.5-3b")).replace(vocab_size=256)
+    data = lm_batches(LMDataConfig(vocab_size=256, seq_len=48, batch_size=8))
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=60)
+    params, hist = train_loop(cfg, ocfg, data, 60, log_fn=lambda s: None)
+    return cfg, jax.device_get(params), hist
+
+
+def test_full_lifecycle(trained):
+    cfg, params, hist = trained
+    assert hist["loss"][-1] < hist["loss"][0]  # learned something
+
+    # compress (Fig. 3) — prune block weights, keep quality reasonable
+    pruned, quant, stats = compress_pipeline(params, sparsity=0.8)  # paper rate
+    assert stats.sparsity > 0.6
+    # Table-1 ordering: full > pruned(sparse) > pruned+quantized
+    assert stats.full_bytes > stats.pruned_bytes > stats.quantized_bytes
+
+    # publish + tier
+    store = WeightStore(":memory:")
+    store.register_model(cfg.name, cfg.arch_type)
+    server = LicenseServer(store)
+    v1 = server.publish(cfg.name, pruned, tag="v1")
+    # band must exceed the 80% pruning threshold or it only re-masks zeros
+    server.publish_tier(cfg.name, LicenseTier(
+        name="free", masks={"*": ((0.0, 0.12),)}, accuracy=0.5))
+
+    # two clients pull
+    flat = flatten_params(pruned)
+    zeros = {k: np.zeros_like(v) for k, v in flat.items()}
+    paid = EdgeClient(cfg.name, dict(zeros), license_name="full")
+    free = EdgeClient(cfg.name, dict(zeros), license_name="free")
+    paid.request_update(server)
+    free.request_update(server)
+
+    toks = np.arange(16, dtype=np.int32)[None].repeat(2, 0)
+    paid_params = unflatten_like(pruned, paid.params)
+    free_params = unflatten_like(pruned, free.params)
+    lp, _, _ = forward(paid_params, cfg, jnp.asarray(toks))
+    lf, _, _ = forward(free_params, cfg, jnp.asarray(toks))
+    assert bool(jnp.all(jnp.isfinite(lp))) and bool(jnp.all(jnp.isfinite(lf)))
+    assert bool(jnp.any(jnp.abs(lp - lf) > 1e-4))  # tiers actually differ
+
+    # delta update: change a handful of weights server-side
+    newp = {k: np.array(v, copy=True) for k, v in flatten_params(pruned).items()}
+    key = [k for k in newp if "lm_head" in k][0]
+    newp[key].reshape(-1)[:10] += 0.05
+    server.publish(cfg.name, newp, parent=v1, tag="v1.1")
+    packet = paid.request_update(server)
+    assert packet.num_entries == 10
+    assert packet.nbytes < 1000  # §4.3 low-latency: bytes ∝ changed weights
+
+    store.close()
+
+
+def test_licensed_lm_serving_both_modes(trained):
+    cfg, params, _ = trained
+    tiers = {"free": LicenseTier(name="free", masks={"*": ((0.0, 0.002),)})}
+    prompts = [Request(prompt=np.arange(12, dtype=np.int32), max_new_tokens=4)]
+
+    eng_load = ServingEngine(cfg, params, tiers=tiers)              # paper
+    eng_q = ServingEngine(cfg, params, tiers=tiers, quantized=True)  # ours
+    a = eng_load.generate([Request(prompt=np.arange(12, dtype=np.int32),
+                                   max_new_tokens=4)])[0]
+    b = eng_q.generate([Request(prompt=np.arange(12, dtype=np.int32),
+                                max_new_tokens=4)])[0]
+    assert len(a.out_tokens) == len(b.out_tokens) == 4
+    # greedy decode from the same weights: int8 path matches argmax-ish;
+    # don't assert equality (quantization can flip near-ties) — both valid
+    assert all(0 <= t < cfg.padded_vocab for t in a.out_tokens + b.out_tokens)

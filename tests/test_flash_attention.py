@@ -1,0 +1,80 @@
+"""Flash-attention Pallas kernel vs materialized-softmax oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+
+
+def mk(seed, bh, sq, sk, hd, bkh=None):
+    r = np.random.default_rng(seed)
+    bkh = bkh or bh
+    q = jnp.asarray(r.standard_normal((bh, sq, hd)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((bkh, sk, hd)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((bkh, sk, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("sq,sk,bq,bk", [(256, 256, 128, 128), (512, 512, 256, 128),
+                                          (256, 512, 128, 256)])
+def test_flash_causal_matches_ref(sq, sk, bq, bk):
+    q, k, v = mk(0, 4, sq, sk, 64)
+    got = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_gqa_groups():
+    """8 q heads share 2 kv heads via the index map (no kv replication)."""
+    q, k, v = mk(1, 8, 256, 256, 64, bkh=2)
+    got = flash_attention(q, k, v, causal=True, groups=4, block_q=128,
+                          block_k=128, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True, groups=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_sliding_window():
+    q, k, v = mk(2, 2, 512, 512, 64)
+    got = flash_attention(q, k, v, causal=True, window=128, block_q=128,
+                          block_k=128, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True, window=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_decode_offset():
+    """Sq=block with a large q_offset == decode against a long context."""
+    q, k, v = mk(3, 2, 128, 1024, 64)
+    got = flash_attention(q, k, v, causal=True, q_offset=896, block_q=128,
+                          block_k=256, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True, q_offset=896)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_noncausal():
+    q, k, v = mk(4, 2, 256, 256, 64)
+    got = flash_attention(q, k, v, causal=False, block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       hd=st.sampled_from([64, 128]),
+       sq=st.sampled_from([256, 512]))
+def test_flash_property(seed, hd, sq):
+    q, k, v = mk(seed, 2, sq, sq, hd)
+    got = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-3, atol=5e-3)

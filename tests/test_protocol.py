@@ -1,0 +1,126 @@
+"""End-to-end client/server update protocol (paper §3.1.2, Fig. 2)."""
+import numpy as np
+import pytest
+
+from repro.core import delta as delta_lib
+from repro.core.licensing import LicenseTier
+from repro.core.protocol import EdgeClient, LicenseServer
+from repro.core.weightstore import WeightStore
+
+
+def params(seed=0):
+    r = np.random.default_rng(seed)
+    return {
+        "l1/kernel": r.standard_normal((16, 32)).astype(np.float32),
+        "l2/kernel": r.standard_normal((32, 8)).astype(np.float32),
+    }
+
+
+@pytest.fixture
+def server():
+    store = WeightStore(":memory:")
+    store.register_model("prod", "mlp")
+    return LicenseServer(store)
+
+
+def zeros_like(p):
+    return {k: np.zeros_like(v) for k, v in p.items()}
+
+
+def test_first_update_ships_full_model(server):
+    p = params()
+    server.publish("prod", p)
+    client = EdgeClient("prod", zeros_like(p))
+    packet = client.request_update(server)
+    assert client.version == packet.to_version
+    np.testing.assert_allclose(client.params["l1/kernel"], p["l1/kernel"], rtol=1e-6)
+
+
+def test_second_update_ships_only_delta(server):
+    p = params()
+    v1 = server.publish("prod", p)
+    client = EdgeClient("prod", zeros_like(p))
+    first = client.request_update(server)
+
+    p2 = {k: v.copy() for k, v in p.items()}
+    p2["l2/kernel"][0, :4] += 1.0
+    server.publish("prod", p2, parent=v1)
+    second = client.request_update(server)
+
+    assert second.num_entries == 4           # only the 4 changed weights
+    assert second.nbytes < first.nbytes / 10  # low-latency update, §4.3
+    np.testing.assert_allclose(client.params["l2/kernel"], p2["l2/kernel"], rtol=1e-6)
+
+
+def test_skipped_patches_one_packet(server):
+    p = params()
+    v1 = server.publish("prod", p)
+    client = EdgeClient("prod", zeros_like(p))
+    client.request_update(server)
+    # three server-side versions while the client is offline
+    cur = p
+    for step in range(3):
+        cur = {k: v.copy() for k, v in cur.items()}
+        cur["l1/kernel"][step, step] = float(step + 10)
+        server.publish("prod", cur)
+    packet = client.request_update(server)
+    assert client.updates == 2  # one initial + ONE combined update
+    assert packet.num_entries == 3
+    np.testing.assert_allclose(client.params["l1/kernel"], cur["l1/kernel"], rtol=1e-6)
+
+
+def test_license_masks_applied_server_side(server):
+    p = params(7)
+    v = server.publish("prod", p)
+    tier = LicenseTier(name="free", masks={"l1": ((0.5, 0.8),)}, accuracy=0.7)
+    server.publish_tier("prod", tier)
+
+    free = EdgeClient("prod", zeros_like(p), license_name="free")
+    free.request_update(server)
+    got = free.params["l1/kernel"]
+    mag = np.abs(p["l1/kernel"])
+    banned = (mag >= 0.5) & (mag < 0.8)
+    assert banned.any()
+    assert (got[banned] == 0).all()          # unlicensed weights never shipped
+    np.testing.assert_allclose(got[~banned], p["l1/kernel"][~banned], rtol=1e-6)
+
+    paid = EdgeClient("prod", zeros_like(p), license_name="full")
+    paid.request_update(server)
+    np.testing.assert_allclose(paid.params["l1/kernel"], p["l1/kernel"], rtol=1e-6)
+
+
+def test_rollback_pushes_old_weights(server):
+    p = params()
+    v1 = server.publish("prod", p)
+    client = EdgeClient("prod", zeros_like(p))
+    client.request_update(server)
+    p2 = {k: v * 2 for k, v in p.items()}
+    server.publish("prod", p2, parent=v1)
+    client.request_update(server)
+    server.store.rollback("prod", v1)
+    client.request_update(server)
+    assert client.version == v1
+    np.testing.assert_allclose(client.params["l1/kernel"], p["l1/kernel"], rtol=1e-6)
+
+
+def test_shard_delta_partitions_by_range():
+    old = params(1)
+    new = {k: v.copy() for k, v in old.items()}
+    new["l1/kernel"][:, :] += 1.0  # all 512 entries change
+    packet = delta_lib.encode_delta(old, new)
+    size = old["l1/kernel"].size
+    half0 = delta_lib.shard_delta(packet, {"l1/kernel": (0, size // 2)})
+    half1 = delta_lib.shard_delta(packet, {"l1/kernel": (size // 2, size)})
+    n0 = sum(len(d.indices) for d in half0.deltas if d.layer == "l1/kernel")
+    n1 = sum(len(d.indices) for d in half1.deltas if d.layer == "l1/kernel")
+    assert n0 + n1 == size
+    assert half0.nbytes + half1.nbytes <= packet.nbytes + 16  # no duplication
+
+
+def test_update_log_records_bytes(server):
+    p = params()
+    server.publish("prod", p)
+    client = EdgeClient("prod", zeros_like(p))
+    client.request_update(server)
+    assert len(server.log) == 1
+    assert server.log[0].bytes_sent == client.bytes_downloaded > 0

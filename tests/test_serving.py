@@ -1,0 +1,86 @@
+"""Serving engine: batched generation, licensed views, determinism."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.licensing import LicenseTier
+from repro.models import init_params
+from repro.serving import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tiers = {"free": LicenseTier(name="free", masks={"*": ((0.0, 0.004),)})}
+    return ServingEngine(cfg, params, tiers=tiers)
+
+
+def _req(seed, n=6, lic="full"):
+    rng = np.random.default_rng(seed)
+    return Request(prompt=rng.integers(0, 500, 16, dtype=np.int32),
+                   max_new_tokens=n, license=lic)
+
+
+def test_generate_fills_requested_tokens(engine):
+    reqs = [_req(0), _req(1, n=4)]
+    engine.generate(reqs)
+    assert len(reqs[0].out_tokens) == 6
+    assert len(reqs[1].out_tokens) == 4
+    assert all(0 <= t < engine.cfg.padded_vocab for r in reqs for t in r.out_tokens)
+
+
+def test_greedy_decode_deterministic(engine):
+    a, b = _req(3), _req(3)
+    engine.generate([a])
+    engine.generate([b])
+    assert a.out_tokens == b.out_tokens
+
+
+def test_licensed_view_differs_and_is_cached(engine):
+    full = engine.params_for("full")
+    free1 = engine.params_for("free")
+    free2 = engine.params_for("free")
+    assert free1 is free2  # cached view
+    fl = jax.tree_util.tree_leaves(full)[1]
+    fr = jax.tree_util.tree_leaves(free1)[1]
+    # some weights masked in at least one leaf
+    diff = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(full),
+                        jax.tree_util.tree_leaves(free1))
+    )
+    assert diff
+
+
+def test_mixed_tier_batch_grouped(engine):
+    reqs = [_req(0, lic="full"), _req(0, lic="free")]
+    engine.generate(reqs)
+    assert len(reqs[0].out_tokens) == len(reqs[1].out_tokens) == 6
+    # same prompt, different tiers — outputs may differ (masked weights)
+    # (not asserted: masking CAN preserve argmax on tiny models)
+
+
+def test_unknown_tier_raises(engine):
+    with pytest.raises(KeyError):
+        engine.params_for("enterprise")
+
+
+def test_quantized_engine_one_store_many_tiers():
+    """Beyond-paper mode: a single int8 store serves every tier."""
+    from repro.serving.quantized import is_qleaf
+
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tiers = {"free": LicenseTier(name="free", masks={"*": ((0.0, 0.004),)})}
+    eng = ServingEngine(cfg, params, tiers=tiers, quantized=True)
+    # the same object serves both tiers — zero extra weight memory
+    assert eng.params_for("full") is eng.params_for("free")
+    assert eng.intervals_for("full") is None
+    assert eng.intervals_for("free") is not None
+    reqs = [_req(0, lic="full"), _req(0, lic="free")]
+    eng.generate(reqs)
+    assert len(reqs[0].out_tokens) == 6 and len(reqs[1].out_tokens) == 6
+    leaves = jax.tree_util.tree_leaves(eng.base_params, is_leaf=is_qleaf)
+    assert any(is_qleaf(l) for l in leaves)

@@ -1,0 +1,104 @@
+"""Partition-rule unit tests (distribution/sharding.py) on a tiny mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distribution import sharding as shd
+
+# 1 real CPU device: build a 1x1 mesh with the production axis names so
+# the divisibility logic exercises the same code paths
+MESH = jax.make_mesh((1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Shape-only stand-in so rules can be tested against a 16x16 mesh
+    without 256 devices."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+M16 = FakeMesh({"data": 16, "model": 16})
+
+
+def test_embed_shards_vocab():
+    assert shd.param_spec("embed/tok", (51200, 768), M16) == P("model", None)
+
+
+def test_col_parallel_projections():
+    assert shd.param_spec("units/b0/mixer/wq", (36, 2048, 2048), M16) == \
+        P(None, None, "model")
+    assert shd.param_spec("units/b0/ffn/w_up", (36, 2048, 11008), M16) == \
+        P(None, None, "model")
+
+
+def test_row_parallel_projections():
+    assert shd.param_spec("units/b0/mixer/wo", (36, 2048, 2048), M16) == \
+        P(None, "model", None)
+    assert shd.param_spec("units/b0/ffn/w_down", (36, 11008, 2048), M16) == \
+        P(None, "model", None)
+
+
+def test_experts_shard_expert_dim():
+    assert shd.param_spec("units/b0/ffn/experts/w_gate", (27, 64, 2048, 1408),
+                          M16) == P(None, "model", None, None)
+
+
+def _replicated(spec) -> bool:
+    return all(a is None for a in spec)
+
+
+def test_norms_and_dynamics_replicated():
+    for name in ("units/b0/norm1/norm_scale", "units/b0/mixer/A_log",
+                 "units/b0/mixer/conv_w", "units/b0/ffn/router"):
+        spec = shd.param_spec(name, (36, 768), M16)
+        assert _replicated(spec), (name, spec)
+
+
+def test_indivisible_dims_fall_back():
+    # vocab 50280 % 16 != 0 -> replicated rather than invalid
+    assert _replicated(shd.param_spec("embed/tok", (50280, 768), M16))
+
+
+def test_codes_inherit_parent_scale_replicated():
+    assert shd.param_spec("units/b0/mixer/wq/codes", (36, 2048, 2048), M16) == \
+        P(None, None, "model")
+    assert shd.param_spec("units/b0/mixer/wq/scale", (36, 1, 2048), M16) == P()
+
+
+def test_zero1_opt_spec_adds_data_axis():
+    base = shd.param_spec("units/b0/mixer/wq", (36, 2048, 2048), M16)
+    z = shd.opt_spec(base, (36, 2048, 2048), M16)
+    assert "data" in [a for a in z if a]
+
+
+def test_fsdp_spec_shards_largest_free_dim():
+    base = shd.param_spec("units/b0/ffn/w_up", (36, 2048, 11008), M16)
+    f = shd.fsdp_spec(base, (36, 2048, 11008), M16)
+    assert f == P(None, "data", "model")
+
+
+def test_batch_spec_rules():
+    m_multi = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert shd.batch_spec(256, M16) == "data"
+    assert shd.batch_spec(256, m_multi) == ("pod", "data")
+    assert shd.batch_spec(1, M16) is None
+
+
+def test_ssm_nondivisible_heads_replicate_mixer():
+    from repro.configs import get_config
+
+    cfg = get_config("mamba2-130m")  # 24 SSD heads, 24 % 16 != 0
+    kws = shd.tp_replicate_keywords(cfg, M16)
+    assert "in_proj" in kws and "out_proj" in kws
+
+
+def test_kv_replication_rule():
+    from repro.configs import get_config
+
+    kws = shd.tp_replicate_keywords(get_config("qwen2.5-3b"), M16)  # kv=2
+    assert "wk" in kws and "wv" in kws
+    kws32 = shd.tp_replicate_keywords(get_config("musicgen-large"), M16)  # kv=32
+    assert "wk" not in kws32

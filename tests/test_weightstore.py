@@ -1,0 +1,160 @@
+"""WeightStore: versioning, delta updates, rollback, tiers (paper Fig. 4)."""
+import numpy as np
+import pytest
+
+from repro.core.weightstore import WeightStore
+
+
+def small_params(seed=0, scale=1.0):
+    r = np.random.default_rng(seed)
+    return {
+        "dense1/kernel": (r.standard_normal((8, 16)) * scale).astype(np.float32),
+        "dense1/bias_vec": np.zeros((16,), np.float32),
+        "dense2/kernel": (r.standard_normal((16, 4)) * scale).astype(np.float32),
+    }
+
+
+@pytest.fixture
+def store():
+    s = WeightStore(":memory:")
+    yield s
+    s.close()
+
+
+def test_commit_checkout_roundtrip(store):
+    p = small_params()
+    store.register_model("mlp", "dense")
+    v1 = store.commit("mlp", p)
+    out = store.checkout("mlp", v1)
+    for k in p:
+        np.testing.assert_allclose(out[k], p[k], rtol=1e-6)
+
+
+def test_incremental_commit_stores_only_changes(store):
+    p = small_params()
+    store.register_model("mlp", "dense")
+    v1 = store.commit("mlp", p)
+    rows_v1 = store.storage_bytes("mlp")["weight_rows"]
+
+    p2 = {k: v.copy() for k, v in p.items()}
+    p2["dense2/kernel"][0, 0] += 1.0  # single weight change
+    v2 = store.commit("mlp", p2, parent=v1)
+    rows_v2 = store.storage_bytes("mlp")["weight_rows"]
+    assert rows_v2 == rows_v1 + 1  # paper §3.1.2: only changed weights stored
+
+    out = store.checkout("mlp", v2)
+    np.testing.assert_allclose(out["dense2/kernel"], p2["dense2/kernel"])
+    np.testing.assert_allclose(out["dense1/kernel"], p["dense1/kernel"])
+
+
+def test_zeroed_weight_is_recorded_as_change(store):
+    p = small_params()
+    store.register_model("mlp", "dense")
+    v1 = store.commit("mlp", p)
+    p2 = {k: v.copy() for k, v in p.items()}
+    p2["dense1/kernel"][3, 3] = 0.0
+    v2 = store.commit("mlp", p2, parent=v1)
+    out = store.checkout("mlp", v2)
+    assert out["dense1/kernel"][3, 3] == 0.0
+
+
+def test_delta_since_skips_intermediate_patches(store):
+    """Paper §4.2: client on v1 gets all v2+v3 changes in ONE packet."""
+    p = small_params()
+    store.register_model("mlp", "dense")
+    v1 = store.commit("mlp", p)
+    p2 = {k: v.copy() for k, v in p.items()}
+    p2["dense1/kernel"][0, 0] = 7.0
+    v2 = store.commit("mlp", p2, parent=v1)
+    p3 = {k: v.copy() for k, v in p2.items()}
+    p3["dense1/kernel"][0, 1] = 9.0
+    p3["dense2/kernel"][1, 1] = -3.0
+    v3 = store.commit("mlp", p3, parent=v2)
+
+    packet = store.delta_since("mlp", v1)
+    assert packet.to_version == v3
+    assert packet.num_entries == 3
+    layers = {d.layer for d in packet.deltas}
+    assert layers == {"dense1/kernel", "dense2/kernel"}
+
+
+def test_delta_latest_version_wins(store):
+    p = small_params()
+    store.register_model("mlp", "dense")
+    v1 = store.commit("mlp", p)
+    p2 = {k: v.copy() for k, v in p.items()}
+    p2["dense1/kernel"][0, 0] = 7.0
+    store.commit("mlp", p2, parent=v1)
+    p3 = {k: v.copy() for k, v in p2.items()}
+    p3["dense1/kernel"][0, 0] = 8.0  # same index changed again
+    store.commit("mlp", p3)
+    packet = store.delta_since("mlp", v1)
+    d = [d for d in packet.deltas if d.layer == "dense1/kernel"][0]
+    assert len(d.indices) == 1 and d.values[0] == 8.0
+
+
+def test_rollback_repoints_production(store):
+    p = small_params()
+    store.register_model("mlp", "dense")
+    v1 = store.commit("mlp", p)
+    p2 = {k: v * 2 for k, v in p.items()}
+    v2 = store.commit("mlp", p2, parent=v1)
+    assert store.production_version("mlp") == v2
+    store.rollback("mlp", v1)
+    assert store.production_version("mlp") == v1
+    out = store.checkout("mlp")
+    np.testing.assert_allclose(out["dense1/kernel"], p["dense1/kernel"])
+
+
+def test_major_version_is_full_snapshot(store):
+    p = small_params(0)
+    store.register_model("mlp", "dense")
+    v1 = store.commit("mlp", p)
+    q = small_params(1)
+    v2 = store.commit("mlp", q, major=True)
+    out = store.checkout("mlp", v2)
+    np.testing.assert_allclose(out["dense1/kernel"], q["dense1/kernel"])
+    # client on the other major branch gets a full snapshot
+    packet = store.delta_since("mlp", v1)
+    assert packet.to_version == v2
+
+
+def test_pruned_zeros_not_stored(store):
+    p = small_params()
+    p["dense1/kernel"][np.abs(p["dense1/kernel"]) < 0.5] = 0.0
+    store.register_model("mlp", "dense")
+    store.commit("mlp", p)
+    nz = sum(int(np.count_nonzero(v)) for v in p.values())
+    assert store.storage_bytes("mlp")["weight_rows"] == nz
+
+
+def test_chunk_mode_for_large_layers():
+    s = WeightStore(":memory:", row_limit=100, chunk_elems=64)
+    r = np.random.default_rng(0)
+    p = {"big/kernel": r.standard_normal((32, 32)).astype(np.float32)}  # 1024 > 100
+    s.register_model("big", "dense")
+    v1 = s.commit("big", p)
+    out = s.checkout("big", v1)
+    np.testing.assert_allclose(out["big/kernel"], p["big/kernel"], rtol=1e-6)
+    # single-element change touches exactly one chunk
+    p2 = {"big/kernel": p["big/kernel"].copy()}
+    p2["big/kernel"][0, 0] += 1.0
+    v2 = s.commit("big", p2, parent=v1)
+    packet = s.delta_since("big", v1)
+    d = packet.deltas[0]
+    assert d.chunks is not None and len(d.chunks) == 1
+    out2 = s.checkout("big", v2)
+    np.testing.assert_allclose(out2["big/kernel"], p2["big/kernel"], rtol=1e-6)
+    s.close()
+
+
+def test_history_and_tiers(store):
+    p = small_params()
+    store.register_model("mlp", "dense")
+    v1 = store.commit("mlp", p, tag="v1.0", message="init")
+    hist = store.history("mlp")
+    assert len(hist) == 1 and hist[0]["tag"] == "v1.0"
+    store.register_tier("mlp", v1, "free", 0.70, {"dense1": [(0.5, 0.8)]})
+    acc, masks = store.get_tier("mlp", "free")
+    assert acc == 0.70 and masks["dense1"] == [(0.5, 0.8)]
+    assert store.list_tiers("mlp") == [("free", 0.70)]
