@@ -10,7 +10,8 @@ import json
 import sys
 import traceback
 
-SUITES = ("storage", "update", "licensing", "kernels", "serving", "roofline")
+SUITES = ("storage", "update", "licensing", "kernels", "serving", "gateway",
+          "roofline")
 
 
 def main(argv=None) -> None:
@@ -20,8 +21,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     picked = args.only.split(",") if args.only else list(SUITES)
 
-    from benchmarks import (kernel_bench, licensing_ladder, roofline_table,
-                            serving_bench, storage_cost, update_latency)
+    from benchmarks import (gateway_bench, kernel_bench, licensing_ladder,
+                            roofline_table, serving_bench, storage_cost,
+                            update_latency)
 
     modules = {
         "storage": storage_cost,        # paper Table 1
@@ -29,6 +31,7 @@ def main(argv=None) -> None:
         "licensing": licensing_ladder,  # paper §3.5 / Algorithm 1
         "kernels": kernel_bench,
         "serving": serving_bench,
+        "gateway": gateway_bench,       # continuous batching vs single-stream
         "roofline": roofline_table,     # deliverable (g)
     }
 

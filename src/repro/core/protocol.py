@@ -58,6 +58,14 @@ class LicenseServer:
         acc, masks = self.store.get_tier(model, name)
         return LicenseTier.from_json(name, masks, acc)
 
+    def has_tier(self, model: str, name: str) -> bool:
+        """Convenience predicate over :meth:`tier` (which raises KeyError)."""
+        try:
+            self.tier(model, name)
+            return True
+        except KeyError:
+            return False
+
     # -- update requests ---------------------------------------------------
     def handle_update(
         self, model: str, client_version: Optional[int], license_name: str = "full"

@@ -1,3 +1,4 @@
+"""Multi-device placement: named-axis shardings for params/opt/cache/data."""
 from repro.distribution.sharding import (
     batch_spec,
     cache_shardings,

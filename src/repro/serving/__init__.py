@@ -1,3 +1,17 @@
-from repro.serving.engine import Request, ServingEngine, prefill_step, sample, serve_step
+"""Serving layer: single-stream engine + continuous-batching gateway.
 
-__all__ = ["Request", "ServingEngine", "prefill_step", "sample", "serve_step"]
+``ServingEngine`` (engine.py) is the seed's static-batch server;
+``LicensedGateway`` (gateway.py) is the iteration-level scheduler that
+streams tier-tagged requests through (tier, version)-keyed masked
+weight views.  Host-side scheduling primitives live in scheduler.py.
+"""
+from repro.serving.engine import Request, ServingEngine, prefill_step, sample, serve_step
+from repro.serving.gateway import LicensedGateway
+from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
+                                     ScheduledAction, Scheduler, TierViewCache)
+
+__all__ = [
+    "Request", "ServingEngine", "prefill_step", "sample", "serve_step",
+    "LicensedGateway", "GatewayRequest", "RequestState", "ScheduledAction",
+    "Scheduler", "CachePool", "TierViewCache",
+]

@@ -20,6 +20,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.licensing import FULL_TIER, LicenseTier, apply_license
 from repro.models import model as model_lib
+from repro.serving.scheduler import TierViewCache
 
 
 def prefill_step(params, cfg: ModelConfig, tokens, cache,
@@ -41,6 +42,19 @@ def serve_step(params, cfg: ModelConfig, tokens, cache, pos,
     logits, _, cache = model_lib.forward(params, cfg, tokens, cache=cache,
                                          pos=pos, license_intervals=license_intervals)
     return logits[:, -1], cache
+
+
+def right_align(prompts, width: int, rows: int) -> np.ndarray:
+    """(rows, width) int32 token matrix; short prompts padded on the left
+    with their own first token (position-consistent, never attends ahead).
+    Shared by the engine's group batching and the gateway's prompt bucket."""
+    toks = np.zeros((rows, width), np.int32)
+    for i, p in enumerate(prompts):
+        if len(p) == 0:
+            raise ValueError(f"empty prompt at row {i}")
+        toks[i, width - len(p):] = p
+        toks[i, : width - len(p)] = p[0]
+    return toks
 
 
 def sample(logits: jnp.ndarray, key, *, temperature: float = 1.0,
@@ -87,8 +101,9 @@ class ServingEngine:
             self.base_params = params
         self.tiers = dict(tiers or {})
         self.tiers.setdefault("full", FULL_TIER)
-        self._views: Dict[str, Any] = {}
-        self._intervals: Dict[str, Any] = {}
+        # (tier, version=None)-keyed licensed views, shared machinery with
+        # the gateway (serving/gateway.py); the engine is versionless.
+        self._views = TierViewCache(self._build_view, capacity=64)
         self._prefill = jax.jit(
             lambda p, t, c, li: prefill_step(p, cfg, t, c, license_intervals=li)
         )
@@ -97,27 +112,39 @@ class ServingEngine:
                                                 license_intervals=li)
         )
 
-    def params_for(self, license_name: str):
+    def _build_view(self, license_name: str, _version):
+        """(params, intervals) licensed view — built once per tier."""
         tier = self.tiers.get(license_name)
         if tier is None:
             raise KeyError(f"unknown license tier {license_name!r}")
         if self.quantized:
-            return self.base_params  # one store, every tier
-        if license_name not in self._views:
-            self._views[license_name] = apply_license(self.base_params, tier)
-        return self._views[license_name]
+            from repro.serving.quantized import tier_intervals
+
+            return self.base_params, tier_intervals(tier)  # one store, every tier
+        return apply_license(self.base_params, tier), None
+
+    def params_for(self, license_name: str):
+        return self._views.get(license_name)[0]
 
     def intervals_for(self, license_name: str):
         if not self.quantized:
             return None
-        if license_name not in self._intervals:
-            from repro.serving.quantized import tier_intervals
+        return self._views.get(license_name)[1]
 
-            tier = self.tiers.get(license_name)
-            if tier is None:
-                raise KeyError(f"unknown license tier {license_name!r}")
-            self._intervals[license_name] = tier_intervals(tier)
-        return self._intervals[license_name]
+    def gateway(self, **kw):
+        """A :class:`~repro.serving.gateway.LicensedGateway` over this
+        engine's weights and tiers (continuous batching front end).
+
+        Quantization follows the engine; construct ``LicensedGateway``
+        directly to choose a different weight-store mode."""
+        if "quantized" in kw or "already_quantized" in kw:
+            raise ValueError("gateway() mirrors the engine's quantization; "
+                             "construct LicensedGateway directly to override")
+        from repro.serving.gateway import LicensedGateway
+
+        return LicensedGateway(self.cfg, self.base_params, tiers=self.tiers,
+                               quantized=self.quantized,
+                               already_quantized=self.quantized, **kw)
 
     def generate(self, requests: List[Request], *, seed: int = 0) -> List[Request]:
         """Serve a batch of same-tier requests (mixed tiers are grouped)."""
@@ -137,10 +164,7 @@ class ServingEngine:
         max_new = max(r.max_new_tokens for r in group)
         capacity = max_prompt + max_new
 
-        toks = np.zeros((b, max_prompt), np.int32)
-        for i, r in enumerate(group):  # left-pad-free: right-align via repeat
-            toks[i, max_prompt - len(r.prompt):] = r.prompt
-            toks[i, : max_prompt - len(r.prompt)] = r.prompt[0]
+        toks = right_align([r.prompt for r in group], max_prompt, b)
 
         cache = model_lib.init_cache(cfg, b, capacity)
         logits, cache = self._prefill(params, jnp.asarray(toks), cache, li)

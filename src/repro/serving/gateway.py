@@ -1,0 +1,454 @@
+"""Licensed serving gateway: continuous batching over tier-keyed weight views.
+
+This is the serving front end the ROADMAP's "heavy traffic" north star
+needs on a single device: requests tagged with a ``LicenseTier`` stream
+in, the :class:`~repro.serving.scheduler.Scheduler` groups them into
+tier-homogeneous micro-batches, and every batch is served through a
+**(tier, version)-keyed cache of masked weight views** — the paper's
+one-stored-model-many-tiers claim (§3.5) amortized across requests
+instead of paid per request.
+
+Execution model
+---------------
+Two jitted functions, each compiled once per gateway:
+
+* ``prefill``: ``vmap`` over ``max_batch`` lanes of a batch-1
+  ``prefill_step`` with a fixed prompt bucket (``max_prompt``); short
+  prompts are right-aligned with repeated-first-token padding (same
+  trick as ``ServingEngine``).
+* ``decode``: ``vmap`` over lanes of a batch-1 ``serve_step`` where the
+  absolute position is *per lane* — this is what makes the batching
+  continuous: lanes at different depths (different requests' positions)
+  decode together, and a finished lane is refilled by the next prefill
+  without draining the batch.
+
+Both take the weight view as an argument, so one compilation serves
+every tier and weight version.  KV/SSM state lives in the shared
+:class:`~repro.serving.scheduler.CachePool` and is gathered/scattered
+by lane id around each micro-batch.
+
+Licensing integration
+---------------------
+* float path: the view is ``apply_license(base, tier)`` — masking cost
+  paid once per (tier, version), cached in :class:`TierViewCache`;
+* int8 path (``quantized=True``): ONE int8 store serves every tier and
+  the view is just the tier's packed license intervals, fused into the
+  in-scan masked dequant (``kernels/masked_dequant`` semantics); with
+  ``materialize_int8_views=True`` the gateway instead runs the fused
+  masked-dequant kernel once per (tier, version) and caches the
+  full-precision licensed view — trading memory for per-step speed on
+  long decode streams.
+* protocol: :meth:`LicensedGateway.from_server` boots the gateway from a
+  ``LicenseServer`` via the §3.1.2 delta protocol (an internal
+  ``EdgeClient`` holds the raw weights); :meth:`sync` pulls newer
+  production weights and bumps the gateway's weight version.  Admission
+  validates the tier (locally or against the server) and pins the
+  request to the current version, so in-flight requests are never
+  re-masked mid-generation; stale versions and their views are dropped
+  once the last pinned request drains.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.licensing import FULL_TIER, LicenseTier, apply_license
+from repro.serving.engine import prefill_step, right_align, sample, serve_step
+from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
+                                     ScheduledAction, Scheduler, TierViewCache)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_steps(cfg: ModelConfig):
+    """Jitted lane-vmapped prefill/decode, shared by every gateway on the
+    same (hashable, frozen) config — one compile per config and shape."""
+
+    def _prefill_one(view_params, tokens, cache, li):
+        logits, cache = prefill_step(view_params, cfg, tokens[None], cache,
+                                     license_intervals=li)
+        return logits[0], cache
+
+    def _decode_one(view_params, tok, cache, pos, li):
+        logits, cache = serve_step(view_params, cfg, tok[None, None], cache,
+                                   pos, license_intervals=li)
+        return logits[0], cache
+
+    return (jax.jit(jax.vmap(_prefill_one, in_axes=(None, 0, 0, None))),
+            jax.jit(jax.vmap(_decode_one, in_axes=(None, 0, 0, 0, None))))
+
+
+class LicensedGateway:
+    """Continuous-batching serving gateway with per-tier licensed views.
+
+    Parameters
+    ----------
+    cfg, params:
+        Model config and raw (float) weights, as for ``ServingEngine``.
+    tiers:
+        Name -> :class:`LicenseTier`; ``"full"`` is always available.
+        Unknown tiers are also resolved against ``server`` when attached.
+    quantized:
+        Serve from ONE int8 store with license masks fused into the
+        in-scan dequant (see ``serving/quantized.py``).
+    already_quantized:
+        ``params`` is already an int8 store (used by
+        ``ServingEngine.gateway()``); implies ``quantized``.
+    materialize_int8_views:
+        int8 mode only: run the fused masked-dequant once per
+        (tier, version) and cache full-precision licensed views.
+    max_batch:
+        Lanes per micro-batch == cache-pool lanes.
+    max_prompt:
+        Prompt bucket; longer prompts are rejected at admission.  Shorter
+        prompts are right-aligned into the bucket with repeated-first-token
+        padding, so absolute positions (and therefore logits) match a
+        ``ServingEngine`` group padded to the same width — not an
+        unpadded shorter run.
+    max_new_cap:
+        Decode budget per lane; ``max_new_tokens`` is clamped to it.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        tiers: Optional[Dict[str, LicenseTier]] = None,
+        quantized: bool = False,
+        already_quantized: bool = False,
+        materialize_int8_views: bool = False,
+        max_batch: int = 8,
+        max_prompt: int = 32,
+        max_new_cap: int = 64,
+        view_capacity: int = 8,
+        version: int = 1,
+        server: Any = None,
+        model: str = "model",
+        history: int = 10_000,
+    ):
+        self.cfg = cfg
+        self.quantized = quantized or already_quantized
+        self.materialize_int8_views = materialize_int8_views
+        if self.quantized and not already_quantized:
+            from repro.serving.quantized import quantize_serving_params
+
+            params = quantize_serving_params(params)
+        self.max_batch = int(max_batch)
+        self.max_prompt = int(max_prompt)
+        self.max_new_cap = int(max_new_cap)
+        self.capacity = self.max_prompt + self.max_new_cap
+
+        self.version = int(version)
+        self._weights: Dict[int, Any] = {self.version: params}
+        self.tiers: Dict[str, LicenseTier] = dict(tiers or {})
+        self.tiers.setdefault("full", FULL_TIER)
+        self.views = TierViewCache(self._materialize, capacity=view_capacity)
+
+        self.pool = CachePool(cfg, self.max_batch, self.capacity)
+        self.scheduler = Scheduler(self.max_batch, self.max_batch)
+        self._zero_lane = jax.tree_util.tree_map(
+            lambda x: x[:1], self.pool.cache)  # pristine batch-1 cache
+        self._zero_lanes = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (self.max_batch, *x.shape[1:])),
+            self._zero_lane,
+        )
+
+        self._server = server
+        self.model = model
+        self._client = None           # EdgeClient when booted from a server
+        self._server_tiers: set = set()  # tier names learned from the server
+        # tier updates deferred while their requests are in flight;
+        # value None = pending revocation
+        self._pending_tiers: Dict[str, Optional[LicenseTier]] = {}
+
+        self._next_rid = 0
+        # bounded: a long-lived gateway must not grow host memory with
+        # every request served; metrics percentiles cover this window
+        self.completed: "deque[GatewayRequest]" = deque(maxlen=history)
+        self.trace: "deque[Tuple[str, str, Optional[int], int]]" = \
+            deque(maxlen=history)
+        self._drain_sink: Optional[List[GatewayRequest]] = None
+        self.stats: Dict[str, int] = {
+            "admitted": 0, "rejected": 0, "completed": 0,
+            "prefill_batches": 0, "decode_steps": 0, "tokens_generated": 0,
+        }
+
+        # one compile each, shared by every (tier, version) view and by
+        # every gateway instance over the same config
+        self._prefill, self._decode = _compiled_steps(cfg)
+
+    # ------------------------------------------------------------ weight views
+    def _resolve_tier(self, name: str) -> LicenseTier:
+        tier = self.tiers.get(name)
+        if tier is None and self._server is not None:
+            try:
+                tier = self._server.tier(self.model, name)
+                self.tiers[name] = tier
+                self._server_tiers.add(name)
+            except KeyError:
+                tier = None
+        if tier is None:
+            raise KeyError(f"unknown license tier {name!r}")
+        return tier
+
+    def _refresh_server_tiers(self) -> None:
+        """Re-pull tiers learned from the server.
+
+        A redefined tier (an operator tightening 'free' on a live
+        gateway) or a revoked one must not keep serving its old masks —
+        but in-flight requests are never re-masked mid-generation, so
+        the change is *deferred* until the tier's current requests
+        drain.  While a revocation is pending, new admissions to the
+        tier are rejected."""
+        for name in list(self._server_tiers):
+            try:
+                fresh = self._server.tier(self.model, name)
+            except KeyError:
+                fresh = None                       # revoked server-side
+            cur = self.tiers.get(name)
+            if fresh is not None and cur is not None and fresh.masks == cur.masks:
+                self._pending_tiers.pop(name, None)
+                continue
+            self._pending_tiers[name] = fresh
+        self._apply_pending_tiers()
+
+    def _tier_in_flight(self, name: str) -> bool:
+        return (any(r.license == name for r in self.scheduler.waiting)
+                or any(r.license == name for r in self.scheduler.running))
+
+    def _apply_pending_tiers(self) -> None:
+        for name, fresh in list(self._pending_tiers.items()):
+            if self._tier_in_flight(name):
+                continue                           # defer until drained
+            if fresh is None:
+                self.tiers.pop(name, None)
+                self._server_tiers.discard(name)
+            else:
+                self.tiers[name] = fresh
+            self.views.invalidate(tier=name)
+            del self._pending_tiers[name]
+
+    def _materialize(self, tier_name: str, version: Optional[int]):
+        """Build the (params, intervals) view served to one (tier, version)."""
+        tier = self._resolve_tier(tier_name)
+        base = self._weights[version]
+        if not self.quantized:
+            return apply_license(base, tier), None
+        if self.materialize_int8_views:
+            from repro.serving.quantized import materialize_licensed_view
+
+            return materialize_licensed_view(base, tier, self.cfg.dtype), None
+        from repro.serving.quantized import tier_intervals
+
+        return base, tier_intervals(tier)
+
+    def view_for(self, tier: str, version: Optional[int] = None):
+        """Licensed weight view for (tier, version) — cached."""
+        return self.views.get(tier, self.version if version is None else version)
+
+    # -------------------------------------------------------------- admission
+    def submit(self, prompt, *, license: str = "full", max_new_tokens: int = 16,
+               temperature: float = 0.0, seed: int = 0) -> GatewayRequest:
+        """Admit one request: validate the tier, pin the weight version."""
+        req = GatewayRequest(
+            prompt=np.asarray(prompt, np.int32).reshape(-1),
+            max_new_tokens=min(int(max_new_tokens), self.max_new_cap),
+            license=license, temperature=temperature, seed=seed,
+        )
+        req.rid = self._next_rid
+        self._next_rid += 1
+        req.submit_t = time.perf_counter()
+        try:
+            if self._pending_tiers.get(license, "") is None:
+                raise KeyError(f"license tier {license!r} is being revoked")
+            self._resolve_tier(license)
+        except KeyError as e:
+            req.state = RequestState.REJECTED
+            req.error = str(e)
+            self.stats["rejected"] += 1
+            return req
+        if not 1 <= len(req.prompt) <= self.max_prompt:
+            req.state = RequestState.REJECTED
+            req.error = (f"prompt length {len(req.prompt)} outside "
+                         f"[1, {self.max_prompt}]")
+            self.stats["rejected"] += 1
+            return req
+        if req.max_new_tokens < 1:
+            req.state = RequestState.REJECTED
+            req.error = "max_new_tokens < 1"
+            self.stats["rejected"] += 1
+            return req
+        req.version = self.version
+        self.scheduler.submit(req)
+        self.stats["admitted"] += 1
+        return req
+
+    # ------------------------------------------------------------- scheduling
+    def step(self) -> Optional[ScheduledAction]:
+        """Run ONE scheduler iteration (one prefill or decode micro-batch)."""
+        act = self.scheduler.next_action()
+        if act is None:
+            return None
+        if act.kind == "prefill":
+            self._run_prefill(act)
+        else:
+            self._run_decode(act)
+        self.trace.append((act.kind, act.tier, act.version, len(act.requests)))
+        return act
+
+    def run(self, max_steps: int = 1_000_000) -> List[GatewayRequest]:
+        """Drain the queue; returns requests completed during this call."""
+        drained: List[GatewayRequest] = []
+        self._drain_sink = drained
+        try:
+            for _ in range(max_steps):
+                if self.step() is None:
+                    break
+        finally:
+            self._drain_sink = None
+        return drained
+
+    def _run_prefill(self, act: ScheduledAction) -> None:
+        view_params, li = self.views.get(act.tier, act.version)
+        reqs = act.requests
+        toks = right_align([r.prompt for r in reqs], self.max_prompt,
+                           self.max_batch)
+        logits, lane_caches = self._prefill(view_params, jnp.asarray(toks),
+                                            self._zero_lanes, li)
+        lanes = [self.scheduler.start(r) for r in reqs]
+        self.pool.scatter(self.pool.pad_lanes(lanes, self.max_batch),
+                          lane_caches)
+        logits = np.asarray(logits)
+        now = time.perf_counter()
+        for i, r in enumerate(reqs):
+            r.pos = self.max_prompt
+            r.first_token_t = now
+            self._emit(r, logits[i])
+        self.stats["prefill_batches"] += 1
+
+    def _run_decode(self, act: ScheduledAction) -> None:
+        view_params, li = self.views.get(act.tier, act.version)
+        reqs = act.requests
+        n = len(reqs)
+        lanes = self.pool.pad_lanes([r.lane for r in reqs], self.max_batch)
+        toks = np.zeros(self.max_batch, np.int32)
+        poss = np.zeros(self.max_batch, np.int32)
+        for i, r in enumerate(reqs):
+            toks[i] = r.out_tokens[-1]
+            poss[i] = r.pos
+        caches = self.pool.gather(lanes)
+        logits, caches = self._decode(view_params, jnp.asarray(toks), caches,
+                                      jnp.asarray(poss), li)
+        self.pool.scatter(lanes, caches)
+        logits = np.asarray(logits)
+        for i, r in enumerate(reqs):
+            r.pos += 1
+            self._emit(r, logits[i])
+        self.stats["decode_steps"] += 1
+
+    def _emit(self, req: GatewayRequest, logits_row: np.ndarray) -> None:
+        """Sample one token for ``req`` and retire it if it is finished."""
+        if req.temperature <= 0:
+            tok = int(np.argmax(logits_row))
+        else:
+            key = jax.random.fold_in(jax.random.PRNGKey(req.seed),
+                                     len(req.out_tokens))
+            tok = int(sample(jnp.asarray(logits_row)[None], key,
+                             temperature=req.temperature)[0])
+        req.out_tokens.append(tok)
+        self.stats["tokens_generated"] += 1
+        if len(req.out_tokens) >= req.max_new_tokens:
+            self.scheduler.finish(req)
+            self.completed.append(req)
+            if self._drain_sink is not None:
+                self._drain_sink.append(req)
+            self.stats["completed"] += 1
+            self._gc_versions()
+
+    # ---------------------------------------------------------- weight updates
+    def update_weights(self, params: Any, *, version: Optional[int] = None,
+                       already_quantized: bool = False) -> int:
+        """Install new base weights under a new version.
+
+        In-flight requests stay pinned to their admitted version; new
+        admissions pin the new one.  Views for versions no longer pinned
+        are invalidated once their last request drains.
+        """
+        if self.quantized and not already_quantized:
+            from repro.serving.quantized import quantize_serving_params
+
+            params = quantize_serving_params(params)
+        version = self.version + 1 if version is None else int(version)
+        if version < self.version:
+            raise ValueError(f"version {version} is older than the current "
+                             f"version {self.version}")
+        if version in self._weights:
+            # overwriting a live version: views built from the old weights
+            # must not survive the swap
+            self.views.invalidate(version=version)
+        self._weights[version] = params
+        self.version = version
+        self._gc_versions()
+        return version
+
+    def _gc_versions(self) -> None:
+        live = self.scheduler.pinned_versions() | {self.version}
+        for v in [v for v in self._weights if v not in live]:
+            del self._weights[v]
+            self.views.invalidate(version=v)
+        if self._pending_tiers:
+            self._apply_pending_tiers()
+
+    # ------------------------------------------------------- protocol plumbing
+    @classmethod
+    def from_server(cls, cfg: ModelConfig, server, model: str, template: Any,
+                    **kw) -> "LicensedGateway":
+        """Boot a gateway as an edge serving pod of ``server`` (Fig. 2).
+
+        ``template`` is a zeroed params pytree; the full production
+        snapshot is pulled through the §3.1.2 delta protocol, and
+        :meth:`sync` keeps pulling increments from then on.
+        """
+        from repro.core.protocol import EdgeClient
+
+        client = EdgeClient(model, template, license_name="full")
+        client.request_update(server)
+        gw = cls(cfg, client.params, server=server, model=model,
+                 version=client.version, **kw)
+        gw._client = client
+        return gw
+
+    def sync(self, server: Any = None) -> bool:
+        """Pull newer production weights (and tier redefinitions) from the
+        license server.
+
+        Returns True if a new weight version was installed (and pinned for
+        all subsequent admissions)."""
+        server = server or self._server
+        if server is None or self._client is None:
+            raise RuntimeError("gateway was not booted with from_server()")
+        self._refresh_server_tiers()
+        before = self._client.version
+        self._client.request_update(server)
+        if self._client.version == before:
+            return False
+        self.update_weights(self._client.params, version=self._client.version)
+        return True
+
+    # ---------------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, Any]:
+        """Counters + latency percentiles over completed requests."""
+        out: Dict[str, Any] = dict(self.stats)
+        out["view_cache"] = self.views.stats()
+        lats = [r.latency for r in self.completed if r.latency is not None]
+        if lats:
+            out["latency_p50_ms"] = float(np.percentile(lats, 50) * 1e3)
+            out["latency_p99_ms"] = float(np.percentile(lats, 99) * 1e3)
+        return out

@@ -89,6 +89,45 @@ def dequant_tree(tree: Any, license_intervals, dtype) -> Any:
     )
 
 
+def materialize_licensed_view(qparams: Any, tier: Optional[LicenseTier],
+                              dtype) -> Any:
+    """Run the fused masked-dequant ONCE, returning a full-precision
+    licensed view of the int8 store.
+
+    This is the gateway's ``materialize_int8_views`` path: a long decode
+    stream re-pays the in-scan dequant every step, so for hot tiers it
+    can be cheaper to burn the HBM for a materialized view amortized
+    across the whole (tier, version) lifetime.  2-D weight slices go
+    through ``kernels.ops.masked_dequant`` (the Pallas kernel on TPU,
+    its interpret/ref form on CPU); stacked leaves are dequantized
+    slice-by-slice along their leading unit/expert axes.
+    """
+    from repro.kernels import ops
+
+    li = tier_intervals(tier)
+    if li is None:
+        ivs = []
+    else:
+        lo, hi = (np.asarray(a) for a in li)
+        ivs = [(float(l), float(h)) for l, h in zip(lo, hi) if h > l]
+
+    def dq(leaf):
+        if not is_qleaf(leaf):
+            return leaf
+        codes, scale = leaf["codes"], leaf["scale"]
+        if codes.ndim == 2:
+            return ops.masked_dequant(codes, scale, ivs, out_dtype=dtype)
+        lead = codes.shape[:-2]
+        r, c = codes.shape[-2:]
+        flat_c = codes.reshape((-1, r, c))
+        flat_s = jnp.broadcast_to(scale, (*lead, 1, c)).reshape((-1, 1, c))
+        slices = [ops.masked_dequant(flat_c[i], flat_s[i], ivs, out_dtype=dtype)
+                  for i in range(flat_c.shape[0])]
+        return jnp.stack(slices).reshape((*lead, r, c))
+
+    return jax.tree_util.tree_map(dq, qparams, is_leaf=is_qleaf)
+
+
 def tier_intervals(tier: Optional[LicenseTier]) -> Optional[Tuple[jnp.ndarray, jnp.ndarray]]:
     """Pack a tier's '*'-pattern intervals for the fused dequant path.
 

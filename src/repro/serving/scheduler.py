@@ -1,0 +1,290 @@
+"""Continuous-batching scheduler for the licensed serving gateway.
+
+The seed ``ServingEngine`` serves one request stream at a time: a static
+batch is prefilled together and decoded in lock-step until the *longest*
+request finishes.  The gateway instead schedules at *iteration* level
+(Orca-style continuous batching): every scheduler step emits one
+micro-batch — either a PREFILL of newly admitted requests or a DECODE
+step over running ones — so a finished request's lane is refilled
+immediately while the rest of the batch keeps decoding.
+
+Licensing adds one constraint on top of stock continuous batching: all
+requests in a micro-batch must share a **(license tier, weight version)**
+key, because the batch is served through a single masked weight view
+(§3.5 — one stored weight set, per-tier interval-masked views).  The
+pieces here are pure host-side bookkeeping; the jitted compute lives in
+``serving/gateway.py``:
+
+* ``GatewayRequest``   — one in-flight generation with its pinned
+  ``(tier, version)`` key, lane assignment, and latency timestamps;
+* ``TierViewCache``    — LRU cache of licensed weight views keyed by
+  (tier, version), so ``apply_license``/interval packing is paid once per
+  key instead of once per request (shared with ``ServingEngine``);
+* ``CachePool``        — lane-stacked KV/SSM cache pool shared by every
+  tier, with gather/scatter by lane id and a scratch lane that absorbs
+  padded writes;
+* ``Scheduler``        — admission queue + the prefill-priority,
+  tier-round-robin policy that picks the next micro-batch.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Deque, Dict, Hashable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+
+class RequestState(str, Enum):
+    QUEUED = "queued"        # admitted, waiting for a free lane
+    RUNNING = "running"      # prefilled, holds a lane, decoding
+    DONE = "done"            # produced max_new_tokens
+    REJECTED = "rejected"    # failed admission (unknown tier / bad prompt)
+
+
+@dataclass(eq=False)   # identity equality: requests live in queues
+class GatewayRequest:
+    """One generation request flowing through the gateway.
+
+    ``license``/``version`` form the micro-batch key: the scheduler only
+    groups requests whose (tier, version) match, so one masked weight
+    view serves the whole batch.  ``version`` is pinned at admission —
+    a weight update mid-flight never changes the view a request sees.
+    """
+
+    prompt: np.ndarray                       # (S,) int32
+    max_new_tokens: int = 16
+    license: str = "full"
+    temperature: float = 0.0
+    seed: int = 0
+
+    # assigned by the gateway
+    rid: int = -1
+    version: Optional[int] = None            # weight version pinned at admission
+    state: RequestState = RequestState.QUEUED
+    out_tokens: List[int] = field(default_factory=list)
+    lane: Optional[int] = None               # cache-pool lane while RUNNING
+    pos: int = 0                             # next decode position
+    error: Optional[str] = None
+    submit_t: float = 0.0
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+
+    @property
+    def group_key(self) -> Tuple[str, Optional[int]]:
+        return (self.license, self.version)
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit -> last token wall time (None until DONE)."""
+        if self.finish_t is None:
+            return None
+        return self.finish_t - self.submit_t
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Submit -> first token wall time."""
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+
+@dataclass
+class ScheduledAction:
+    """One micro-batch decision: prefill or decode a tier-homogeneous group."""
+
+    kind: str                                # "prefill" | "decode"
+    tier: str
+    version: Optional[int]
+    requests: List[GatewayRequest]
+
+
+class TierViewCache:
+    """LRU cache of licensed weight views keyed by (tier, version).
+
+    ``build(tier_name, version)`` materializes a view on miss — for the
+    float path that is ``apply_license`` over the full tree, for the int8
+    path just the packed license intervals.  Either way the cost is paid
+    once per (tier, version), not once per request: the amortization the
+    gateway's throughput claim rests on.  Hit/miss/invalidation counters
+    are exported via :meth:`stats` and asserted by the benchmarks.
+    """
+
+    def __init__(self, build: Callable[[str, Optional[int]], Any],
+                 capacity: int = 8):
+        self._build = build
+        self.capacity = int(capacity)
+        self._entries: "OrderedDict[Tuple[str, Optional[int]], Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def get(self, tier: str, version: Optional[int] = None) -> Any:
+        key = (tier, version)
+        if key in self._entries:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        self.misses += 1
+        view = self._build(tier, version)
+        self._entries[key] = view
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return view
+
+    def __contains__(self, key: Tuple[str, Optional[int]]) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def invalidate(self, *, tier: Optional[str] = None,
+                   version: Optional[int] = None) -> int:
+        """Drop entries matching the given tier and/or version (None = any)."""
+        doomed = [k for k in self._entries
+                  if (tier is None or k[0] == tier)
+                  and (version is None or k[1] == version)]
+        for k in doomed:
+            del self._entries[k]
+        self.invalidations += len(doomed)
+        return len(doomed)
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations,
+                "entries": len(self._entries)}
+
+
+class CachePool:
+    """Shared KV/SSM cache pool: ``num_lanes`` per-request cache slots.
+
+    Leaves are lane-stacked: leading axis indexes the lane, each lane
+    holding a batch-1 cache from ``init_cache(cfg, 1, capacity)``.  The
+    gateway's decode is ``vmap``-ed over this axis, which is what lets
+    every lane carry its own absolute position (requests at different
+    depths share one micro-batch).  One extra *scratch* lane (index
+    ``num_lanes``) absorbs the writes of padding lanes, so scatters with
+    duplicate pad indices can never corrupt a live request.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_lanes: int, capacity: int):
+        self.num_lanes = int(num_lanes)
+        self.capacity = int(capacity)
+        lane = model_lib.init_cache(cfg, 1, capacity)
+        self.cache = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (self.num_lanes + 1, *x.shape)),
+            lane,
+        )
+
+    @property
+    def scratch(self) -> int:
+        return self.num_lanes
+
+    def pad_lanes(self, lanes: Sequence[int], width: int) -> List[int]:
+        """Pad a lane-id list to ``width`` with the scratch lane."""
+        lanes = list(lanes)
+        assert len(lanes) <= width, (len(lanes), width)
+        return lanes + [self.scratch] * (width - len(lanes))
+
+    def gather(self, lanes: Sequence[int]):
+        idx = jnp.asarray(lanes, jnp.int32)
+        return jax.tree_util.tree_map(lambda x: x[idx], self.cache)
+
+    def scatter(self, lanes: Sequence[int], lane_caches) -> None:
+        idx = jnp.asarray(lanes, jnp.int32)
+        self.cache = jax.tree_util.tree_map(
+            lambda pool, new: pool.at[idx].set(new.astype(pool.dtype)),
+            self.cache, lane_caches,
+        )
+
+
+class Scheduler:
+    """Prefill-priority continuous-batching policy.
+
+    * admission is FIFO; a prefill batch takes the oldest waiting request
+      and every same-(tier, version) request behind it, up to the free
+      lane count and ``max_batch`` — tier homogeneity by construction;
+    * with nothing to prefill, decode round-robins over the running
+      (tier, version) groups so no tier starves, rotating *within* a
+      group when it exceeds ``max_batch``.
+    """
+
+    def __init__(self, num_lanes: int, max_batch: int):
+        self.num_lanes = int(num_lanes)
+        self.max_batch = int(max_batch)
+        self.waiting: Deque[GatewayRequest] = deque()
+        self.running: List[GatewayRequest] = []
+        self._free_lanes: List[int] = list(range(num_lanes))
+        self._rr = 0
+        self._group_cursor: Dict[Hashable, int] = {}
+
+    # ----------------------------------------------------------- bookkeeping
+    def submit(self, req: GatewayRequest) -> None:
+        req.state = RequestState.QUEUED
+        self.waiting.append(req)
+
+    def free_lanes(self) -> int:
+        return len(self._free_lanes)
+
+    def start(self, req: GatewayRequest) -> int:
+        """Move a request to RUNNING, assigning it a lane."""
+        lane = self._free_lanes.pop()
+        req.lane = lane
+        req.state = RequestState.RUNNING
+        self.running.append(req)
+        return lane
+
+    def finish(self, req: GatewayRequest) -> None:
+        """Release the lane of a completed request."""
+        self.running.remove(req)
+        if req.lane is not None:
+            self._free_lanes.append(req.lane)
+        req.lane = None
+        req.state = RequestState.DONE
+        req.finish_t = time.perf_counter()
+
+    def pinned_versions(self) -> set:
+        """Weight versions still referenced by queued or running requests."""
+        return {r.version for r in self.waiting} | {r.version for r in self.running}
+
+    # ---------------------------------------------------------------- policy
+    def next_action(self) -> Optional[ScheduledAction]:
+        free = len(self._free_lanes)
+        if free and self.waiting:
+            key = self.waiting[0].group_key
+            room = min(free, self.max_batch)
+            batch: List[GatewayRequest] = []
+            remaining: Deque[GatewayRequest] = deque()
+            for r in self.waiting:               # one pass: select + requeue
+                if len(batch) < room and r.group_key == key:
+                    batch.append(r)
+                else:
+                    remaining.append(r)
+            self.waiting = remaining
+            return ScheduledAction("prefill", key[0], key[1], batch)
+
+        if self.running:
+            groups: Dict[Hashable, List[GatewayRequest]] = {}
+            for r in self.running:
+                groups.setdefault(r.group_key, []).append(r)
+            keys = sorted(groups, key=str)
+            key = keys[self._rr % len(keys)]
+            self._rr += 1
+            members = groups[key]
+            if len(members) > self.max_batch:
+                cur = self._group_cursor.get(key, 0) % len(members)
+                members = (members + members)[cur:cur + self.max_batch]
+                self._group_cursor[key] = cur + self.max_batch
+            return ScheduledAction("decode", key[0], key[1], list(members))
+
+        return None

@@ -1,3 +1,8 @@
+"""Training: AdamW optimizer + LM/MLP train loops with versioned checkpoints.
+
+``train_mlp``/``finetune_pruned_mlp`` cover the paper's edge MLP (train,
+prune, fine-tune); ``train_loop``/``make_train_step`` the LM-scale path.
+"""
 from repro.training.optimizer import AdamWState, OptimizerConfig, apply_updates, init_state
 from repro.training.train_lib import (
     TrainState,

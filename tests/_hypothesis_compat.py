@@ -1,0 +1,43 @@
+"""Fallback for environments without ``hypothesis`` installed.
+
+The property-based tests import ``given``/``settings``/``st`` through a
+guarded import (see requirements-dev.txt for the real dependency).  When
+hypothesis is missing, these stand-ins keep the module importable —
+collection no longer fails — and each property test individually reports
+SKIPPED while every plain pytest test in the same file still runs.
+"""
+import pytest
+
+
+class _StrategyStub:
+    """Accepts any ``st.<name>(...)`` call; the value is never used."""
+
+    def __getattr__(self, name):
+        def strategy(*args, **kwargs):
+            return None
+
+        return strategy
+
+
+st = _StrategyStub()
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        # zero-arg wrapper: pytest must not mistake hypothesis-bound
+        # parameters for fixtures
+        def skipper():
+            pytest.skip("hypothesis not installed")
+
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        return skipper
+
+    return deco

@@ -2,7 +2,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; plain tests still run
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import compression as comp
 from repro.core.licensing import (
