@@ -2,28 +2,37 @@
 
 Prints ``name,us_per_call,derived...`` CSV rows.  Usage:
   PYTHONPATH=src python -m benchmarks.run [--only storage,licensing,...]
+  PYTHONPATH=src python -m benchmarks.run --smoke       # CI smoke lane
+
+``--smoke`` runs every suite at reduced scale (suites whose ``run``
+accepts a ``smoke`` kwarg shrink their workloads) so CI can assert the
+perf scripts still execute end to end without burning minutes.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import sys
 import traceback
 
 SUITES = ("storage", "update", "licensing", "kernels", "serving", "gateway",
-          "roofline")
+          "paging", "roofline")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help=f"comma list from {SUITES}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced-scale run for CI (suites may shrink "
+                         "workloads; all assertions still fire)")
     args = ap.parse_args(argv)
     picked = args.only.split(",") if args.only else list(SUITES)
 
     from benchmarks import (gateway_bench, kernel_bench, licensing_ladder,
-                            roofline_table, serving_bench, storage_cost,
-                            update_latency)
+                            paging_bench, roofline_table, serving_bench,
+                            storage_cost, update_latency)
 
     modules = {
         "storage": storage_cost,        # paper Table 1
@@ -32,6 +41,7 @@ def main(argv=None) -> None:
         "kernels": kernel_bench,
         "serving": serving_bench,
         "gateway": gateway_bench,       # continuous batching vs single-stream
+        "paging": paging_bench,         # block-paged vs fixed-lane cache pool
         "roofline": roofline_table,     # deliverable (g)
     }
 
@@ -39,8 +49,11 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     for name in picked:
         mod = modules[name]
+        kw = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kw["smoke"] = True
         try:
-            for row in mod.run():
+            for row in mod.run(**kw):
                 base = {k: row.pop(k) for k in ("name", "us_per_call")}
                 print(f"{base['name']},{base['us_per_call']:.1f},"
                       + json.dumps(row, default=str))

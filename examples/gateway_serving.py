@@ -7,8 +7,11 @@ The Fig. 2 deployment with the gateway as the serving pod:
 2. boot a ``LicensedGateway`` from the server (full snapshot over the
    §3.1.2 delta protocol);
 3. stream mixed-tier requests with heterogeneous decode lengths — the
-   scheduler forms tier-homogeneous micro-batches over the shared cache
-   pool, and masked weight views are built once per (tier, version);
+   scheduler forms tier-homogeneous micro-batches over the shared
+   **block-paged** cache pool (oversubscribed here: 8 lanes on 18
+   blocks, so admission is bounded by blocks and the youngest request
+   is preempted/requeued if decode growth exhausts them), and masked
+   weight views are built once per (tier, version);
 4. publish a server-side weight update mid-service and ``sync()``: new
    admissions pin the new version, stale views are invalidated once the
    old version drains.
@@ -46,8 +49,13 @@ def main():
     # 2. serving pod: gateway boots from the server --------------------------
     template = jax.tree_util.tree_map(np.zeros_like, params)
     gw = LicensedGateway.from_server(cfg, server, "lm", template,
-                                     max_batch=4, max_prompt=8, max_new_cap=16)
-    print(f"[2] gateway online at weight version {gw.version}")
+                                     max_batch=4, max_prompt=8, max_new_cap=16,
+                                     block_size=8, max_lanes=8, num_blocks=18,
+                                     watermark_blocks=1)
+    pool = gw.pool.stats()
+    print(f"[2] gateway online at weight version {gw.version}; paged pool: "
+          f"{pool['num_blocks']} blocks x {pool['block_size']} tokens for "
+          f"{pool['num_lanes']} lanes (vmap width {gw.max_batch})")
 
     # 3. mixed-tier request stream ------------------------------------------
     reqs = [gw.submit(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
@@ -62,7 +70,9 @@ def main():
           f"({m['tokens_generated']} tokens) in {dt:.2f}s — "
           f"{m['decode_steps']} decode steps, {m['prefill_batches']} prefills; "
           f"view cache {m['view_cache']['hits']} hits / "
-          f"{m['view_cache']['misses']} misses")
+          f"{m['view_cache']['misses']} misses; "
+          f"peak {m['max_running']} concurrent on "
+          f"{m['max_blocks_in_use']} blocks, {m['preempted']} preempted")
     for r in reqs[:3]:
         print(f"    [{r.license:4s} v{r.version}] {r.out_tokens}")
 

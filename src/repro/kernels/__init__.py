@@ -6,6 +6,9 @@
 - flash_attention: online-softmax attention (GQA via index-map, sliding
   window, decode offsets) — the roofline-directed fix for the score-
   materialization traffic that dominates dense train/prefill rows
+- paged_attention: decode attention over the block-paged KV pool
+  (serving/paging.py) — the block table rides the grid as a scalar-
+  prefetch operand so each step DMAs exactly the blocks the table names
 
 ``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
 """

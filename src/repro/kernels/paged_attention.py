@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: paged-attention decode through a block table.
+
+The paged cache pool (``serving/paging.py``) stores K/V as fixed-size
+physical blocks shared by every request; a request's logical cache is the
+concatenation of the blocks named by its **block table**.  The host-side
+serving path materializes that view with a gather before the vmapped
+decode — one extra HBM round-trip per step.  This kernel removes it: the
+block table rides the grid as a **scalar-prefetch** operand, so each
+(sequence, block) grid step DMAs exactly the physical K/V block the table
+names straight into VMEM — decode reads each byte of cache exactly once,
+with no contiguous copy of the sequence ever existing.
+
+Layout: one query token per sequence (decode), GQA handled in-kernel by
+reshaping the query to (kv_heads, group, head_dim) and unrolling the
+(static, small) kv-head loop into 2-D MXU dots.  Online-softmax running
+stats (m, l) persist in output refs across the sequential innermost
+block-table axis, exactly like ``flash_attention.py``; positions at or
+beyond a sequence's ``context_lens`` (including anything read through
+null/pad table entries) are masked inert.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            *, scale: float, block_size: int, kv_heads: int, groups: int,
+            n_blocks: int):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    ctx = lens_ref[b]
+
+    @pl.when(t * block_size < ctx)          # skip fully-dead blocks
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale          # (H, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bs, KH, hd)
+        v = v_ref[0].astype(jnp.float32)
+        h, hd = q.shape
+        qg = q.reshape(kv_heads, groups, hd)
+
+        k_pos = t * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_size), 1)[0]
+        valid = k_pos < ctx                               # (bs,)
+
+        # per-kv-head 2-D dots (KH is static and small -> unrolled)
+        s = jnp.stack([
+            jax.lax.dot_general(qg[kh], k[:, kh], (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+            for kh in range(kv_heads)
+        ], 0).reshape(h, block_size)
+        s = jnp.where(valid[None, :], s, NEG_INF)
+
+        m_prev = m_ref[0]
+        l_prev = l_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, alpha)
+        pg = p.reshape(kv_heads, groups, block_size)
+        acc = jnp.stack([
+            jax.lax.dot_general(pg[kh], v[:, kh], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+            for kh in range(kv_heads)
+        ], 0).reshape(h, hd)
+        o_ref[0] = o_ref[0] * alpha[:, None] + acc
+        m_ref[0] = m_new
+        l_ref[0] = l_prev * alpha + jnp.sum(p, axis=-1)
+
+    @pl.when(t == n_blocks - 1)
+    def _normalize():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-20)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: jnp.ndarray,           # (B, H, hd)   one decode query per sequence
+    k_blocks: jnp.ndarray,    # (P, bs, KH, hd) physical key blocks
+    v_blocks: jnp.ndarray,    # (P, bs, KH, hd) physical value blocks
+    block_tables: jnp.ndarray,  # (B, T) int32; entry t covers positions
+                                # [t*bs, (t+1)*bs); pad entries may point
+                                # anywhere in [0, P) — they are masked
+    context_lens: jnp.ndarray,  # (B,) int32 valid cache length (pos + 1)
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Decode attention over a block-paged KV cache; returns (B, H, hd) f32.
+
+    GQA via ``H == KH * groups``.  The block table and context lengths are
+    scalar-prefetched so the BlockSpec index map can route each grid step's
+    DMA through the table — the gather lives in the kernel, not in HBM.
+    """
+    b, h, hd = q.shape
+    p_blocks, bs, kh, _ = k_blocks.shape
+    assert v_blocks.shape == k_blocks.shape, (v_blocks.shape, k_blocks.shape)
+    assert h % kh == 0, (h, kh)
+    groups = h // kh
+    n_t = block_tables.shape[1]
+    assert block_tables.shape[0] == b and context_lens.shape == (b,)
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_size=bs, kv_heads=kh, groups=groups,
+        n_blocks=n_t)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_t),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda b, t, tab, ln: (b, 0, 0)),
+            pl.BlockSpec((1, bs, kh, hd),
+                         lambda b, t, tab, ln: (tab[b, t], 0, 0, 0)),
+            pl.BlockSpec((1, bs, kh, hd),
+                         lambda b, t, tab, ln: (tab[b, t], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, hd), lambda b, t, tab, ln: (b, 0, 0)),
+            pl.BlockSpec((1, h), lambda b, t, tab, ln: (b, 0)),
+            pl.BlockSpec((1, h), lambda b, t, tab, ln: (b, 0)),
+        ],
+    )
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32),
+      jnp.asarray(context_lens, jnp.int32), q, k_blocks, v_blocks)
+    return out

@@ -48,6 +48,34 @@ def delta_apply(buf: jnp.ndarray, indices: jnp.ndarray, values: jnp.ndarray) -> 
     return buf.at[safe].set(vals.astype(buf.dtype))
 
 
+def paged_attention(q: jnp.ndarray, k_blocks: jnp.ndarray,
+                    v_blocks: jnp.ndarray, block_tables: jnp.ndarray,
+                    context_lens: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the paged decode kernel: gather-then-softmax attention.
+
+    q (B,H,hd); k/v blocks (P,bs,KH,hd); block_tables (B,T) concatenated
+    in logical order; context_lens (B,) masks positions >= len (including
+    everything read through pad table entries).
+    """
+    import numpy as _np
+
+    b, h, hd = q.shape
+    _, bs, kh, _ = k_blocks.shape
+    t = block_tables.shape[1]
+    groups = h // kh
+    k = jnp.repeat(k_blocks[block_tables].reshape(b, t * bs, kh, hd),
+                   groups, axis=2)
+    v = jnp.repeat(v_blocks[block_tables].reshape(b, t * bs, kh, hd),
+                   groups, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / _np.sqrt(hd)
+    mask = jnp.arange(t * bs)[None, :] < context_lens[:, None]
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, :].any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+
+
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: int = 0, q_offset: int = 0,
                     groups: int = 1) -> jnp.ndarray:

@@ -3,15 +3,20 @@
 ``ServingEngine`` (engine.py) is the seed's static-batch server;
 ``LicensedGateway`` (gateway.py) is the iteration-level scheduler that
 streams tier-tagged requests through (tier, version)-keyed masked
-weight views.  Host-side scheduling primitives live in scheduler.py.
+weight views.  Host-side scheduling primitives live in scheduler.py;
+the block-paged KV pool (``BlockAllocator``/``PagedCachePool``) the
+gateway serves from by default lives in paging.py.
 """
-from repro.serving.engine import Request, ServingEngine, prefill_step, sample, serve_step
+from repro.serving.engine import (Request, ServingEngine, prefill_step,
+                                  sample, sample_lane, serve_step)
 from repro.serving.gateway import LicensedGateway
+from repro.serving.paging import BlockAllocator, PagedCachePool
 from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
                                      ScheduledAction, Scheduler, TierViewCache)
 
 __all__ = [
-    "Request", "ServingEngine", "prefill_step", "sample", "serve_step",
-    "LicensedGateway", "GatewayRequest", "RequestState", "ScheduledAction",
-    "Scheduler", "CachePool", "TierViewCache",
+    "Request", "ServingEngine", "prefill_step", "sample", "sample_lane",
+    "serve_step", "LicensedGateway", "GatewayRequest", "RequestState",
+    "ScheduledAction", "Scheduler", "CachePool", "PagedCachePool",
+    "BlockAllocator", "TierViewCache",
 ]

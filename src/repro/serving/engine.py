@@ -68,6 +68,36 @@ def sample(logits: jnp.ndarray, key, *, temperature: float = 1.0,
     return jax.random.categorical(key, logits).astype(jnp.int32)
 
 
+def sample_lane(logits: jnp.ndarray, key, temperature, top_k, *,
+                with_rng: bool = True, with_topk: bool = True) -> jnp.ndarray:
+    """One lane's sampling step with *traced* temperature/top-k.
+
+    The gateway fuses this into its vmapped decode so each step ships one
+    token id per lane device->host instead of a full logits row.  Both
+    knobs are per-lane arrays under ``vmap``: greedy (argmax) where
+    ``temperature <= 0``, else temperature-scaled categorical; ``top_k``
+    is a traced int (0 = off) whose kth-largest threshold comes from a
+    descending sort, so lanes with different k share one compilation.
+    Matches :func:`sample` for any static ``top_k``.
+
+    ``with_rng``/``with_topk`` are *static* batch-level facts ("no lane
+    in this micro-batch samples / uses top-k") that let an all-greedy or
+    no-top-k batch skip the categorical draw and the O(V log V) sort
+    entirely — the traced per-lane knobs would otherwise keep both live
+    in the hot loop for every step.
+    """
+    greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+    if not with_rng:
+        return greedy
+    v = logits.shape[-1]
+    scaled = logits / jnp.maximum(temperature, 1e-6)
+    if with_topk:
+        kth = jnp.sort(scaled)[::-1][jnp.clip(top_k - 1, 0, v - 1)]
+        scaled = jnp.where((top_k > 0) & (scaled < kth), -jnp.inf, scaled)
+    drawn = jax.random.categorical(key, scaled[None])[0].astype(jnp.int32)
+    return jnp.where(temperature <= 0, greedy, drawn)
+
+
 @dataclass
 class Request:
     prompt: np.ndarray                 # (S,) int32

@@ -23,9 +23,29 @@ Two jitted functions, each compiled once per gateway:
   without draining the batch.
 
 Both take the weight view as an argument, so one compilation serves
-every tier and weight version.  KV/SSM state lives in the shared
-:class:`~repro.serving.scheduler.CachePool` and is gathered/scattered
-by lane id around each micro-batch.
+every tier and weight version.  By default each lane's logits feed a
+**fused on-device sampling step** (``engine.sample_lane``) so a decode
+step ships one token id per lane device->host instead of a full logits
+row; ``fuse_sampling=False`` (or ``record_logits=True``) is the
+return-logits escape hatch tests and the equivalence benchmark use.
+
+Cache memory
+------------
+KV/SSM state lives in a shared pool gathered/scattered around each
+micro-batch.  Two pool modes, selected by the ``paged`` config flag:
+
+* ``paged=True`` (default): a :class:`~repro.serving.paging.PagedCachePool`
+  — per-token KV leaves live as fixed-size physical blocks addressed
+  through per-request block tables, so short and long requests share the
+  pool without over-reserving, and ``max_lanes`` (concurrency) decouples
+  from ``max_batch`` (vmap width).  Admission is gated on free *blocks*
+  (plus a watermark); if decode exhausts the pool, the **youngest**
+  running request is preempted back to the queue head (recompute-style —
+  generation is deterministic per (seed, prompt, view), so the restart
+  reproduces its tokens).  Models with no per-token cache (pure SSM)
+  fall back to the contiguous pool automatically.
+* ``paged=False``: the seed fixed-slab :class:`CachePool`, one
+  ``capacity``-token lane per ``max_batch`` slot.
 
 Licensing integration
 ---------------------
@@ -60,28 +80,46 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.licensing import FULL_TIER, LicenseTier, apply_license
-from repro.serving.engine import prefill_step, right_align, sample, serve_step
+from repro.models import model as model_lib
+from repro.serving.engine import (prefill_step, right_align, sample,
+                                  sample_lane, serve_step)
+from repro.serving.paging import NoPagedLeavesError, PagedCachePool, cdiv
 from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
                                      ScheduledAction, Scheduler, TierViewCache)
 
 
 @functools.lru_cache(maxsize=None)
-def _compiled_steps(cfg: ModelConfig):
+def _compiled_steps(cfg: ModelConfig, fused: bool = False,
+                    with_rng: bool = True, with_topk: bool = True):
     """Jitted lane-vmapped prefill/decode, shared by every gateway on the
-    same (hashable, frozen) config — one compile per config and shape."""
+    same (hashable, frozen) config — one compile per (config, shape,
+    fused, rng, topk) key.  ``fused=True`` samples per lane on device and
+    returns token ids; ``fused=False`` returns the raw logits rows.
+    ``with_rng``/``with_topk`` specialize the fused sampler to the
+    micro-batch (all-greedy batches skip the categorical, no-top-k
+    batches skip the vocab sort) — at most 4 fused variants ever compile."""
 
-    def _prefill_one(view_params, tokens, cache, li):
+    def _finish(logits, seed, n_out, temp, top_k):
+        if not fused:
+            return logits
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), n_out)
+        return sample_lane(logits, key, temp, top_k,
+                           with_rng=with_rng, with_topk=with_topk)
+
+    def _prefill_one(view_params, tokens, cache, seed, n_out, temp, top_k, li):
         logits, cache = prefill_step(view_params, cfg, tokens[None], cache,
                                      license_intervals=li)
-        return logits[0], cache
+        return _finish(logits[0], seed, n_out, temp, top_k), cache
 
-    def _decode_one(view_params, tok, cache, pos, li):
+    def _decode_one(view_params, tok, cache, pos, seed, n_out, temp, top_k, li):
         logits, cache = serve_step(view_params, cfg, tok[None, None], cache,
                                    pos, license_intervals=li)
-        return logits[0], cache
+        return _finish(logits[0], seed, n_out, temp, top_k), cache
 
-    return (jax.jit(jax.vmap(_prefill_one, in_axes=(None, 0, 0, None))),
-            jax.jit(jax.vmap(_decode_one, in_axes=(None, 0, 0, 0, None))))
+    return (jax.jit(jax.vmap(_prefill_one,
+                             in_axes=(None, 0, 0, 0, 0, 0, 0, None))),
+            jax.jit(jax.vmap(_decode_one,
+                             in_axes=(None, 0, 0, 0, 0, 0, 0, 0, None))))
 
 
 class LicensedGateway:
@@ -104,7 +142,7 @@ class LicensedGateway:
         int8 mode only: run the fused masked-dequant once per
         (tier, version) and cache full-precision licensed views.
     max_batch:
-        Lanes per micro-batch == cache-pool lanes.
+        Lanes per micro-batch (the vmap width).
     max_prompt:
         Prompt bucket; longer prompts are rejected at admission.  Shorter
         prompts are right-aligned into the bucket with repeated-first-token
@@ -113,6 +151,25 @@ class LicensedGateway:
         unpadded shorter run.
     max_new_cap:
         Decode budget per lane; ``max_new_tokens`` is clamped to it.
+    paged:
+        Use the block-paged cache pool (default).  ``False`` selects the
+        seed contiguous ``CachePool`` — the fallback config every
+        pre-paging behavior maps onto.
+    block_size / num_blocks / max_lanes / watermark_blocks:
+        Paged-pool geometry.  ``num_blocks`` defaults to full
+        provisioning (``max_lanes * ceil(capacity/block_size)`` — equal
+        memory to the contiguous pool at ``max_lanes == max_batch``, and
+        preemption-free); size it smaller to oversubscribe.  Admission
+        requires ``watermark_blocks`` free blocks above a prefill's
+        need, reserving decode-growth headroom.
+    fuse_sampling:
+        Sample per lane on device and return token ids (default).
+        ``False`` is the return-logits escape hatch: logits rows come
+        back to the host and are sampled there (identical tokens).
+    record_logits:
+        Keep each emitted step's logits row on the request
+        (``req.logits_rows``) for equivalence tests; implies
+        ``fuse_sampling=False``.
     """
 
     def __init__(
@@ -127,6 +184,13 @@ class LicensedGateway:
         max_batch: int = 8,
         max_prompt: int = 32,
         max_new_cap: int = 64,
+        paged: bool = True,
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
+        max_lanes: Optional[int] = None,
+        watermark_blocks: int = 0,
+        fuse_sampling: bool = True,
+        record_logits: bool = False,
         view_capacity: int = 8,
         version: int = 1,
         server: Any = None,
@@ -151,13 +215,48 @@ class LicensedGateway:
         self.tiers.setdefault("full", FULL_TIER)
         self.views = TierViewCache(self._materialize, capacity=view_capacity)
 
-        self.pool = CachePool(cfg, self.max_batch, self.capacity)
-        self.scheduler = Scheduler(self.max_batch, self.max_batch)
-        self._zero_lane = jax.tree_util.tree_map(
-            lambda x: x[:1], self.pool.cache)  # pristine batch-1 cache
+        self.record_logits = bool(record_logits)
+        self.fuse_sampling = bool(fuse_sampling) and not self.record_logits
+        self.paged = bool(paged)
+        if self.paged:
+            self.max_lanes = int(max_lanes or self.max_batch)
+            bpl = cdiv(self.capacity, int(block_size))
+            try:
+                self.pool = PagedCachePool(
+                    cfg, self.max_lanes, self.capacity, int(block_size),
+                    int(num_blocks) if num_blocks is not None
+                    else self.max_lanes * bpl)
+            except NoPagedLeavesError:
+                # no per-token cache leaves (pure-recurrent model, or a
+                # sliding window below the pool capacity caps every
+                # attention cache): per-lane state is constant-size, so
+                # paging has nothing to page — fall back to the slab
+                self.paged = False
+        if self.paged:
+            self._prefill_blocks = max(
+                1, cdiv(self.max_prompt, self.pool.block_size))
+            if (self.pool.num_blocks - int(watermark_blocks)
+                    < self._prefill_blocks):
+                raise ValueError(
+                    f"watermark_blocks={watermark_blocks} leaves no room to "
+                    f"admit a prefill ({self._prefill_blocks} blocks of "
+                    f"{self.pool.num_blocks}) — the gateway would accept "
+                    f"requests and never schedule them")
+            self.scheduler = Scheduler(
+                self.max_lanes, self.max_batch,
+                allocator=self.pool.allocator,
+                prefill_blocks=self._prefill_blocks,
+                watermark_blocks=int(watermark_blocks))
+            zero_cap = self.pool.padded_capacity
+        else:
+            self.max_lanes = self.max_batch
+            self.pool = CachePool(cfg, self.max_batch, self.capacity)
+            self.scheduler = Scheduler(self.max_batch, self.max_batch)
+            zero_cap = self.capacity
+        lane0 = model_lib.init_cache(cfg, 1, zero_cap)  # pristine batch-1 cache
         self._zero_lanes = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x, (self.max_batch, *x.shape[1:])),
-            self._zero_lane,
+            lambda x: jnp.broadcast_to(x[None], (self.max_batch, *x.shape)),
+            lane0,
         )
 
         self._server = server
@@ -178,11 +277,26 @@ class LicensedGateway:
         self.stats: Dict[str, int] = {
             "admitted": 0, "rejected": 0, "completed": 0,
             "prefill_batches": 0, "decode_steps": 0, "tokens_generated": 0,
+            "preempted": 0, "max_running": 0, "max_blocks_in_use": 0,
         }
 
-        # one compile each, shared by every (tier, version) view and by
-        # every gateway instance over the same config
-        self._prefill, self._decode = _compiled_steps(cfg)
+        # build the jit pair for the common case (all-greedy when fused);
+        # _steps() dispatches per micro-batch, sharing the lru entries
+        # across gateway instances over the same config
+        if self.fuse_sampling:
+            _compiled_steps(cfg, True, False, False)
+        else:
+            _compiled_steps(cfg, False)
+
+    def _steps(self, reqs: List[GatewayRequest]):
+        """(prefill, decode) jitted pair specialized to this micro-batch's
+        sampling needs; batches with no stochastic lane skip the
+        categorical draw, batches with no top-k lane skip the sort."""
+        if not self.fuse_sampling:
+            return _compiled_steps(self.cfg, False)
+        with_rng = any(r.temperature > 0 for r in reqs)
+        with_topk = with_rng and any(r.top_k for r in reqs)
+        return _compiled_steps(self.cfg, True, with_rng, with_topk)
 
     # ------------------------------------------------------------ weight views
     def _resolve_tier(self, name: str) -> LicenseTier:
@@ -255,13 +369,24 @@ class LicensedGateway:
 
     # -------------------------------------------------------------- admission
     def submit(self, prompt, *, license: str = "full", max_new_tokens: int = 16,
-               temperature: float = 0.0, seed: int = 0) -> GatewayRequest:
+               temperature: float = 0.0, top_k: int = 0,
+               seed: int = 0) -> GatewayRequest:
         """Admit one request: validate the tier, pin the weight version."""
         req = GatewayRequest(
             prompt=np.asarray(prompt, np.int32).reshape(-1),
             max_new_tokens=min(int(max_new_tokens), self.max_new_cap),
-            license=license, temperature=temperature, seed=seed,
+            license=license,
+            # snap sub-epsilon temperatures to greedy: the fused sampler
+            # clamps its divisor at 1e-6, so only the t <= 0 branch keeps
+            # the fused and host paths token-identical down there
+            temperature=0.0 if temperature <= 1e-6 else temperature,
+            # top_k >= vocab truncates nothing; clamping keeps the host
+            # sampler (lax.top_k needs k <= vocab) and the fused sampler
+            # (clips its kth index) on identical behavior
+            top_k=min(max(0, int(top_k)), self.cfg.padded_vocab), seed=seed,
         )
+        if self.record_logits:
+            req.logits_rows = []
         req.rid = self._next_rid
         self._next_rid += 1
         req.submit_t = time.perf_counter()
@@ -285,6 +410,13 @@ class LicensedGateway:
             req.error = "max_new_tokens < 1"
             self.stats["rejected"] += 1
             return req
+        if not -2**31 <= int(seed) < 2**31:
+            # seeds ride the fused sampler as an int32 lane array; an
+            # out-of-range one must bounce here, not crash the run() loop
+            req.state = RequestState.REJECTED
+            req.error = f"seed {seed} outside int32 range"
+            self.stats["rejected"] += 1
+            return req
         req.version = self.version
         self.scheduler.submit(req)
         self.stats["admitted"] += 1
@@ -300,7 +432,11 @@ class LicensedGateway:
             self._run_prefill(act)
         else:
             self._run_decode(act)
-        self.trace.append((act.kind, act.tier, act.version, len(act.requests)))
+        # a decode whose whole batch was preempted executed nothing —
+        # keep the trace invariant that every entry covers >= 1 request
+        if act.requests:
+            self.trace.append((act.kind, act.tier, act.version,
+                               len(act.requests)))
         return act
 
     def run(self, max_steps: int = 1_000_000) -> List[GatewayRequest]:
@@ -315,57 +451,166 @@ class LicensedGateway:
             self._drain_sink = None
         return drained
 
+    def _sampling_lanes(self, reqs):
+        """Per-lane (seed, n_generated, temperature, top_k) arrays for the
+        fused sampler; padding lanes sample junk that is discarded."""
+        seeds = np.zeros(self.max_batch, np.int32)
+        nouts = np.zeros(self.max_batch, np.int32)
+        temps = np.zeros(self.max_batch, np.float32)
+        topks = np.zeros(self.max_batch, np.int32)
+        for i, r in enumerate(reqs):
+            seeds[i] = r.seed
+            nouts[i] = len(r.out_tokens)
+            temps[i] = r.temperature
+            topks[i] = r.top_k
+        return (jnp.asarray(seeds), jnp.asarray(nouts), jnp.asarray(temps),
+                jnp.asarray(topks))
+
     def _run_prefill(self, act: ScheduledAction) -> None:
         view_params, li = self.views.get(act.tier, act.version)
         reqs = act.requests
         toks = right_align([r.prompt for r in reqs], self.max_prompt,
                            self.max_batch)
-        logits, lane_caches = self._prefill(view_params, jnp.asarray(toks),
-                                            self._zero_lanes, li)
+        seeds, nouts, temps, topks = self._sampling_lanes(reqs)
+        prefill, _ = self._steps(reqs)
+        outs, lane_caches = prefill(view_params, jnp.asarray(toks),
+                                    self._zero_lanes, seeds, nouts,
+                                    temps, topks, li)
         lanes = [self.scheduler.start(r) for r in reqs]
-        self.pool.scatter(self.pool.pad_lanes(lanes, self.max_batch),
-                          lane_caches)
-        logits = np.asarray(logits)
+        self.stats["max_running"] = max(self.stats["max_running"],
+                                        len(self.scheduler.running))
+        if self.paged:
+            for r in reqs:
+                got = self.pool.allocator.alloc(self._prefill_blocks)
+                assert got is not None, \
+                    "scheduler admitted past the block budget"
+                r.blocks = got
+            self._note_block_use()
+            tables = self.pool.pad_tables([r.blocks for r in reqs],
+                                          self.max_batch)
+            self.pool.scatter(self.pool.pad_lanes(lanes, self.max_batch),
+                              tables, lane_caches)
+        else:
+            self.pool.scatter(self.pool.pad_lanes(lanes, self.max_batch),
+                              lane_caches)
+        outs = np.asarray(outs)
         now = time.perf_counter()
         for i, r in enumerate(reqs):
             r.pos = self.max_prompt
             r.first_token_t = now
-            self._emit(r, logits[i])
+            if self.fuse_sampling:
+                self._emit(r, tok=int(outs[i]))
+            else:
+                self._emit(r, logits_row=outs[i])
         self.stats["prefill_batches"] += 1
 
+    def _grow_block_tables(self, reqs: List[GatewayRequest]) \
+            -> List[GatewayRequest]:
+        """Give every request the block its next decode write needs.
+
+        On pool exhaustion, preempt the youngest running request (free its
+        blocks, requeue it at the queue head) and retry; a victim inside
+        this micro-batch is dropped from it.  Terminates because the pool
+        holds at least one full request (constructor guard) and the
+        oldest running request is never chosen while others run.
+        """
+        keep = list(reqs)
+        for r in list(keep):
+            if r.state != RequestState.RUNNING:
+                continue                   # preempted earlier in this pass
+            needed = r.pos // self.pool.block_size + 1
+            while len(r.blocks) < needed:
+                got = self.pool.allocator.alloc(1)
+                if got is not None:
+                    r.blocks.extend(got)
+                    continue
+                victim = self.scheduler.youngest_running()
+                if victim is r and len(self.scheduler.running) == 1:
+                    raise RuntimeError(
+                        "block pool exhausted by a single request")
+                self._preempt(victim)
+                if victim in keep:
+                    keep.remove(victim)
+                if victim is r:
+                    break
+        self._note_block_use()
+        return keep
+
+    def _preempt(self, req: GatewayRequest) -> None:
+        if req.blocks:
+            self.pool.allocator.free(req.blocks)
+            req.blocks = []
+        # the restart will re-emit these tokens; keep the counter equal to
+        # tokens actually delivered
+        self.stats["tokens_generated"] -= len(req.out_tokens)
+        self.scheduler.preempt(req)
+        self.stats["preempted"] += 1
+
+    def _note_block_use(self) -> None:
+        self.stats["max_blocks_in_use"] = max(
+            self.stats["max_blocks_in_use"], self.pool.allocator.num_held)
+
     def _run_decode(self, act: ScheduledAction) -> None:
+        if self.paged:
+            act.requests = self._grow_block_tables(act.requests)
+            if not act.requests:
+                return                     # whole batch preempted
         view_params, li = self.views.get(act.tier, act.version)
         reqs = act.requests
-        n = len(reqs)
         lanes = self.pool.pad_lanes([r.lane for r in reqs], self.max_batch)
         toks = np.zeros(self.max_batch, np.int32)
         poss = np.zeros(self.max_batch, np.int32)
         for i, r in enumerate(reqs):
             toks[i] = r.out_tokens[-1]
             poss[i] = r.pos
-        caches = self.pool.gather(lanes)
-        logits, caches = self._decode(view_params, jnp.asarray(toks), caches,
-                                      jnp.asarray(poss), li)
-        self.pool.scatter(lanes, caches)
-        logits = np.asarray(logits)
+        seeds, nouts, temps, topks = self._sampling_lanes(reqs)
+        if self.paged:
+            tables = self.pool.pad_tables([r.blocks for r in reqs],
+                                          self.max_batch)
+            caches = self.pool.gather(lanes, tables)
+        else:
+            caches = self.pool.gather(lanes)
+        _, decode = self._steps(reqs)
+        outs, caches = decode(view_params, jnp.asarray(toks), caches,
+                              jnp.asarray(poss), seeds, nouts, temps,
+                              topks, li)
+        if self.paged:
+            self.pool.scatter(lanes, tables, caches)
+        else:
+            self.pool.scatter(lanes, caches)
+        outs = np.asarray(outs)
         for i, r in enumerate(reqs):
             r.pos += 1
-            self._emit(r, logits[i])
+            if self.fuse_sampling:
+                self._emit(r, tok=int(outs[i]))
+            else:
+                self._emit(r, logits_row=outs[i])
         self.stats["decode_steps"] += 1
 
-    def _emit(self, req: GatewayRequest, logits_row: np.ndarray) -> None:
-        """Sample one token for ``req`` and retire it if it is finished."""
-        if req.temperature <= 0:
-            tok = int(np.argmax(logits_row))
-        else:
-            key = jax.random.fold_in(jax.random.PRNGKey(req.seed),
-                                     len(req.out_tokens))
-            tok = int(sample(jnp.asarray(logits_row)[None], key,
-                             temperature=req.temperature)[0])
+    def _emit(self, req: GatewayRequest, tok: Optional[int] = None,
+              logits_row: Optional[np.ndarray] = None) -> None:
+        """Append one token (sampled on host from ``logits_row`` when the
+        fused path is off) and retire the request if it is finished."""
+        if tok is None:
+            if req.logits_rows is not None:
+                req.logits_rows.append(np.asarray(logits_row, np.float32))
+            if req.temperature <= 0:
+                tok = int(np.argmax(logits_row))
+            else:
+                # host side top_k is concrete -> the static sample() path
+                # (skips sample_lane's traced-k sort); same tokens either way
+                key = jax.random.fold_in(jax.random.PRNGKey(req.seed),
+                                         len(req.out_tokens))
+                tok = int(sample(jnp.asarray(logits_row)[None], key,
+                                 temperature=req.temperature,
+                                 top_k=req.top_k)[0])
         req.out_tokens.append(tok)
         self.stats["tokens_generated"] += 1
         if len(req.out_tokens) >= req.max_new_tokens:
             self.scheduler.finish(req)
+            if self.paged and req.blocks:
+                self.pool.allocator.free(req.blocks)
+                req.blocks = []
             self.completed.append(req)
             if self._drain_sink is not None:
                 self._drain_sink.append(req)
@@ -444,9 +689,12 @@ class LicensedGateway:
 
     # ---------------------------------------------------------------- metrics
     def metrics(self) -> Dict[str, Any]:
-        """Counters + latency percentiles over completed requests."""
+        """Counters, queue-wait ages, pool occupancy, latency percentiles."""
         out: Dict[str, Any] = dict(self.stats)
         out["view_cache"] = self.views.stats()
+        out["oldest_wait_s"] = self.scheduler.oldest_wait_s()
+        out["queue_wait_by_tier"] = self.scheduler.queue_wait_by_tier()
+        out["cache_pool"] = {"paged": self.paged, **self.pool.stats()}
         lats = [r.latency for r in self.completed if r.latency is not None]
         if lats:
             out["latency_p50_ms"] = float(np.percentile(lats, 50) * 1e3)

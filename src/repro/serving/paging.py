@@ -1,0 +1,269 @@
+"""Block-paged KV cache pool: vLLM-style paging under the licensed gateway.
+
+The seed :class:`~repro.serving.scheduler.CachePool` reserves one
+``capacity``-token KV slab per lane, so a 4-token request strands as much
+cache memory as a 64-token one and the lane count — not the memory — caps
+concurrency.  This module replaces the slab with **fixed-size blocks**:
+
+* :class:`BlockAllocator` — a host-side free list of physical block ids.
+  Requests allocate blocks on demand (``ceil(max_prompt/block_size)`` at
+  prefill, one more whenever decode crosses a block boundary) and return
+  them all on finish or preemption, so short and long requests share the
+  pool without over-reserving.
+* :class:`PagedCachePool` — the device-side store.  Per-token cache
+  leaves (attention K/V, MLA compressed KV, int8 KV scales) live as
+  ``(num_blocks + 1, ..., block_size, ...)`` physical blocks addressed
+  through per-request **block tables**; constant-size per-lane state
+  (SSM conv/state, RG-LRU state, ``len`` counters, sliding-window ring
+  caches whose window is below the pool capacity) stays lane-stacked
+  exactly like ``CachePool``.
+
+``gather(lanes, tables)`` materializes each lane's logical cache as a
+contiguous batch-1 view (block-table order == logical order — blocks are
+appended as the sequence grows), so the gateway's lane-vmapped
+prefill/decode runs unmodified; ``scatter`` writes the views back through
+the same tables.  Index ``num_blocks`` is a *null block* and index
+``num_lanes`` a *scratch lane*: both absorb the writes of padding rows so
+duplicate pad indices can never corrupt a live request.  The
+TPU-compiled decode path that skips the materialized view and gathers
+K/V inside the kernel is ``kernels/paged_attention.py``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_lane_ids(lanes: Sequence[int], width: int,
+                 scratch: int) -> List[int]:
+    """Pad a lane-id list to ``width`` with the scratch lane (shared by
+    the contiguous and paged pools so the padding contract can't drift)."""
+    lanes = list(lanes)
+    assert len(lanes) <= width, (len(lanes), width)
+    return lanes + [scratch] * (width - len(lanes))
+
+
+class NoPagedLeavesError(ValueError):
+    """The model's cache holds no per-token leaves to page (pure-recurrent,
+    or every attention window is below the pool capacity).  The gateway
+    catches exactly this to fall back to the contiguous pool; genuine
+    geometry errors stay plain ``ValueError`` and propagate."""
+
+
+class BlockAllocator:
+    """Free list of physical cache blocks with double-alloc/free guards.
+
+    Allocation is all-or-nothing (``alloc`` returns ``None`` rather than a
+    partial grant) so a caller never holds a half-provisioned request.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        self.num_blocks = int(num_blocks)
+        self._free: List[int] = list(range(self.num_blocks))
+        self._held: set = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_held(self) -> int:
+        return len(self._held)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Atomically allocate ``n`` blocks; None if the pool can't cover it."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self._held.update(got)
+        return got
+
+    def free(self, blocks: Sequence[int]) -> None:
+        """Return blocks to the pool; double-frees and foreign ids raise."""
+        for b in blocks:
+            if b not in self._held:
+                raise ValueError(f"free of unallocated block {b}")
+            self._held.discard(b)
+            self._free.append(b)
+
+    def stats(self) -> Dict[str, int]:
+        return {"num_blocks": self.num_blocks, "free": self.num_free,
+                "held": self.num_held}
+
+
+class PagedCachePool:
+    """Block-paged KV/SSM cache store behind per-request block tables.
+
+    Parameters
+    ----------
+    cfg:
+        Model config; the cache pytree layout comes from
+        ``model.init_cache``.
+    num_lanes:
+        Per-lane state slots.  Decoupled from the gateway's ``max_batch``
+        vmap width: with paging, concurrency is bounded by *blocks*, so a
+        gateway can run more lanes than it decodes per step.
+    capacity:
+        Logical per-request token capacity (prompt bucket + decode cap).
+    block_size:
+        Tokens per physical block.
+    num_blocks:
+        Physical blocks shared by every lane and license tier.  Must be
+        at least ``blocks_per_lane`` so one full-capacity request always
+        fits (the preemption policy's termination guarantee).
+    """
+
+    def __init__(self, cfg: ModelConfig, num_lanes: int, capacity: int,
+                 block_size: int, num_blocks: int):
+        self.cfg = cfg
+        self.num_lanes = int(num_lanes)
+        self.capacity = int(capacity)
+        self.block_size = int(block_size)
+        self.num_blocks = int(num_blocks)
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.blocks_per_lane = cdiv(self.capacity, self.block_size)
+        # the vmapped model sees this (static) capacity; positions beyond
+        # the logical capacity are dead weight masked by the cache ``len``
+        self.padded_capacity = self.blocks_per_lane * self.block_size
+        if self.num_blocks < self.blocks_per_lane:
+            raise ValueError(
+                f"num_blocks={num_blocks} cannot hold one full request "
+                f"({self.blocks_per_lane} blocks of {self.block_size})")
+        self.allocator = BlockAllocator(self.num_blocks)
+
+        # Classify cache leaves by probing init_cache at two capacities:
+        # a leaf whose shape grows by exactly block_size along one axis is
+        # per-token (paged); anything else — SSM/LRU state, len counters,
+        # window ring caches already capped below the pool capacity — is
+        # constant-size per-lane state.
+        template = model_lib.init_cache(cfg, 1, self.padded_capacity)
+        probe = model_lib.init_cache(
+            cfg, 1, self.padded_capacity + self.block_size)
+        t_leaves, self._treedef = jax.tree_util.tree_flatten(template)
+        p_leaves, _ = jax.tree_util.tree_flatten(probe)
+        self._meta: List[Tuple[bool, int]] = []   # (paged, capacity axis)
+        self._storage: List[jnp.ndarray] = []
+        for t, p in zip(t_leaves, p_leaves):
+            diff = [i for i, (a, b) in enumerate(zip(t.shape, p.shape))
+                    if a != b]
+            if len(diff) == 1 and p.shape[diff[0]] - t.shape[diff[0]] == \
+                    self.block_size:
+                axis = diff[0]
+                shape = list(t.shape)
+                shape[axis] = self.block_size
+                self._meta.append((True, axis))
+                self._storage.append(
+                    jnp.zeros((self.num_blocks + 1, *shape), t.dtype))
+            else:
+                self._meta.append((False, -1))
+                self._storage.append(jnp.broadcast_to(
+                    t[None], (self.num_lanes + 1, *t.shape)))
+        if not any(paged for paged, _ in self._meta):
+            raise NoPagedLeavesError(
+                "no per-token cache leaves to page (pure-recurrent model); "
+                "use the contiguous CachePool instead")
+
+    # ------------------------------------------------------------- indices
+    @property
+    def scratch(self) -> int:
+        """Scratch lane id absorbing padded per-lane-state writes."""
+        return self.num_lanes
+
+    @property
+    def null_block(self) -> int:
+        """Null block id absorbing padded block-table writes."""
+        return self.num_blocks
+
+    @property
+    def cache_tokens(self) -> int:
+        """Token capacity of the shared pool (excludes the null block)."""
+        return self.num_blocks * self.block_size
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(x.nbytes) for x in self._storage)
+
+    def pad_lanes(self, lanes: Sequence[int], width: int) -> List[int]:
+        return pad_lane_ids(lanes, width, self.scratch)
+
+    def pad_tables(self, tables: Sequence[Sequence[int]],
+                   width: int) -> np.ndarray:
+        """(width, blocks_per_lane) int32 table matrix, null-padded."""
+        assert len(tables) <= width, (len(tables), width)
+        out = np.full((width, self.blocks_per_lane), self.null_block,
+                      np.int32)
+        for i, t in enumerate(tables):
+            assert len(t) <= self.blocks_per_lane, (len(t),
+                                                    self.blocks_per_lane)
+            out[i, : len(t)] = t
+        return out
+
+    # ------------------------------------------------------- gather/scatter
+    def gather(self, lanes: Sequence[int], tables) -> Any:
+        """Materialize per-lane contiguous cache views for a micro-batch.
+
+        ``tables`` is (B, blocks_per_lane) int32; entry order is logical
+        order, so concatenating a lane's blocks reconstructs positions
+        ``[0, padded_capacity)``.  Unallocated (null) entries contribute
+        garbage beyond the lane's valid length, which the attention mask
+        (``kv_len``) never reads.
+        """
+        lane_idx = jnp.asarray(lanes, jnp.int32)
+        tab = jnp.asarray(tables, jnp.int32)
+        leaves = []
+        for arr, (paged, axis) in zip(self._storage, self._meta):
+            if paged:
+                g = jnp.moveaxis(arr[tab], 1, 1 + axis)
+                s = g.shape
+                g = g.reshape(*s[: 1 + axis], s[1 + axis] * s[2 + axis],
+                              *s[3 + axis:])
+                leaves.append(g)
+            else:
+                leaves.append(arr[lane_idx])
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    def scatter(self, lanes: Sequence[int], tables, caches) -> None:
+        """Write batch views back: paged leaves through their block tables,
+        per-lane state by lane id.  Padding rows target the null block /
+        scratch lane, so duplicate pad indices never race a live lane."""
+        lane_idx = jnp.asarray(lanes, jnp.int32)
+        tab = jnp.asarray(tables, jnp.int32)
+        new_leaves, treedef = jax.tree_util.tree_flatten(caches)
+        assert treedef == self._treedef
+        out = []
+        for arr, new, (paged, axis) in zip(self._storage, new_leaves,
+                                           self._meta):
+            if paged:
+                s = new.shape
+                v = new.reshape(*s[: 1 + axis], s[1 + axis] // self.block_size,
+                                self.block_size, *s[2 + axis:])
+                v = jnp.moveaxis(v, 1 + axis, 1)
+                out.append(arr.at[tab].set(v.astype(arr.dtype)))
+            else:
+                out.append(arr.at[lane_idx].set(new.astype(arr.dtype)))
+        self._storage = out
+
+    def stats(self) -> Dict[str, int]:
+        st = self.allocator.stats()
+        st.update(block_size=self.block_size, cache_tokens=self.cache_tokens,
+                  blocks_per_lane=self.blocks_per_lane,
+                  num_lanes=self.num_lanes)
+        return st

@@ -22,9 +22,11 @@ pieces here are pure host-side bookkeeping; the jitted compute lives in
   key instead of once per request (shared with ``ServingEngine``);
 * ``CachePool``        — lane-stacked KV/SSM cache pool shared by every
   tier, with gather/scatter by lane id and a scratch lane that absorbs
-  padded writes;
+  padded writes (the contiguous fallback; the default block-paged pool
+  is ``serving/paging.py``);
 * ``Scheduler``        — admission queue + the prefill-priority,
-  tier-round-robin policy that picks the next micro-batch.
+  queue-age-fair, block-budgeted policy that picks the next micro-batch
+  (and the preemption hook the paged pool's exhaustion path uses).
 """
 from __future__ import annotations
 
@@ -40,6 +42,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
+from repro.serving.paging import pad_lane_ids
 
 
 class RequestState(str, Enum):
@@ -63,6 +66,7 @@ class GatewayRequest:
     max_new_tokens: int = 16
     license: str = "full"
     temperature: float = 0.0
+    top_k: int = 0                           # 0 = no top-k truncation
     seed: int = 0
 
     # assigned by the gateway
@@ -71,7 +75,11 @@ class GatewayRequest:
     state: RequestState = RequestState.QUEUED
     out_tokens: List[int] = field(default_factory=list)
     lane: Optional[int] = None               # cache-pool lane while RUNNING
+    blocks: List[int] = field(default_factory=list)  # paged-pool block table
     pos: int = 0                             # next decode position
+    start_seq: int = -1                      # admission order (preemption age)
+    preemptions: int = 0
+    logits_rows: Optional[List[np.ndarray]] = None   # record_logits only
     error: Optional[str] = None
     submit_t: float = 0.0
     first_token_t: Optional[float] = None
@@ -190,11 +198,28 @@ class CachePool:
     def scratch(self) -> int:
         return self.num_lanes
 
+    @property
+    def cache_tokens(self) -> int:
+        """Token capacity reserved across lanes (excludes the scratch lane);
+        the equal-memory axis the paged-pool benchmark compares on."""
+        return self.num_lanes * self.capacity
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(x.nbytes) for x in jax.tree_util.tree_leaves(self.cache))
+
+    def stats(self) -> Dict[str, int]:
+        """Occupancy facts.  Shares only the ``cache_tokens``/``num_lanes``
+        core with ``PagedCachePool.stats`` — block-geometry keys
+        (``num_blocks``, ``free``, ...) exist only on the paged pool, so
+        pool-agnostic callers must key off ``metrics()['cache_pool']['paged']``
+        before reading them."""
+        return {"cache_tokens": self.cache_tokens,
+                "num_lanes": self.num_lanes, "capacity": self.capacity}
+
     def pad_lanes(self, lanes: Sequence[int], width: int) -> List[int]:
         """Pad a lane-id list to ``width`` with the scratch lane."""
-        lanes = list(lanes)
-        assert len(lanes) <= width, (len(lanes), width)
-        return lanes + [self.scratch] * (width - len(lanes))
+        return pad_lane_ids(lanes, width, self.scratch)
 
     def gather(self, lanes: Sequence[int]):
         idx = jnp.asarray(lanes, jnp.int32)
@@ -209,24 +234,40 @@ class CachePool:
 
 
 class Scheduler:
-    """Prefill-priority continuous-batching policy.
+    """Prefill-priority continuous-batching policy with block-aware admission.
 
-    * admission is FIFO; a prefill batch takes the oldest waiting request
-      and every same-(tier, version) request behind it, up to the free
-      lane count and ``max_batch`` — tier homogeneity by construction;
+    * admission serves the waiting (tier, version) group whose **oldest
+      member has waited longest** (queue-wait aging, not deque position —
+      the two differ once a preempted request is requeued at the front),
+      then every same-key request in queue order, up to the free lane
+      count, ``max_batch``, and — when a block allocator is attached —
+      the free-block budget above the watermark.  Aging means a hot
+      tier's prefill stream cannot starve another tier's queued requests:
+      whichever group is oldest is served next, regardless of how many
+      hot-tier requests sit in front of it.
     * with nothing to prefill, decode round-robins over the running
       (tier, version) groups so no tier starves, rotating *within* a
-      group when it exceeds ``max_batch``.
+      group when it exceeds ``max_batch``;
+    * :meth:`preempt` returns a running request to the *front* of the
+      queue (it keeps its original ``submit_t``, so aging re-admits it
+      first) — the gateway invokes it on the youngest running request
+      when the block pool is exhausted mid-decode.
     """
 
-    def __init__(self, num_lanes: int, max_batch: int):
+    def __init__(self, num_lanes: int, max_batch: int, *,
+                 allocator: Any = None, prefill_blocks: int = 0,
+                 watermark_blocks: int = 0):
         self.num_lanes = int(num_lanes)
         self.max_batch = int(max_batch)
+        self.allocator = allocator
+        self.prefill_blocks = int(prefill_blocks)
+        self.watermark_blocks = int(watermark_blocks)
         self.waiting: Deque[GatewayRequest] = deque()
         self.running: List[GatewayRequest] = []
         self._free_lanes: List[int] = list(range(num_lanes))
         self._rr = 0
         self._group_cursor: Dict[Hashable, int] = {}
+        self._start_seq = 0
 
     # ----------------------------------------------------------- bookkeeping
     def submit(self, req: GatewayRequest) -> None:
@@ -241,6 +282,8 @@ class Scheduler:
         lane = self._free_lanes.pop()
         req.lane = lane
         req.state = RequestState.RUNNING
+        req.start_seq = self._start_seq
+        self._start_seq += 1
         self.running.append(req)
         return lane
 
@@ -253,16 +296,73 @@ class Scheduler:
         req.state = RequestState.DONE
         req.finish_t = time.perf_counter()
 
+    def preempt(self, req: GatewayRequest) -> None:
+        """Evict a running request back to the head of the queue.
+
+        The request restarts from scratch on re-admission (recompute
+        preemption): generation is deterministic given (seed, prompt,
+        view), so a restarted request reproduces its evicted tokens.
+        Caller is responsible for releasing any cache blocks it held.
+        """
+        self.running.remove(req)
+        if req.lane is not None:
+            self._free_lanes.append(req.lane)
+        req.lane = None
+        req.pos = 0
+        req.out_tokens.clear()
+        if req.logits_rows is not None:
+            req.logits_rows.clear()
+        req.first_token_t = None
+        req.preemptions += 1
+        req.state = RequestState.QUEUED
+        self.waiting.appendleft(req)
+
+    def youngest_running(self) -> Optional[GatewayRequest]:
+        """Most recently started request — the preemption victim."""
+        if not self.running:
+            return None
+        return max(self.running, key=lambda r: r.start_seq)
+
     def pinned_versions(self) -> set:
         """Weight versions still referenced by queued or running requests."""
         return {r.version for r in self.waiting} | {r.version for r in self.running}
 
+    # --------------------------------------------------------- wait metrics
+    def oldest_wait_s(self, now: Optional[float] = None) -> float:
+        """Age of the oldest queued request (0.0 with an empty queue)."""
+        if not self.waiting:
+            return 0.0
+        now = time.perf_counter() if now is None else now
+        return now - min(r.submit_t for r in self.waiting)
+
+    def queue_wait_by_tier(self, now: Optional[float] = None) -> Dict[str, float]:
+        """Per-tier age of the oldest queued request."""
+        now = time.perf_counter() if now is None else now
+        out: Dict[str, float] = {}
+        for r in self.waiting:
+            age = now - r.submit_t
+            out[r.license] = max(out.get(r.license, 0.0), age)
+        return out
+
     # ---------------------------------------------------------------- policy
+    def _prefill_room(self) -> int:
+        room = min(len(self._free_lanes), self.max_batch)
+        if self.allocator is not None and self.prefill_blocks > 0:
+            budget = self.allocator.num_free - self.watermark_blocks
+            room = min(room, max(0, budget // self.prefill_blocks))
+        return room
+
     def next_action(self) -> Optional[ScheduledAction]:
-        free = len(self._free_lanes)
-        if free and self.waiting:
-            key = self.waiting[0].group_key
-            room = min(free, self.max_batch)
+        room = self._prefill_room()
+        if room and self.waiting:
+            # aging: serve the group whose oldest member arrived first;
+            # deque position breaks ties (plain FIFO when ages are equal)
+            oldest: Dict[Tuple, Tuple[float, int]] = {}
+            for i, r in enumerate(self.waiting):
+                cand = (r.submit_t, i)
+                if r.group_key not in oldest or cand < oldest[r.group_key]:
+                    oldest[r.group_key] = cand
+            key = min(oldest, key=lambda k: oldest[k])
             batch: List[GatewayRequest] = []
             remaining: Deque[GatewayRequest] = deque()
             for r in self.waiting:               # one pass: select + requeue

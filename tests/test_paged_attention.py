@@ -1,0 +1,114 @@
+"""Paged-attention decode kernel vs the gather-then-softmax oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; plain tests still run
+    from _hypothesis_compat import given, settings, st
+
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_attention
+
+
+def mk(seed, b, h, hd, p, bs, t, kh=None, max_len=None):
+    """Random decode case: disjoint per-sequence block tables + ragged lens."""
+    r = np.random.default_rng(seed)
+    kh = kh or h
+    assert p >= b * t, "need enough physical blocks for disjoint tables"
+    q = jnp.asarray(r.standard_normal((b, h, hd)), jnp.float32)
+    kb = jnp.asarray(r.standard_normal((p, bs, kh, hd)), jnp.float32)
+    vb = jnp.asarray(r.standard_normal((p, bs, kh, hd)), jnp.float32)
+    tables = jnp.asarray(r.permutation(p)[: b * t].reshape(b, t), jnp.int32)
+    lens = jnp.asarray(r.integers(1, (max_len or t * bs) + 1, b), jnp.int32)
+    return q, kb, vb, tables, lens
+
+
+@pytest.mark.parametrize("b,h,hd,bs,t", [(3, 4, 32, 8, 4), (1, 2, 16, 4, 6),
+                                         (4, 8, 64, 16, 2)])
+def test_paged_attention_matches_ref(b, h, hd, bs, t):
+    q, kb, vb, tables, lens = mk(b * 31 + t, b, h, hd, b * t + 3, bs, t)
+    got = paged_attention(q, kb, vb, tables, lens, interpret=True)
+    want = ref.paged_attention(q, kb, vb, tables, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_paged_attention_gqa_groups():
+    """8 q heads share 2 kv heads through the in-kernel group reshape."""
+    q, kb, vb, tables, lens = mk(5, 3, 8, 32, 16, 8, 4, kh=2)
+    got = paged_attention(q, kb, vb, tables, lens, interpret=True)
+    want = ref.paged_attention(q, kb, vb, tables, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_pad_table_entries_are_inert():
+    """Entries past ceil(len/bs) may point at ANY block — the context-len
+    mask must keep them out of the softmax (this is exactly how the
+    pool's null-padded tables arrive)."""
+    q, kb, vb, tables, lens = mk(9, 2, 4, 32, 12, 8, 4)
+    lens = jnp.asarray([5, 11], jnp.int32)         # 1 and 2 live blocks
+    got = paged_attention(q, kb, vb, tables, lens, interpret=True)
+    # scramble every dead table entry
+    tab = np.asarray(tables).copy()
+    tab[0, 1:] = 0
+    tab[1, 2:] = 3
+    got2 = paged_attention(q, kb, vb, jnp.asarray(tab), lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(got2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_block_boundary_lens():
+    """Context lengths on exact block boundaries (incl. full capacity)."""
+    b, bs, t = 3, 8, 3
+    q, kb, vb, tables, _ = mk(13, b, 4, 16, b * t, bs, t)
+    lens = jnp.asarray([bs, 2 * bs, t * bs], jnp.int32)
+    got = paged_attention(q, kb, vb, tables, lens, interpret=True)
+    want = ref.paged_attention(q, kb, vb, tables, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_matches_flash_oracle_on_contiguous_layout():
+    """With an identity block table, paged attention IS decode attention:
+    check against the flash oracle's decode path (q_offset = len - 1)."""
+    r = np.random.default_rng(21)
+    b, h, hd, bs, t = 2, 4, 32, 8, 4
+    s = t * bs
+    k = jnp.asarray(r.standard_normal((b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((b, s, h, hd)), jnp.float32)
+    q = jnp.asarray(r.standard_normal((b, h, hd)), jnp.float32)
+    lens = jnp.asarray([s, s], jnp.int32)
+    kb = k.reshape(b * t, bs, h, hd)
+    vb = v.reshape(b * t, bs, h, hd)
+    tables = jnp.arange(b * t, dtype=jnp.int32).reshape(b, t)
+    got = paged_attention(q, kb, vb, tables, lens, interpret=True)
+    want = ref.flash_attention(
+        q.reshape(b * h, 1, hd),
+        k.transpose(0, 2, 1, 3).reshape(b * h, s, hd),
+        v.transpose(0, 2, 1, 3).reshape(b * h, s, hd),
+        causal=True, q_offset=s - 1,
+    ).reshape(b, h, hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=4),
+    bs=st.sampled_from([4, 8, 16]),
+    t=st.integers(min_value=1, max_value=4),
+    kh_pick=st.sampled_from([(4, 4), (8, 2), (6, 3)]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_paged_attention_property(b, bs, t, kh_pick, seed):
+    """Property: kernel == oracle over random geometry + ragged lens."""
+    h, kh = kh_pick
+    q, kb, vb, tables, lens = mk(seed, b, h, 32, b * t + 2, bs, t, kh=kh)
+    got = paged_attention(q, kb, vb, tables, lens, interpret=True)
+    want = ref.paged_attention(q, kb, vb, tables, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)

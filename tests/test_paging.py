@@ -1,0 +1,300 @@
+"""Block-paged cache pool: allocator invariants, paged-vs-contiguous
+equivalence, preemption round-trips, fused sampling, scheduler fairness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; plain tests still run
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config, smoke_variant
+from repro.core.licensing import LicenseTier
+from repro.models import init_params
+from repro.serving import (BlockAllocator, GatewayRequest, LicensedGateway,
+                           PagedCachePool, RequestState, Scheduler)
+
+MAX_PROMPT = 8
+MAX_NEW = 8          # capacity 16: divisible by block sizes 4/8/16, so the
+                     # paged pools share one decode compilation with the
+                     # contiguous pool (padded capacity == capacity)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tiers = {
+        "free": LicenseTier(name="free", masks={"*": ((0.0, 0.004),)}),
+        "pro": LicenseTier(name="pro", masks={"*": ((0.0, 0.002),)}),
+    }
+    return cfg, params, tiers
+
+
+def _gateway(setup, **kw):
+    cfg, params, tiers = setup
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_prompt", MAX_PROMPT)
+    kw.setdefault("max_new_cap", MAX_NEW)
+    return LicensedGateway(cfg, params, tiers=tiers, **kw)
+
+
+def _prompt(seed, n=MAX_PROMPT):
+    return np.random.default_rng(seed).integers(0, 500, n, dtype=np.int32)
+
+
+# ------------------------------------------------------------ BlockAllocator
+def test_allocator_basic_invariants():
+    a = BlockAllocator(8)
+    got = a.alloc(5)
+    assert got is not None and len(got) == 5 and len(set(got)) == 5
+    assert a.num_free == 3 and a.num_held == 5
+    assert a.alloc(4) is None                 # all-or-nothing: no partials
+    assert a.num_free == 3                    # failed alloc takes nothing
+    more = a.alloc(3)
+    assert not set(got) & set(more)           # never double-allocated
+    a.free(got + more)
+    assert a.num_free == 8 and a.num_held == 0
+    with pytest.raises(ValueError):
+        a.free([got[0]])                      # double-free detected
+
+
+def test_allocator_rejects_foreign_and_bad_sizes():
+    a = BlockAllocator(4)
+    with pytest.raises(ValueError):
+        a.free([99])
+    with pytest.raises(ValueError):
+        a.alloc(-1)
+    with pytest.raises(ValueError):
+        BlockAllocator(0)
+    assert a.alloc(0) == []
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    num_blocks=st.integers(min_value=1, max_value=32),
+    ops=st.lists(st.integers(min_value=0, max_value=11), max_size=60),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_allocator_property(num_blocks, ops, seed):
+    """Property: live allocations stay disjoint; freeing everything always
+    restores the full pool; accounting never drifts."""
+    r = np.random.default_rng(seed)
+    a = BlockAllocator(num_blocks)
+    live = []                                  # list of allocation lists
+    for op in ops:
+        if op % 2 == 0 or not live:            # alloc of size op//2
+            before = a.num_free
+            got = a.alloc(op // 2)
+            if got is None:
+                assert op // 2 > before        # fails only when short
+                assert a.num_free == before    # and takes nothing
+            else:
+                live.append(got)
+        else:                                  # free a random allocation
+            a.free(live.pop(int(r.integers(len(live)))))
+        held = [b for alloc in live for b in alloc]
+        assert len(held) == len(set(held)) == a.num_held
+        assert a.num_free + a.num_held == num_blocks
+    for alloc in live:
+        a.free(alloc)
+    assert a.num_free == num_blocks
+
+
+# ------------------------------------------------------------ PagedCachePool
+def test_pool_gather_scatter_roundtrip(setup):
+    cfg, _, _ = setup
+    pool = PagedCachePool(cfg, num_lanes=3, capacity=16, block_size=4,
+                          num_blocks=12)
+    t0 = pool.allocator.alloc(4)
+    t1 = pool.allocator.alloc(4)
+    lanes = pool.pad_lanes([0, 1], 2)
+    tables = pool.pad_tables([t0, t1], 2)
+    view = pool.gather(lanes, tables)
+    # write distinct per-lane payloads through the tables
+    marked = jax.tree_util.tree_map(
+        lambda x: (jnp.zeros_like(x)
+                   + jnp.arange(1, 3, dtype=jnp.float32).reshape(
+                       2, *([1] * (x.ndim - 1))).astype(x.dtype)),
+        view)
+    pool.scatter(lanes, tables, marked)
+    back = pool.gather(lanes, tables)
+    for a, b in zip(jax.tree_util.tree_leaves(marked),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # disjoint tables: lane 0's writes must not leak into lane 1's blocks
+    solo = pool.gather([1], tables[1:])
+    for leaf in jax.tree_util.tree_leaves(solo):
+        vals = np.unique(np.asarray(leaf, np.float32))
+        assert 1.0 not in vals
+
+
+def test_pool_rejects_undersized_and_pageless(setup):
+    cfg, _, _ = setup
+    with pytest.raises(ValueError):
+        PagedCachePool(cfg, 2, capacity=16, block_size=4, num_blocks=3)
+    ssm = smoke_variant(get_config("mamba2-130m"))
+    with pytest.raises(ValueError):   # no per-token leaves to page
+        PagedCachePool(ssm, 2, capacity=16, block_size=4, num_blocks=8)
+
+
+def test_gateway_falls_back_to_contiguous_for_pure_ssm():
+    cfg = smoke_variant(get_config("mamba2-130m"))
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    gw = LicensedGateway(cfg, params, max_batch=2, max_prompt=4,
+                         max_new_cap=2, paged=True)
+    assert gw.paged is False
+    r = gw.submit(_prompt(0, 4), max_new_tokens=2)
+    gw.run()
+    assert r.state == RequestState.DONE
+
+
+# ------------------------------------------------- paged == contiguous logits
+def test_paged_matches_contiguous_logits_mixed_lengths(setup):
+    """The acceptance bar: same mixed-length stream through both pools,
+    per-step logits equal to 1e-5 and identical sampled tokens."""
+    streams = []
+    for paged in (False, True):
+        gw = _gateway(setup, max_batch=2, paged=paged, block_size=4,
+                      record_logits=True)
+        reqs = [gw.submit(_prompt(i), license=lic, max_new_tokens=2 + 2 * (i % 3))
+                for i, lic in enumerate(["full", "free", "free", "full", "pro"])]
+        gw.run()
+        assert all(r.state == RequestState.DONE for r in reqs)
+        streams.append(reqs)
+    for a, b in zip(*streams):
+        assert a.out_tokens == b.out_tokens
+        assert len(a.logits_rows) == len(b.logits_rows) == a.max_new_tokens
+        for ra, rb in zip(a.logits_rows, b.logits_rows):
+            np.testing.assert_allclose(ra, rb, atol=1e-5, rtol=0)
+
+
+def test_admission_bounds_sampling_params(setup):
+    """A bad seed is REJECTED (not a mid-service crash in the fused lane
+    arrays); an oversized top_k is clamped to the vocab, where both
+    samplers agree it truncates nothing."""
+    gw = _gateway(setup, max_batch=2)
+    r = gw.submit(_prompt(0), license="free", seed=2**31)
+    assert r.state == RequestState.REJECTED and "seed" in r.error
+    r = gw.submit(_prompt(0), license="free", seed=-2**31 - 1)
+    assert r.state == RequestState.REJECTED
+    cfg = gw.cfg
+    r = gw.submit(_prompt(1), license="free", max_new_tokens=2,
+                  top_k=cfg.padded_vocab + 5, temperature=0.5)
+    assert r.state != RequestState.REJECTED
+    assert r.top_k == cfg.padded_vocab
+    gw.run()
+    assert r.state == RequestState.DONE
+
+
+def test_fused_sampling_matches_host_sampling(setup):
+    """Fused on-device sampling returns the same tokens as the
+    return-logits escape hatch, greedy AND stochastic (temp + top-k)."""
+    outs = []
+    for fuse in (True, False):
+        gw = _gateway(setup, max_batch=2, fuse_sampling=fuse)
+        rs = [gw.submit(_prompt(3), license="free", max_new_tokens=4),
+              gw.submit(_prompt(4), license="free", max_new_tokens=4,
+                        temperature=0.8, top_k=5, seed=7)]
+        gw.run()
+        outs.append([r.out_tokens for r in rs])
+    assert outs[0] == outs[1]
+
+
+# ------------------------------------------------------- preemption/requeue
+def test_preemption_requeue_roundtrip(setup):
+    """An oversubscribed pool must preempt (youngest first), requeue, and
+    still complete every request with exactly its token budget — and the
+    restarted requests must reproduce the tokens of an uncontended run."""
+    want = {}
+    gw = _gateway(setup, max_batch=2, paged=True, block_size=4)
+    for i in range(5):
+        r = gw.submit(_prompt(i), license="free", max_new_tokens=3 + 2 * (i % 2))
+        want[i] = r
+    gw.run()
+    assert gw.stats["preempted"] == 0          # fully provisioned
+
+    gw2 = _gateway(setup, max_batch=2, paged=True, block_size=4,
+                   max_lanes=4, num_blocks=9)  # 36 tokens for 4 lanes of 16
+    reqs = [gw2.submit(_prompt(i), license="free", max_new_tokens=3 + 2 * (i % 2))
+            for i in range(5)]
+    gw2.run()
+    assert gw2.stats["preempted"] > 0
+    # replayed tokens must not inflate the delivered-token counter
+    assert gw2.stats["tokens_generated"] == \
+        sum(r.max_new_tokens for r in reqs)
+    for i, r in enumerate(reqs):
+        assert r.state == RequestState.DONE
+        assert len(r.out_tokens) == r.max_new_tokens
+        assert r.out_tokens == want[i].out_tokens   # restart is deterministic
+    assert gw2.pool.allocator.num_held == 0         # every block came back
+    preempted = [r for r in reqs if r.preemptions]
+    assert preempted and all(r.state == RequestState.DONE for r in preempted)
+
+
+def test_preemption_guard_single_request():
+    """The constructor refuses pools that cannot hold one full request."""
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        LicensedGateway(cfg, params, max_batch=2, max_prompt=8,
+                        max_new_cap=8, paged=True, block_size=4,
+                        num_blocks=3)
+
+
+def test_watermark_cannot_deadlock_admission():
+    """A watermark that would leave admission permanently starved is a
+    config error at construction, not a gateway that serves nothing."""
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        LicensedGateway(cfg, params, max_batch=2, max_prompt=8,
+                        max_new_cap=8, paged=True, block_size=4,
+                        num_blocks=4, watermark_blocks=3)
+
+
+# ------------------------------------------------------- scheduler fairness
+def test_prefill_serves_oldest_group_not_queue_head():
+    """A requeued hot-tier request at the deque head must not starve an
+    older cold-tier request sitting behind it (queue-wait aging)."""
+    s = Scheduler(num_lanes=4, max_batch=4)
+    hot = GatewayRequest(prompt=np.zeros(4, np.int32), license="hot")
+    hot.version = 1
+    hot.submit_t = 10.0
+    cold = GatewayRequest(prompt=np.zeros(4, np.int32), license="cold")
+    cold.version = 1
+    cold.submit_t = 1.0
+    s.submit(cold)
+    s.submit(hot)
+    s.waiting.rotate(1)                       # hot now at the head (requeue)
+    assert s.waiting[0] is hot
+    act = s.next_action()
+    assert act.kind == "prefill"
+    assert [r.license for r in act.requests] == ["cold"]
+
+
+def test_equal_age_falls_back_to_fifo_order():
+    s = Scheduler(num_lanes=4, max_batch=4)
+    for lic in ["b_tier", "a_tier"]:
+        r = GatewayRequest(prompt=np.zeros(4, np.int32), license=lic)
+        r.version = 1
+        s.submit(r)                           # both submit_t == 0.0
+    act = s.next_action()
+    assert [r.license for r in act.requests] == ["b_tier"]  # head wins ties
+
+
+def test_wait_age_metrics_exposed(setup):
+    gw = _gateway(setup, max_batch=2)
+    for i in range(4):
+        gw.submit(_prompt(i), license="free", max_new_tokens=2)
+    m = gw.metrics()
+    assert m["oldest_wait_s"] >= 0.0
+    assert "free" in m["queue_wait_by_tier"]
+    assert m["cache_pool"]["paged"] is True
+    gw.run()
+    m = gw.metrics()
+    assert m["oldest_wait_s"] == 0.0          # queue drained
+    assert m["max_running"] >= 2
