@@ -3,21 +3,28 @@
 Prints ``name,us_per_call,derived...`` CSV rows.  Usage:
   PYTHONPATH=src python -m benchmarks.run [--only storage,licensing,...]
   PYTHONPATH=src python -m benchmarks.run --smoke       # CI smoke lane
+  PYTHONPATH=src python -m benchmarks.run --json out/   # machine-readable
 
 ``--smoke`` runs every suite at reduced scale (suites whose ``run``
 accepts a ``smoke`` kwarg shrink their workloads) so CI can assert the
 perf scripts still execute end to end without burning minutes.
+
+``--json DIR`` additionally writes one ``BENCH_<suite>.json`` per suite
+(full row dicts plus run metadata) so the perf trajectory is tracked as
+an artifact across PRs instead of scraped from CI logs.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
 import json
+import pathlib
 import sys
+import time
 import traceback
 
 SUITES = ("storage", "update", "licensing", "kernels", "serving", "gateway",
-          "paging", "roofline")
+          "paging", "prefix", "roofline")
 
 
 def main(argv=None) -> None:
@@ -27,12 +34,19 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced-scale run for CI (suites may shrink "
                          "workloads; all assertions still fire)")
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="also write BENCH_<suite>.json result files "
+                         "into DIR (created if missing)")
     args = ap.parse_args(argv)
     picked = args.only.split(",") if args.only else list(SUITES)
+    json_dir = None
+    if args.json is not None:
+        json_dir = pathlib.Path(args.json)
+        json_dir.mkdir(parents=True, exist_ok=True)
 
     from benchmarks import (gateway_bench, kernel_bench, licensing_ladder,
-                            paging_bench, roofline_table, serving_bench,
-                            storage_cost, update_latency)
+                            paging_bench, prefix_bench, roofline_table,
+                            serving_bench, storage_cost, update_latency)
 
     modules = {
         "storage": storage_cost,        # paper Table 1
@@ -42,6 +56,7 @@ def main(argv=None) -> None:
         "serving": serving_bench,
         "gateway": gateway_bench,       # continuous batching vs single-stream
         "paging": paging_bench,         # block-paged vs fixed-lane cache pool
+        "prefix": prefix_bench,         # shared-prefix radix cache vs paged
         "roofline": roofline_table,     # deliverable (g)
     }
 
@@ -53,10 +68,18 @@ def main(argv=None) -> None:
         if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
             kw["smoke"] = True
         try:
-            for row in mod.run(**kw):
-                base = {k: row.pop(k) for k in ("name", "us_per_call")}
-                print(f"{base['name']},{base['us_per_call']:.1f},"
-                      + json.dumps(row, default=str))
+            rows = list(mod.run(**kw))
+            for row in rows:
+                derived = {k: v for k, v in row.items()
+                           if k not in ("name", "us_per_call")}
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      + json.dumps(derived, default=str))
+            if json_dir is not None:
+                out = {"suite": name, "smoke": bool(args.smoke),
+                       "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                       "rows": rows}
+                (json_dir / f"BENCH_{name}.json").write_text(
+                    json.dumps(out, indent=2, default=str) + "\n")
         except Exception:  # noqa: BLE001 — report all suites
             failures += 1
             print(f"{name},FAILED,", file=sys.stdout)

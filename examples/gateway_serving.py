@@ -8,13 +8,20 @@ The Fig. 2 deployment with the gateway as the serving pod:
    §3.1.2 delta protocol);
 3. stream mixed-tier requests with heterogeneous decode lengths — the
    scheduler forms tier-homogeneous micro-batches over the shared
-   **block-paged** cache pool (oversubscribed here: 8 lanes on 18
-   blocks, so admission is bounded by blocks and the youngest request
-   is preempted/requeued if decode growth exhausts them), and masked
-   weight views are built once per (tier, version);
-4. publish a server-side weight update mid-service and ``sync()``: new
-   admissions pin the new version, stale views are invalidated once the
-   old version drains.
+   **block-paged** cache pool (oversubscribed here: 8 lanes of up to 7
+   blocks each on a 36-block pool, so admission is bounded by blocks
+   and the youngest request is preempted/requeued if decode growth
+   exhausts them), and masked weight views are built once per
+   (tier, version);
+4. serve a shared-system-prompt round through the **prefix cache**: the
+   first wave donates its prompt-block chains to the (tier, version)
+   radix tree, follow-up waves adopt the shared prefix by reference and
+   prefill only their user-specific suffix — same tokens, a fraction of
+   the prefill compute, with decode copy-on-writing the shared tail
+   block before its first write;
+5. publish a server-side weight update mid-service and ``sync()``: new
+   admissions pin the new version, stale views (and cached prefix
+   scopes) are invalidated once the old version drains.
 
 Run:  PYTHONPATH=src python examples/gateway_serving.py
 """
@@ -48,9 +55,13 @@ def main():
 
     # 2. serving pod: gateway boots from the server --------------------------
     template = jax.tree_util.tree_map(np.zeros_like, params)
+    # max_prompt=10 is deliberately not block-aligned: shared prompt
+    # chains end in a partial tail block, so the prefix demo below also
+    # exercises decode's copy-on-write
     gw = LicensedGateway.from_server(cfg, server, "lm", template,
-                                     max_batch=4, max_prompt=8, max_new_cap=16,
-                                     block_size=8, max_lanes=8, num_blocks=18,
+                                     max_batch=4, max_prompt=10,
+                                     max_new_cap=16, block_size=4,
+                                     max_lanes=8, num_blocks=36,
                                      watermark_blocks=1)
     pool = gw.pool.stats()
     print(f"[2] gateway online at weight version {gw.version}; paged pool: "
@@ -76,16 +87,40 @@ def main():
     for r in reqs[:3]:
         print(f"    [{r.license:4s} v{r.version}] {r.out_tokens}")
 
-    # 4. weight update mid-service ------------------------------------------
+    # 4. shared-system-prompt round: prefix-cache reuse ----------------------
+    system = rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+    convo = None
+    lane0 = gw.stats["prefill_lane_tokens"]
+    n = 0
+    for wave in range(3):          # wave 0 populates, waves 1-2 hit
+        for _ in range(3):
+            user = rng.integers(0, cfg.vocab_size, 4, dtype=np.int32)
+            prompt = np.concatenate([system, user])
+            convo = prompt if convo is None else convo
+            gw.submit(prompt, license="free", max_new_tokens=4)
+            n += 1
+        if wave:                   # re-served conversation: full-prompt match
+            gw.submit(convo.copy(), license="free", max_new_tokens=4)
+            n += 1
+        gw.run()
+    pm = gw.metrics()["prefix_cache"]
+    print(f"[4] shared-system-prompt round: {pm['hit_rate']:.0%} hit rate, "
+          f"{pm['prefix_tokens_reused']} prompt tokens served from cache "
+          f"({gw.stats['prefill_lane_tokens'] - lane0} prefilled vs "
+          f"{n * gw.max_prompt} cold), {pm['retained_blocks']} blocks "
+          f"retained for future hits, {pm['cow_copies']} copy-on-writes")
+
+    # 5. weight update mid-service ------------------------------------------
     newp = jax.tree_util.tree_map(lambda x: np.asarray(x) * 1.01, params)
     server.publish("lm", newp, tag="v1.1")
     gw.sync()
     r = gw.submit(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
                   license="free", max_new_tokens=4)
     gw.run()
-    print(f"[4] synced to v{gw.version}; new request pinned to v{r.version}, "
+    print(f"[5] synced to v{gw.version}; new request pinned to v{r.version}, "
           f"stale views invalidated "
-          f"({gw.views.stats()['invalidations']} entries)")
+          f"({gw.views.stats()['invalidations']} entries), "
+          f"prefix scopes live: {gw.prefix.stats()['scopes']}")
     store.close()
 
 

@@ -180,12 +180,20 @@ def init_attention(key, cfg, dtype) -> Dict[str, Any]:
 def attention_block(
     p: Dict[str, Any], x: jnp.ndarray, cfg, *,
     cache: Optional[Dict[str, jnp.ndarray]] = None,
-    pos=0, window: int = 0,
+    pos=0, window: int = 0, attend_cache: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """GQA/MQA attention.  ``cache`` holds k/v (B, cap, KH, hd) + ``len``.
 
-    Modes: train/prefill (cache None or filled-from-empty) and decode
-    (Sq == 1 with a pre-filled ring/linear cache).
+    Modes: train/prefill (cache None or filled-from-empty), decode
+    (Sq == 1 with a pre-filled ring/linear cache), and — with
+    ``attend_cache=True`` — *suffix prefill*: Sq > 1 new tokens starting
+    at absolute ``pos`` attend over the updated cache contents instead of
+    only each other, so a prompt whose prefix ``[0, pos)`` is already
+    resident (prefix cache) runs prefill on the uncached tail alone.
+    ``attend_cache`` assumes a linear (non-ring) cache — slot == absolute
+    position — which the gateway's prefix-cacheable gate guarantees;
+    writes beyond the last slot clamp onto it (masked until a real decode
+    write lands there) rather than wrapping over live prefix slots.
     """
     b, s, d = x.shape
     h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -209,7 +217,13 @@ def attention_block(
     else:
         quant = "k_scale" in cache
         cap = cache["k"].shape[1]
-        slot = jnp.mod(positions, cap)                     # ring for windowed
+        if attend_cache:
+            # linear cache: clamp instead of wrap, so a lane whose suffix
+            # is padded past the capacity piles the pad writes onto the
+            # (masked) last slot rather than corrupting prefix slots
+            slot = jnp.clip(positions, 0, cap - 1)
+        else:
+            slot = jnp.mod(positions, cap)                 # ring for windowed
         if quant:
             kq, ks = _kv_quantize(k)
             vq, vs = _kv_quantize(v)
@@ -225,17 +239,22 @@ def attention_block(
                 cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
             ) if s == cap else cache["v"].at[:, slot].set(v.astype(cache["v"].dtype))
         new_len = jnp.minimum(cache["len"] + s, cap)
-        if s == 1:
+        if s == 1 or attend_cache:
             # decode: attend over the valid cache (mask handles ring order —
             # with RoPE already applied per absolute position, order in the
-            # buffer is irrelevant to the score computation)
+            # buffer is irrelevant to the score computation).  Suffix
+            # prefill attends the same way, but causal masking alone bounds
+            # it: every slot <= query position holds either the resident
+            # prefix or a token written this step, and ``len`` may be
+            # unseeded (the gateway overrides counters after the step).
             if quant:
                 kk = _kv_dequantize(ck, cks, k.dtype)
                 vv = _kv_dequantize(cv, cvs, v.dtype)
             else:
                 kk, vv = ck, cv
             out = attention_core(
-                q, kk, vv, q_offset=pos, window=0, kv_len=new_len,
+                q, kk, vv, q_offset=pos, window=0,
+                kv_len=None if attend_cache else new_len,
                 q_chunk=cfg.q_chunk,
             )
         else:
@@ -297,6 +316,7 @@ def init_mla(key, cfg, dtype) -> Dict[str, Any]:
 def mla_block(
     p: Dict[str, Any], x: jnp.ndarray, cfg, *,
     cache: Optional[Dict[str, jnp.ndarray]] = None, pos=0, window: int = 0,
+    attend_cache: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """Multi-head Latent Attention (DeepSeek-V2).  The cache stores the
     COMPRESSED c_kv (r) + shared rotary key (rope_d) — the paper's KV-cache
@@ -319,12 +339,19 @@ def mla_block(
 
     if cache is not None:
         cap = cache["ckv"].shape[1]
-        slot = jnp.mod(positions, cap)
+        # suffix prefill (attend_cache): linear cache — clamp, don't wrap
+        # (see attention_block); pad writes pile onto the masked last slot
+        slot = (jnp.clip(positions, 0, cap - 1) if attend_cache
+                else jnp.mod(positions, cap))
         c_all = cache["ckv"].at[:, slot].set(c_kv.astype(cache["ckv"].dtype))
         kr_all = cache["k_rope"].at[:, slot].set(k_rope.squeeze(2).astype(cache["k_rope"].dtype))
         new_len = jnp.minimum(cache["len"] + s, cap)
         new_cache = {"ckv": c_all, "k_rope": kr_all, "len": new_len}
-        kv_src, kr_src, kv_len = c_all, kr_all[:, :, None, :], new_len
+        kv_src, kr_src = c_all, kr_all[:, :, None, :]
+        # attend_cache: causal masking alone bounds the scores (slot ==
+        # absolute position and ``len`` may be unseeded), matching the
+        # suffix-prefill contract in attention_block
+        kv_len = None if attend_cache else new_len
     else:
         new_cache = None
         kv_src, kr_src, kv_len = c_kv, k_rope, None

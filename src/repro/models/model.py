@@ -55,19 +55,25 @@ def _init_block(key, cfg: ModelConfig, kind: str) -> Dict[str, Any]:
 
 def _apply_block(
     p: Dict[str, Any], kind: str, x: jnp.ndarray, cfg: ModelConfig, *,
-    cache: Optional[Dict[str, Any]], pos,
+    cache: Optional[Dict[str, Any]], pos, attend_cache: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict[str, Any]]]:
-    """Pre-norm residual block.  Returns (x, aux_loss, new_cache)."""
+    """Pre-norm residual block.  Returns (x, aux_loss, new_cache).
+
+    ``attend_cache`` (static) selects suffix-prefill attention — Sq > 1
+    tokens starting at ``pos`` attend over resident cache contents; only
+    attention blocks consume it (SSM/RG-LRU state is sequential, so the
+    prefix-cache gate never routes those models here)."""
     aux = jnp.zeros((), jnp.float32)
     h = L.apply_norm(x, p["norm1"], cfg)
     if kind == "attn":
         window = cfg.window
         if cfg.use_mla:
             y, new_cache = L.mla_block(p["mixer"], h, cfg, cache=cache, pos=pos,
-                                       window=window)
+                                       window=window, attend_cache=attend_cache)
         else:
             y, new_cache = L.attention_block(p["mixer"], h, cfg, cache=cache,
-                                             pos=pos, window=window)
+                                             pos=pos, window=window,
+                                             attend_cache=attend_cache)
         x = x + y.astype(x.dtype)
         h2 = L.apply_norm(x, p["norm2"], cfg)
         if cfg.num_experts:
@@ -166,13 +172,20 @@ def forward(
     cache: Optional[Dict[str, Any]] = None,
     pos=0,
     license_intervals=None,   # (lo, hi) f32[MAX_INTERVALS] — fused-dequant licensing
+    attend_cache: bool = False,  # static: suffix prefill attends cache contents
 ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict[str, Any]]]:
     """Returns (logits (B,S,V), aux_loss, new_cache or None).
 
     ``params`` may contain int8 {"codes","scale"} leaves (see
     serving/quantized.py); they are dequantized INSIDE the layer scan with
     ``license_intervals`` masks fused in, so weight HBM reads stay int8 and
-    every license tier shares one stored model."""
+    every license tier shares one stored model.
+
+    ``attend_cache=True`` is the *suffix prefill* mode behind the prefix
+    cache: ``tokens`` are the uncached tail of a prompt whose positions
+    ``[0, pos)`` are already resident in ``cache``, and attention reads
+    the cache (prefix + this step's writes) instead of only the provided
+    tokens.  Requires a linear (non-ring) cache; see ``attention_block``."""
     parts = []
     if patch_embeds is not None:
         proj = params.get("vision_proj")
@@ -200,7 +213,8 @@ def forward(
         for j, kind in enumerate(pattern):
             c = None if unit_cache is None else unit_cache[f"b{j}"]
             x, a, nc = _apply_block(unit_params[f"b{j}"], kind, x, cfg,
-                                    cache=c, pos=pos)
+                                    cache=c, pos=pos,
+                                    attend_cache=attend_cache)
             aux = aux + a
             new_caches[f"b{j}"] = nc if nc is not None else ()
         if cache is None and x.shape[1] > 1:
@@ -243,7 +257,8 @@ def forward(
             c = None if cache is None else cache["tail"][f"t{j}"]
             tp = _dq(params["tail"][f"t{j}"], license_intervals, cfg.dtype)
             x, a, nc = _apply_block(tp, kind, x, cfg,
-                                    cache=c, pos=pos)
+                                    cache=c, pos=pos,
+                                    attend_cache=attend_cache)
             aux_total = aux_total + a
             new_tail[f"t{j}"] = nc if nc is not None else ()
         if new_cache is not None:

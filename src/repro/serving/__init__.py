@@ -5,18 +5,24 @@
 streams tier-tagged requests through (tier, version)-keyed masked
 weight views.  Host-side scheduling primitives live in scheduler.py;
 the block-paged KV pool (``BlockAllocator``/``PagedCachePool``) the
-gateway serves from by default lives in paging.py.
+gateway serves from by default lives in paging.py, and the
+(tier, version)-scoped shared-prefix radix cache (``PrefixCache``)
+that lets same-prefix prompts skip redundant prefill lives in
+prefix.py.
 """
 from repro.serving.engine import (Request, ServingEngine, prefill_step,
-                                  sample, sample_lane, serve_step)
+                                  prefill_suffix_step, sample, sample_lane,
+                                  serve_step)
 from repro.serving.gateway import LicensedGateway
 from repro.serving.paging import BlockAllocator, PagedCachePool
+from repro.serving.prefix import PrefixCache
 from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
                                      ScheduledAction, Scheduler, TierViewCache)
 
 __all__ = [
-    "Request", "ServingEngine", "prefill_step", "sample", "sample_lane",
-    "serve_step", "LicensedGateway", "GatewayRequest", "RequestState",
-    "ScheduledAction", "Scheduler", "CachePool", "PagedCachePool",
-    "BlockAllocator", "TierViewCache",
+    "Request", "ServingEngine", "prefill_step", "prefill_suffix_step",
+    "sample", "sample_lane", "serve_step", "LicensedGateway",
+    "GatewayRequest", "RequestState", "ScheduledAction", "Scheduler",
+    "CachePool", "PagedCachePool", "BlockAllocator", "PrefixCache",
+    "TierViewCache",
 ]

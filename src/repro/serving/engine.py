@@ -33,6 +33,24 @@ def prefill_step(params, cfg: ModelConfig, tokens, cache,
     return logits[:, -1], cache
 
 
+def prefill_suffix_step(params, cfg: ModelConfig, tokens, cache, pos,
+                        license_intervals=None):
+    """Suffix prefill: extend a cache already holding positions ``[0, pos)``
+    with ``tokens`` (B, W) — the uncached tail of a prompt whose prefix the
+    prefix cache (serving/prefix.py) restored from retained blocks.
+
+    Unlike :func:`prefill_step`, attention reads the resident cache (the
+    shared prefix plus this step's own writes), and the *full* per-step
+    logits come back — the caller picks the row of the last real token,
+    which for right-padded suffixes is not the last row.  ``pos`` may be a
+    per-lane traced scalar under ``vmap`` (variable prefill offsets)."""
+    logits, _, cache = model_lib.forward(
+        params, cfg, tokens, cache=cache, pos=pos,
+        license_intervals=license_intervals, attend_cache=True,
+    )
+    return logits, cache
+
+
 def serve_step(params, cfg: ModelConfig, tokens, cache, pos,
                license_intervals=None):
     """ONE decode step: tokens (B,1) + cache at fill-level ``pos``.

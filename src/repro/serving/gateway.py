@@ -47,6 +47,15 @@ micro-batch.  Two pool modes, selected by the ``paged`` config flag:
 * ``paged=False``: the seed fixed-slab :class:`CachePool`, one
   ``capacity``-token lane per ``max_batch`` slot.
 
+With paging, a **shared-prefix radix cache** (``serving/prefix.py``,
+``prefix_cache=True`` default) retains finished prompts' block chains
+per (tier, version) scope: a later request whose padded prompt shares a
+cached prefix adopts those blocks by reference and prefills only the
+uncached suffix (per-lane variable offsets in one vmapped step); shared
+blocks are read-only — decode copy-on-writes a shared tail block before
+its first write into it — and retained chains with no live request are
+evicted LRU-first under allocation pressure.
+
 Licensing integration
 ---------------------
 * float path: the view is ``apply_license(base, tier)`` — masking cost
@@ -81,11 +90,22 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.licensing import FULL_TIER, LicenseTier, apply_license
 from repro.models import model as model_lib
-from repro.serving.engine import (prefill_step, right_align, sample,
-                                  sample_lane, serve_step)
+from repro.serving.engine import (prefill_step, prefill_suffix_step,
+                                  right_align, sample, sample_lane, serve_step)
 from repro.serving.paging import NoPagedLeavesError, PagedCachePool, cdiv
+from repro.serving.prefix import PrefixCache
 from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
                                      ScheduledAction, Scheduler, TierViewCache)
+
+
+def _finish_lane(logits, seed, n_out, temp, top_k, *, fused, with_rng,
+                 with_topk):
+    """One lane's epilogue: raw logits row, or the fused on-device sample."""
+    if not fused:
+        return logits
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), n_out)
+    return sample_lane(logits, key, temp, top_k,
+                       with_rng=with_rng, with_topk=with_topk)
 
 
 @functools.lru_cache(maxsize=None)
@@ -100,11 +120,8 @@ def _compiled_steps(cfg: ModelConfig, fused: bool = False,
     batches skip the vocab sort) — at most 4 fused variants ever compile."""
 
     def _finish(logits, seed, n_out, temp, top_k):
-        if not fused:
-            return logits
-        key = jax.random.fold_in(jax.random.PRNGKey(seed), n_out)
-        return sample_lane(logits, key, temp, top_k,
-                           with_rng=with_rng, with_topk=with_topk)
+        return _finish_lane(logits, seed, n_out, temp, top_k, fused=fused,
+                            with_rng=with_rng, with_topk=with_topk)
 
     def _prefill_one(view_params, tokens, cache, seed, n_out, temp, top_k, li):
         logits, cache = prefill_step(view_params, cfg, tokens[None], cache,
@@ -120,6 +137,33 @@ def _compiled_steps(cfg: ModelConfig, fused: bool = False,
                              in_axes=(None, 0, 0, 0, 0, 0, 0, None))),
             jax.jit(jax.vmap(_decode_one,
                              in_axes=(None, 0, 0, 0, 0, 0, 0, 0, None))))
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_prefix_prefill(cfg: ModelConfig, fused: bool = False,
+                             with_rng: bool = True, with_topk: bool = True):
+    """Jitted lane-vmapped *suffix* prefill for prefix-cache hits.
+
+    Per lane: ``tokens`` is the uncached tail of the prompt bucket padded
+    on the right to the micro-batch's suffix width, ``pos`` the lane's
+    cached-prefix length (the variable prefill offset), and ``last`` the
+    row of the last real token (right padding means it is not row -1).
+    One compilation per (config, suffix width, sampling variant); suffix
+    widths are multiples of the block size minus nothing — at most
+    ``prompt_blocks + 1`` distinct widths ever compile per config."""
+
+    def _one(view_params, tokens, cache, pos, last, seed, n_out, temp,
+             top_k, li):
+        logits, cache = prefill_suffix_step(view_params, cfg, tokens[None],
+                                            cache, pos,
+                                            license_intervals=li)
+        row = _finish_lane(logits[0, last], seed, n_out, temp, top_k,
+                           fused=fused, with_rng=with_rng,
+                           with_topk=with_topk)
+        return row, cache
+
+    return jax.jit(jax.vmap(_one,
+                            in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, None)))
 
 
 class LicensedGateway:
@@ -162,6 +206,19 @@ class LicensedGateway:
         preemption-free); size it smaller to oversubscribe.  Admission
         requires ``watermark_blocks`` free blocks above a prefill's
         need, reserving decode-growth headroom.
+    prefix_cache:
+        Retain finished prompts' block chains in a (tier, version)-scoped
+        radix cache (``serving/prefix.py``) and serve later requests'
+        shared prefixes from them: prefill runs only on the uncached
+        suffix (per-lane variable offsets), shared blocks are adopted by
+        reference, and decode copy-on-writes a shared tail block before
+        its first write into it.  Retained chains with no live request
+        are evicted LRU-first whenever admission or decode growth needs
+        blocks, so retention never shrinks the usable pool.  Paged mode
+        only; auto-disabled (with ``prefix_cache=True`` silently inert)
+        when any per-lane cache state is not a reconstructible position
+        counter — SSM/RG-LRU state and sliding-window ring caches cannot
+        be seeded from blocks.  ``False`` restores PR 2 behavior exactly.
     fuse_sampling:
         Sample per lane on device and return token ids (default).
         ``False`` is the return-logits escape hatch: logits rows come
@@ -189,6 +246,7 @@ class LicensedGateway:
         num_blocks: Optional[int] = None,
         max_lanes: Optional[int] = None,
         watermark_blocks: int = 0,
+        prefix_cache: bool = True,
         fuse_sampling: bool = True,
         record_logits: bool = False,
         view_capacity: int = 8,
@@ -242,16 +300,24 @@ class LicensedGateway:
                     f"admit a prefill ({self._prefill_blocks} blocks of "
                     f"{self.pool.num_blocks}) — the gateway would accept "
                     f"requests and never schedule them")
+            # prompt-prefix reuse needs every non-paged leaf reconstructible
+            # (position counters); float per-lane state can't be block-seeded
+            self.prefix = (
+                PrefixCache(self.pool.allocator, self.pool.block_size)
+                if prefix_cache and self.pool.prefix_cacheable else None)
             self.scheduler = Scheduler(
                 self.max_lanes, self.max_batch,
                 allocator=self.pool.allocator,
                 prefill_blocks=self._prefill_blocks,
-                watermark_blocks=int(watermark_blocks))
+                watermark_blocks=int(watermark_blocks),
+                reclaimable=(self.prefix.reclaimable
+                             if self.prefix is not None else None))
             zero_cap = self.pool.padded_capacity
         else:
             self.max_lanes = self.max_batch
             self.pool = CachePool(cfg, self.max_batch, self.capacity)
             self.scheduler = Scheduler(self.max_batch, self.max_batch)
+            self.prefix = None
             zero_cap = self.capacity
         lane0 = model_lib.init_cache(cfg, 1, zero_cap)  # pristine batch-1 cache
         self._zero_lanes = jax.tree_util.tree_map(
@@ -278,6 +344,11 @@ class LicensedGateway:
             "admitted": 0, "rejected": 0, "completed": 0,
             "prefill_batches": 0, "decode_steps": 0, "tokens_generated": 0,
             "preempted": 0, "max_running": 0, "max_blocks_in_use": 0,
+            # prefix-cache accounting: lane-tokens actually run through the
+            # prefill step (the FLOPs axis the bench compares), prompt
+            # tokens served from retained blocks, and copy-on-write copies
+            "prefill_lane_tokens": 0, "prefix_tokens_reused": 0,
+            "cow_copies": 0,
         }
 
         # build the jit pair for the common case (all-greedy when fused);
@@ -297,6 +368,14 @@ class LicensedGateway:
         with_rng = any(r.temperature > 0 for r in reqs)
         with_topk = with_rng and any(r.top_k for r in reqs)
         return _compiled_steps(self.cfg, True, with_rng, with_topk)
+
+    def _prefix_steps(self, reqs: List[GatewayRequest]):
+        """Suffix-prefill jit specialized like :meth:`_steps`."""
+        if not self.fuse_sampling:
+            return _compiled_prefix_prefill(self.cfg, False)
+        with_rng = any(r.temperature > 0 for r in reqs)
+        with_topk = with_rng and any(r.top_k for r in reqs)
+        return _compiled_prefix_prefill(self.cfg, True, with_rng, with_topk)
 
     # ------------------------------------------------------------ weight views
     def _resolve_tier(self, name: str) -> LicenseTier:
@@ -347,6 +426,9 @@ class LicensedGateway:
             else:
                 self.tiers[name] = fresh
             self.views.invalidate(tier=name)
+            if self.prefix is not None:
+                # cached blocks encode the old mask's activations
+                self.prefix.drop_scope(tier=name)
             del self._pending_tiers[name]
 
     def _materialize(self, tier_name: str, version: Optional[int]):
@@ -466,33 +548,108 @@ class LicensedGateway:
         return (jnp.asarray(seeds), jnp.asarray(nouts), jnp.asarray(temps),
                 jnp.asarray(topks))
 
+    def _alloc_blocks(self, n: int) -> List[int]:
+        """Allocate ``n`` blocks, reclaiming retained prefix chains (LRU)
+        if the free list alone can't cover it.  The scheduler's admission
+        budget counts reclaimable blocks, so this must succeed for any
+        admitted prefill."""
+        got = self.pool.allocator.alloc(n)
+        if got is None and self.prefix is not None:
+            self.prefix.evict(n - self.pool.allocator.num_free)
+            got = self.pool.allocator.alloc(n)
+        assert got is not None, "scheduler admitted past the block budget"
+        return got
+
+    def _decref_block(self, b: int) -> None:
+        """Drop one request reference, keeping the prefix cache's O(1)
+        reclaimable counter exact: when exactly one reference survives
+        and it is the tree's, the block just became evictable."""
+        if self.pool.allocator.decref(b) == 1 and self.prefix is not None:
+            self.prefix.note_release(b)
+
+    def _release_blocks(self, req: GatewayRequest) -> None:
+        """Drop the request's reference on every block it holds.  Private
+        blocks return to the free list; blocks shared with the prefix
+        cache (or another request) stay alive under the remaining refs —
+        release, not free, is what makes retention safe."""
+        for b in req.blocks:
+            self._decref_block(b)
+        req.blocks = []
+
+    def _scatter_tables(self, tables: np.ndarray,
+                        reqs: List[GatewayRequest]) -> np.ndarray:
+        """Write-back tables with every *shared* block redirected to the
+        null block.  Shared blocks are immutable: a prefix-cached prefill
+        re-writes identical gathered bytes and the one recomputed token of
+        a fully-matched prompt, decode re-writes untouched rows — all
+        redundant, and redirecting them keeps retained chains bit-stable
+        under concurrent readers (decode CoWs before any real write)."""
+        out = tables.copy()
+        alloc = self.pool.allocator
+        for i, r in enumerate(reqs):
+            for j, b in enumerate(r.blocks):
+                if alloc.refcount(b) > 1:
+                    out[i, j] = self.pool.null_block
+        return out
+
     def _run_prefill(self, act: ScheduledAction) -> None:
         view_params, li = self.views.get(act.tier, act.version)
         reqs = act.requests
         toks = right_align([r.prompt for r in reqs], self.max_prompt,
                            self.max_batch)
         seeds, nouts, temps, topks = self._sampling_lanes(reqs)
-        prefill, _ = self._steps(reqs)
-        outs, lane_caches = prefill(view_params, jnp.asarray(toks),
-                                    self._zero_lanes, seeds, nouts,
-                                    temps, topks, li)
-        lanes = [self.scheduler.start(r) for r in reqs]
+        # longest-cached-prefix lookup (before any allocation: matching
+        # increfs the chains, so eviction under this batch's own pressure
+        # can never free a block another lane is about to adopt).  The
+        # prompt row is the *padded* bucket — identical rows mean identical
+        # absolute positions, the condition for KV reuse under RoPE.
+        scope = (act.tier, act.version)
+        matches: List[Tuple[List[int], int]] = []
+        if self.prefix is not None:       # paged-only by construction
+            for i in range(len(reqs)):
+                blocks, ntok = self.prefix.match(scope, toks[i])
+                # always recompute >= 1 token: the first sampled token
+                # needs the last prompt position's logits
+                capped = min(ntok, self.max_prompt - 1)
+                if capped == 0 and blocks:
+                    # the cap zeroed a real match (max_prompt == 1): the
+                    # chain is unusable — release the match's references
+                    for b in blocks:
+                        self._decref_block(b)
+                    blocks = []
+                matches.append((blocks, capped))
+        hit = any(n > 0 for _, n in matches)
+        if hit:
+            lanes = [self.scheduler.start(r) for r in reqs]
+            outs = self._run_prefix_prefill(
+                act, toks, matches, lanes, view_params, li,
+                (seeds, nouts, temps, topks))
+        else:
+            prefill, _ = self._steps(reqs)
+            outs, lane_caches = prefill(view_params, jnp.asarray(toks),
+                                        self._zero_lanes, seeds, nouts,
+                                        temps, topks, li)
+            lanes = [self.scheduler.start(r) for r in reqs]
+            if self.paged:
+                for r in reqs:
+                    r.blocks = self._alloc_blocks(self._prefill_blocks)
+                self._note_block_use()
+                tables = self.pool.pad_tables([r.blocks for r in reqs],
+                                              self.max_batch)
+                self.pool.scatter(self.pool.pad_lanes(lanes, self.max_batch),
+                                  tables, lane_caches)
+            else:
+                self.pool.scatter(self.pool.pad_lanes(lanes, self.max_batch),
+                                  lane_caches)
+            self.stats["prefill_lane_tokens"] += self.max_prompt * len(reqs)
         self.stats["max_running"] = max(self.stats["max_running"],
                                         len(self.scheduler.running))
-        if self.paged:
-            for r in reqs:
-                got = self.pool.allocator.alloc(self._prefill_blocks)
-                assert got is not None, \
-                    "scheduler admitted past the block budget"
-                r.blocks = got
-            self._note_block_use()
-            tables = self.pool.pad_tables([r.blocks for r in reqs],
-                                          self.max_batch)
-            self.pool.scatter(self.pool.pad_lanes(lanes, self.max_batch),
-                              tables, lane_caches)
-        else:
-            self.pool.scatter(self.pool.pad_lanes(lanes, self.max_batch),
-                              lane_caches)
+        if self.prefix is not None:
+            # donate the prompt chains (full blocks + partial tail) so the
+            # next same-prefix request prefills only its suffix
+            for i, r in enumerate(reqs):
+                self.prefix.insert(scope, toks[i],
+                                   r.blocks[: self._prefill_blocks])
         outs = np.asarray(outs)
         now = time.perf_counter()
         for i, r in enumerate(reqs):
@@ -504,42 +661,156 @@ class LicensedGateway:
                 self._emit(r, logits_row=outs[i])
         self.stats["prefill_batches"] += 1
 
+    def _run_prefix_prefill(self, act: ScheduledAction, toks: np.ndarray,
+                            matches: List[Tuple[List[int], int]],
+                            lanes: List[int], view_params, li, sampling):
+        """Prefill a micro-batch with >= 1 prefix-cache hit: every lane
+        runs only its uncached suffix, at its own offset, in one vmapped
+        step.
+
+        Lanes share one (static) suffix width ``W = max(suffix lens)``;
+        a lane whose suffix is shorter is padded on the *right* (its
+        writes land beyond the prompt in its own decode region, masked
+        by ``len`` until decode overwrites them) and its last real row is
+        selected per lane.  Adopted blocks enter the table by reference;
+        write-back redirects every shared block to the null block, so
+        retained chains are never mutated."""
+        reqs = act.requests
+        seeds, nouts, temps, topks = sampling
+        suffix = [self.max_prompt - n for _, n in matches]
+        w = max(suffix)
+        sub = np.zeros((self.max_batch, w), np.int32)
+        poss = np.zeros(self.max_batch, np.int32)
+        lasts = np.zeros(self.max_batch, np.int32)
+        for i, r in enumerate(reqs):
+            blocks, ntok = matches[i]
+            sub[i, : suffix[i]] = toks[i, ntok:]
+            sub[i, suffix[i]:] = toks[i, -1]       # right pad: junk region
+            poss[i] = ntok
+            lasts[i] = suffix[i] - 1
+            fresh = self._alloc_blocks(self._prefill_blocks - len(blocks))
+            r.blocks = list(blocks) + fresh
+            r.prefix_tokens = ntok
+            self.stats["prefix_tokens_reused"] += ntok
+        self.stats["prefill_lane_tokens"] += w * len(reqs)
+        self._note_block_use()
+        lane_ids = self.pool.pad_lanes(lanes, self.max_batch)
+        tables = self.pool.pad_tables([r.blocks for r in reqs],
+                                      self.max_batch)
+        caches = self.pool.gather(lane_ids, tables, fresh_lane_state=True)
+        prefill = self._prefix_steps(reqs)
+        outs, lane_caches = prefill(view_params, jnp.asarray(sub), caches,
+                                    jnp.asarray(poss), jnp.asarray(lasts),
+                                    seeds, nouts, temps, topks, li)
+        # the step's len accounting saw only W suffix tokens; pin the
+        # counters to the true logical fill before they reach the pool
+        lane_caches = self.pool.override_counters(lane_caches,
+                                                  self.max_prompt)
+        self.pool.scatter(lane_ids, self._scatter_tables(tables, reqs),
+                          lane_caches)
+        return outs
+
+    def _try_alloc_one(self) -> Optional[int]:
+        """One block from the free list, reclaiming retained prefix chains
+        if needed — never preempts.  None when the pool is truly full."""
+        got = self.pool.allocator.alloc(1)
+        if got is None and self.prefix is not None and self.prefix.evict(1):
+            got = self.pool.allocator.alloc(1)
+        return got[0] if got is not None else None
+
+    def _grow_one(self, r: GatewayRequest,
+                  keep: List[GatewayRequest]) -> Optional[int]:
+        """One block for ``r``, trying free list, then prefix-cache
+        eviction, then youngest-first preemption.  Returns the block id,
+        or None if ``r`` itself was preempted to make room."""
+        while True:
+            got = self._try_alloc_one()
+            if got is not None:
+                return got
+            victim = self.scheduler.youngest_running()
+            if victim is r and len(self.scheduler.running) == 1:
+                raise RuntimeError(
+                    "block pool exhausted by a single request")
+            self._preempt(victim)
+            if victim in keep:
+                keep.remove(victim)
+            if victim is r:
+                return None
+
     def _grow_block_tables(self, reqs: List[GatewayRequest]) \
             -> List[GatewayRequest]:
-        """Give every request the block its next decode write needs.
+        """Give every request the block its next decode write needs, and a
+        *private* copy of it when the block is shared.
 
-        On pool exhaustion, preempt the youngest running request (free its
-        blocks, requeue it at the queue head) and retry; a victim inside
-        this micro-batch is dropped from it.  Terminates because the pool
-        holds at least one full request (constructor guard) and the
-        oldest running request is never chosen while others run.
+        On pool exhaustion, first evict retained (request-free) prefix
+        chains LRU-first, then preempt the youngest running request
+        (release its block references, requeue it at the queue head) and
+        retry; a victim inside this micro-batch is dropped from it.
+        Terminates because the pool holds at least one full request
+        (constructor guard), every eviction/preemption strictly drops
+        references, and the oldest running request is never chosen while
+        others run.
+
+        Copy-on-write: this step writes position ``pos`` into block
+        ``pos // bs``.  If that block is shared — the prompt tail donated
+        to (or adopted from) the prefix cache — the request gets a fresh
+        block holding a device copy and swaps its table entry; the shared
+        original stays pristine for its other holders.
         """
         keep = list(reqs)
+        if self.prefix is not None:
+            # reclaim the batch's whole shortfall — growth blocks plus a
+            # copy per shared write target (potential CoW) — in ONE
+            # eviction pass instead of one tree walk per block; only
+            # mid-pass churn falls back to _try_alloc_one's evict(1)
+            need = 0
+            for r in keep:
+                if r.state != RequestState.RUNNING:
+                    continue
+                tail = r.pos // self.pool.block_size
+                need += max(0, tail + 1 - len(r.blocks))
+                if tail < len(r.blocks) and \
+                        self.pool.allocator.refcount(r.blocks[tail]) > 1:
+                    need += 1
+            shortfall = need - self.pool.allocator.num_free
+            if shortfall > 0:
+                self.prefix.evict(shortfall)
         for r in list(keep):
             if r.state != RequestState.RUNNING:
                 continue                   # preempted earlier in this pass
             needed = r.pos // self.pool.block_size + 1
             while len(r.blocks) < needed:
-                got = self.pool.allocator.alloc(1)
-                if got is not None:
-                    r.blocks.extend(got)
-                    continue
-                victim = self.scheduler.youngest_running()
-                if victim is r and len(self.scheduler.running) == 1:
-                    raise RuntimeError(
-                        "block pool exhausted by a single request")
-                self._preempt(victim)
-                if victim in keep:
-                    keep.remove(victim)
-                if victim is r:
-                    break
+                b = self._grow_one(r, keep)
+                if b is None:
+                    break                  # r was preempted
+                r.blocks.append(b)
+            if r.state != RequestState.RUNNING:
+                continue
+            tail = needed - 1              # block receiving this step's write
+            if self.pool.allocator.refcount(r.blocks[tail]) > 1:
+                # shared write target: prefer a private copy, but with no
+                # spare block (fully provisioned pool) steal the tree's
+                # reference back instead — forfeiting one tail's future
+                # hits beats preempting a running request for a copy
+                b = self._try_alloc_one()
+                if b is None:
+                    if (self.prefix is not None
+                            and self.pool.allocator.refcount(
+                                r.blocks[tail]) == 2
+                            and self.prefix.forget_block(r.blocks[tail])):
+                        continue           # unshared now: write in place
+                    b = self._grow_one(r, keep)
+                    if b is None:
+                        continue           # r itself was preempted
+                self.pool.copy_block(r.blocks[tail], b)
+                self._decref_block(r.blocks[tail])
+                r.blocks[tail] = b
+                self.stats["cow_copies"] += 1
         self._note_block_use()
         return keep
 
     def _preempt(self, req: GatewayRequest) -> None:
-        if req.blocks:
-            self.pool.allocator.free(req.blocks)
-            req.blocks = []
+        self._release_blocks(req)
         # the restart will re-emit these tokens; keep the counter equal to
         # tokens actually delivered
         self.stats["tokens_generated"] -= len(req.out_tokens)
@@ -575,7 +846,12 @@ class LicensedGateway:
                               jnp.asarray(poss), seeds, nouts, temps,
                               topks, li)
         if self.paged:
-            self.pool.scatter(lanes, tables, caches)
+            # shared (prefix-cache) blocks are read-only: redirect their
+            # redundant write-back to the null block (the write target
+            # itself is always private — _grow_block_tables CoW'd it)
+            wb = (self._scatter_tables(tables, reqs)
+                  if self.prefix is not None else tables)
+            self.pool.scatter(lanes, wb, caches)
         else:
             self.pool.scatter(lanes, caches)
         outs = np.asarray(outs)
@@ -608,9 +884,10 @@ class LicensedGateway:
         self.stats["tokens_generated"] += 1
         if len(req.out_tokens) >= req.max_new_tokens:
             self.scheduler.finish(req)
-            if self.paged and req.blocks:
-                self.pool.allocator.free(req.blocks)
-                req.blocks = []
+            if self.paged:
+                # release references, don't free: blocks the prefix cache
+                # retains (the prompt chain) survive for future hits
+                self._release_blocks(req)
             self.completed.append(req)
             if self._drain_sink is not None:
                 self._drain_sink.append(req)
@@ -636,8 +913,10 @@ class LicensedGateway:
                              f"version {self.version}")
         if version in self._weights:
             # overwriting a live version: views built from the old weights
-            # must not survive the swap
+            # must not survive the swap — nor cached prefix activations
             self.views.invalidate(version=version)
+            if self.prefix is not None:
+                self.prefix.drop_scope(version=version)
         self._weights[version] = params
         self.version = version
         self._gc_versions()
@@ -648,6 +927,8 @@ class LicensedGateway:
         for v in [v for v in self._weights if v not in live]:
             del self._weights[v]
             self.views.invalidate(version=v)
+            if self.prefix is not None:
+                self.prefix.drop_scope(version=v)
         if self._pending_tiers:
             self._apply_pending_tiers()
 
@@ -695,6 +976,12 @@ class LicensedGateway:
         out["oldest_wait_s"] = self.scheduler.oldest_wait_s()
         out["queue_wait_by_tier"] = self.scheduler.queue_wait_by_tier()
         out["cache_pool"] = {"paged": self.paged, **self.pool.stats()}
+        out["prefix_cache"] = {"enabled": self.prefix is not None}
+        if self.prefix is not None:
+            out["prefix_cache"].update(self.prefix.stats())
+            out["prefix_cache"]["prefix_tokens_reused"] = \
+                self.stats["prefix_tokens_reused"]
+            out["prefix_cache"]["cow_copies"] = self.stats["cow_copies"]
         lats = [r.latency for r in self.completed if r.latency is not None]
         if lats:
             out["latency_p50_ms"] = float(np.percentile(lats, 50) * 1e3)

@@ -5,11 +5,15 @@ The seed :class:`~repro.serving.scheduler.CachePool` reserves one
 cache memory as a 64-token one and the lane count — not the memory — caps
 concurrency.  This module replaces the slab with **fixed-size blocks**:
 
-* :class:`BlockAllocator` — a host-side free list of physical block ids.
-  Requests allocate blocks on demand (``ceil(max_prompt/block_size)`` at
-  prefill, one more whenever decode crosses a block boundary) and return
-  them all on finish or preemption, so short and long requests share the
-  pool without over-reserving.
+* :class:`BlockAllocator` — a host-side free list of physical block ids
+  with per-block **reference counts**.  Requests allocate blocks on
+  demand (``ceil(max_prompt/block_size)`` at prefill, one more whenever
+  decode crosses a block boundary) and release their references on
+  finish or preemption, so short and long requests share the pool
+  without over-reserving; the prefix cache (``serving/prefix.py``)
+  retains prompt chains by holding extra references, and a shared block
+  is only written after :meth:`PagedCachePool.copy_block` gives the
+  writer a private copy (copy-on-write).
 * :class:`PagedCachePool` — the device-side store.  Per-token cache
   leaves (attention K/V, MLA compressed KV, int8 KV scales) live as
   ``(num_blocks + 1, ..., block_size, ...)`` physical blocks addressed
@@ -61,10 +65,23 @@ class NoPagedLeavesError(ValueError):
 
 
 class BlockAllocator:
-    """Free list of physical cache blocks with double-alloc/free guards.
+    """Free list of physical cache blocks with double-alloc/free guards
+    and per-block reference counts.
 
     Allocation is all-or-nothing (``alloc`` returns ``None`` rather than a
     partial grant) so a caller never holds a half-provisioned request.
+
+    Reference counts are the sharing substrate of the prefix cache
+    (``serving/prefix.py``): a freshly allocated block holds one
+    reference; every additional holder (a request adopting a cached
+    prefix chain, or the radix tree retaining one) takes its own via
+    :meth:`incref` and releases it via :meth:`decref` — the block
+    returns to the free list only when the last reference drops.  The
+    original double-alloc/free guards extend to the refcount paths:
+    ``incref`` on a block that is not live raises, and the hard
+    :meth:`free` refuses blocks with live references besides the
+    caller's, so a sharing bug surfaces as an exception rather than as
+    two requests silently scribbling over one block.
     """
 
     def __init__(self, num_blocks: int):
@@ -72,7 +89,8 @@ class BlockAllocator:
             raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
         self.num_blocks = int(num_blocks)
         self._free: List[int] = list(range(self.num_blocks))
-        self._held: set = set()
+        self._ref: Dict[int, int] = {}   # live block id -> reference count
+        self.alloc_count = 0             # cumulative blocks ever allocated
 
     @property
     def num_free(self) -> int:
@@ -80,32 +98,67 @@ class BlockAllocator:
 
     @property
     def num_held(self) -> int:
-        return len(self._held)
+        return len(self._ref)
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Atomically allocate ``n`` blocks; None if the pool can't cover it."""
+        """Atomically allocate ``n`` blocks; None if the pool can't cover it.
+
+        Each granted block starts with reference count 1 (the caller's)."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
             return None
         got = [self._free.pop() for _ in range(n)]
-        self._held.update(got)
+        for b in got:
+            self._ref[b] = 1
+        self.alloc_count += n
         return got
 
+    def refcount(self, block: int) -> int:
+        """Live reference count of ``block`` (0 when free/foreign)."""
+        return self._ref.get(block, 0)
+
+    def incref(self, block: int) -> int:
+        """Take an additional reference on a live block; freed or foreign
+        block ids raise (the double-alloc guard on the sharing path)."""
+        if block not in self._ref:
+            raise ValueError(f"incref of unallocated block {block}")
+        self._ref[block] += 1
+        return self._ref[block]
+
+    def decref(self, block: int) -> int:
+        """Drop one reference; the block returns to the free list when the
+        count reaches zero.  Returns the remaining count.  Over-release
+        (a freed or foreign id) raises — the double-free guard."""
+        if block not in self._ref:
+            raise ValueError(f"decref of unallocated block {block}")
+        self._ref[block] -= 1
+        left = self._ref[block]
+        if left == 0:
+            del self._ref[block]
+            self._free.append(block)
+        return left
+
     def free(self, blocks: Sequence[int]) -> None:
-        """Return blocks to the pool; double-frees and foreign ids raise."""
+        """Return exclusively-held blocks to the pool; double-frees,
+        foreign ids, and blocks with live shared references raise."""
         for b in blocks:
-            if b not in self._held:
+            if b not in self._ref:
                 raise ValueError(f"free of unallocated block {b}")
-            self._held.discard(b)
+            if self._ref[b] != 1:
+                raise ValueError(
+                    f"free of block {b} with {self._ref[b]} live refs; "
+                    f"shared blocks must be released via decref")
+            del self._ref[b]
             self._free.append(b)
 
     def stats(self) -> Dict[str, int]:
         return {"num_blocks": self.num_blocks, "free": self.num_free,
-                "held": self.num_held}
+                "held": self.num_held, "alloc_count": self.alloc_count,
+                "shared": sum(1 for c in self._ref.values() if c > 1)}
 
 
 class PagedCachePool:
@@ -161,6 +214,7 @@ class PagedCachePool:
         p_leaves, _ = jax.tree_util.tree_flatten(probe)
         self._meta: List[Tuple[bool, int]] = []   # (paged, capacity axis)
         self._storage: List[jnp.ndarray] = []
+        self._lane_init: List[Optional[jnp.ndarray]] = []  # pristine per-lane
         for t, p in zip(t_leaves, p_leaves):
             diff = [i for i, (a, b) in enumerate(zip(t.shape, p.shape))
                     if a != b]
@@ -172,14 +226,25 @@ class PagedCachePool:
                 self._meta.append((True, axis))
                 self._storage.append(
                     jnp.zeros((self.num_blocks + 1, *shape), t.dtype))
+                self._lane_init.append(None)
             else:
                 self._meta.append((False, -1))
                 self._storage.append(jnp.broadcast_to(
                     t[None], (self.num_lanes + 1, *t.shape)))
+                self._lane_init.append(t)
         if not any(paged for paged, _ in self._meta):
             raise NoPagedLeavesError(
                 "no per-token cache leaves to page (pure-recurrent model); "
                 "use the contiguous CachePool instead")
+        # Prefix caching stores *blocks* only, so a cached chain can seed a
+        # new request iff every non-paged leaf is a position counter the
+        # gateway can reconstruct (integer ``len``).  Float per-lane state
+        # (SSM/conv/RG-LRU, sliding-window ring caches) would need a state
+        # snapshot at the prefix boundary — not block-shaped — so models
+        # carrying any disable prefix reuse rather than serve wrong state.
+        self.prefix_cacheable = all(
+            jnp.issubdtype(t.dtype, jnp.integer)
+            for t, (paged, _) in zip(t_leaves, self._meta) if not paged)
 
     # ------------------------------------------------------------- indices
     @property
@@ -217,7 +282,8 @@ class PagedCachePool:
         return out
 
     # ------------------------------------------------------- gather/scatter
-    def gather(self, lanes: Sequence[int], tables) -> Any:
+    def gather(self, lanes: Sequence[int], tables, *,
+               fresh_lane_state: bool = False) -> Any:
         """Materialize per-lane contiguous cache views for a micro-batch.
 
         ``tables`` is (B, blocks_per_lane) int32; entry order is logical
@@ -225,17 +291,28 @@ class PagedCachePool:
         ``[0, padded_capacity)``.  Unallocated (null) entries contribute
         garbage beyond the lane's valid length, which the attention mask
         (``kv_len``) never reads.
+
+        ``fresh_lane_state=True`` substitutes the pristine ``init_cache``
+        value for every non-paged (per-lane) leaf instead of reading the
+        lane rows — the prefix-cached prefill seeds a *new* request from
+        retained blocks, and its freshly assigned lane may still carry a
+        previous occupant's counters.
         """
         lane_idx = jnp.asarray(lanes, jnp.int32)
         tab = jnp.asarray(tables, jnp.int32)
+        width = len(lanes)
         leaves = []
-        for arr, (paged, axis) in zip(self._storage, self._meta):
+        for arr, (paged, axis), init in zip(self._storage, self._meta,
+                                            self._lane_init):
             if paged:
                 g = jnp.moveaxis(arr[tab], 1, 1 + axis)
                 s = g.shape
                 g = g.reshape(*s[: 1 + axis], s[1 + axis] * s[2 + axis],
                               *s[3 + axis:])
                 leaves.append(g)
+            elif fresh_lane_state:
+                leaves.append(jnp.broadcast_to(init[None],
+                                               (width, *init.shape)))
             else:
                 leaves.append(arr[lane_idx])
         return jax.tree_util.tree_unflatten(self._treedef, leaves)
@@ -260,6 +337,32 @@ class PagedCachePool:
             else:
                 out.append(arr.at[lane_idx].set(new.astype(arr.dtype)))
         self._storage = out
+
+    # --------------------------------------------------- prefix-cache hooks
+    def copy_block(self, src: int, dst: int) -> None:
+        """Copy one physical block's content across every paged leaf —
+        the device half of copy-on-write: a request about to write into a
+        shared block gets a private ``dst`` holding identical bytes."""
+        out = []
+        for arr, (paged, _) in zip(self._storage, self._meta):
+            out.append(arr.at[dst].set(arr[src]) if paged else arr)
+        self._storage = out
+
+    def override_counters(self, caches: Any, value: int) -> Any:
+        """Set every non-paged integer leaf (position counters) to ``value``.
+
+        The suffix prefill runs only ``W`` uncached tokens per lane, so
+        the model's ``len`` accounting comes out as ``W`` (or junk for
+        padded lanes) instead of the true logical fill; the gateway pins
+        it to the prompt bucket before scattering.  Valid exactly because
+        ``prefix_cacheable`` guarantees non-paged leaves are counters."""
+        leaves, treedef = jax.tree_util.tree_flatten(caches)
+        assert treedef == self._treedef
+        out = [jnp.full_like(leaf, value)
+               if not paged and jnp.issubdtype(leaf.dtype, jnp.integer)
+               else leaf
+               for leaf, (paged, _) in zip(leaves, self._meta)]
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     def stats(self) -> Dict[str, int]:
         st = self.allocator.stats()

@@ -1,0 +1,306 @@
+"""Shared-prefix radix cache: tier-scoped prompt-prefix reuse over paged blocks.
+
+Tier-homogeneous traffic through the licensed gateway repeatedly
+prefill-computes the same system/prompt prefixes — identical tokens at
+identical positions under the same ``(tier, version)`` weight view
+produce identical KV blocks, so recomputing them is pure wasted FLOPs
+and pool space.  This module retains those blocks after their request
+finishes and hands them to later requests (SGLang-style radix caching
+on top of the vLLM-style block pool in ``serving/paging.py``):
+
+* :class:`PrefixCache` keeps one radix tree **per (tier, version)
+  scope**.  Scoping is the licensing boundary: a cached block encodes
+  activations of a *masked weight view*, so a ``free``-tier prefix must
+  never seed a ``pro``-tier request even when the tokens match —
+  cross-tier reuse would leak the better view's representations.  Each
+  tree node covers one physical block (up to ``block_size`` tokens;
+  the last node of a chain may be *partial* — prompt buckets are fixed
+  per scope, so partial fills only ever terminate a chain and never
+  need splitting).
+* Retention holds one allocator **reference** per tree-referenced
+  block.  A block whose refcount is exactly 1 is held by the tree alone
+  ("refcount-0" from the requests' point of view) and is *reclaimable*:
+  :meth:`evict` walks leaves in LRU order and drops tree references
+  until enough blocks actually return to the free list, skipping
+  blocks still pinned by running requests.  A request's table holds the
+  whole chain of any block it holds, so a refcount-1 node can never
+  have a request-pinned descendant — its entire subtree is evictable.
+* :meth:`match` returns the longest cached chain for a prompt and takes
+  a reference on every returned block for the caller; :meth:`insert`
+  donates a freshly prefilled chain (the tree takes its own references)
+  so the *first* request with a prompt populates the cache for the rest.
+
+Writes never target a shared block: the gateway routes prefill
+write-back of adopted blocks to the null block, and decode
+copy-on-writes a shared tail block before its first write into it
+(``PagedCachePool.copy_block``).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+from repro.serving.paging import BlockAllocator
+
+
+class _Node:
+    """One cached block: ``tokens`` (its chunk, ``fill`` of them) under a
+    parent chunk chain.  ``children`` is keyed by the child's full token
+    tuple, so full-block lookup is one dict probe."""
+
+    __slots__ = ("tokens", "block", "parent", "children", "last_used")
+
+    def __init__(self, tokens: Tuple[int, ...], block: int,
+                 parent: "_Node"):
+        self.tokens = tokens
+        self.block = block
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.last_used = 0
+
+    @property
+    def fill(self) -> int:
+        return len(self.tokens)
+
+
+class _Root(_Node):
+    def __init__(self):
+        super().__init__((), -1, None)  # type: ignore[arg-type]
+
+
+class PrefixCache:
+    """Radix trees of retained prompt-block chains, one per scope.
+
+    The allocator is shared with the gateway's :class:`PagedCachePool`;
+    the cache only ever moves *references*, never block contents.
+    """
+
+    def __init__(self, allocator: BlockAllocator, block_size: int):
+        self.allocator = allocator
+        self.block_size = int(block_size)
+        self._scopes: Dict[Hashable, _Root] = {}
+        self._by_block: Dict[int, _Node] = {}   # block id -> retaining node
+        # count of tree blocks whose ONLY reference is the tree's — the
+        # evictable set.  Kept O(1)-exact across every transition: the
+        # tree sees its own incref/decref sites, and the gateway reports
+        # request releases via note_release().  Admission reads this
+        # every scheduling step, so it must not walk the tree.
+        self._retained = 0
+        self._clock = 0                  # LRU tick, bumped on every touch
+        self.hits = 0                    # match() calls that reused >=1 block
+        self.misses = 0
+        self.hit_tokens = 0              # cumulative tokens served from cache
+        self.inserted_blocks = 0         # chains donated by finished prefills
+        self.evicted_blocks = 0          # tree references dropped under pressure
+        self.dropped_blocks = 0          # scope invalidations (version GC,
+                                         # tier redefinition) — not pressure
+
+    # ----------------------------------------------------------- structure
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _nodes(self, root: _Node) -> List[_Node]:
+        out, stack = [], list(root.children.values())
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            stack.extend(n.children.values())
+        return out
+
+    def num_blocks(self) -> int:
+        """Total blocks referenced by all trees (any refcount)."""
+        return len(self._by_block)
+
+    def reclaimable(self) -> int:
+        """Blocks held by the tree alone (allocator refcount == 1) —
+        exactly the blocks :meth:`evict` can return to the free list.
+        A request holds the full chain of every block it shares, so a
+        refcount-1 node cannot have a request-pinned descendant; the
+        count is exact (an O(1) maintained counter, asserted against a
+        full recount in the tests)."""
+        return self._retained
+
+    def note_release(self, block: int) -> None:
+        """Gateway hook: a request dropped its reference on ``block`` and
+        exactly one reference remains.  If that survivor is the tree's,
+        the block just became reclaimable."""
+        if block in self._by_block:
+            self._retained += 1
+
+    # --------------------------------------------------------------- match
+    def match(self, scope: Hashable, tokens: Sequence[int]) \
+            -> Tuple[List[int], int]:
+        """Longest cached chain for ``tokens`` under ``scope``.
+
+        Returns ``(blocks, matched_tokens)`` in logical order; every
+        returned block has been ``incref``-ed for the caller (so a
+        concurrent eviction can never free it under the caller), and the
+        matched path is LRU-touched.  ``matched_tokens`` counts the real
+        tokens the chain covers — a partial tail node matches only when
+        it covers the remaining tokens exactly.
+        """
+        tokens = [int(t) for t in tokens]
+        root = self._scopes.get(scope)
+        blocks: List[int] = []
+        matched = 0
+        if root is not None:
+            node = root
+            i = 0
+            while i < len(tokens):
+                child = None
+                if i + self.block_size <= len(tokens):
+                    child = node.children.get(
+                        tuple(tokens[i: i + self.block_size]))
+                if child is None:
+                    tail = node.children.get(tuple(tokens[i:]))
+                    if tail is not None and tail.fill < self.block_size:
+                        child = tail
+                if child is None:
+                    break
+                child.last_used = self._tick()
+                blocks.append(child.block)
+                matched += child.fill
+                node = child
+                i = matched
+        for b in blocks:
+            if self.allocator.incref(b) == 2:
+                self._retained -= 1          # was tree-only, now adopted
+        if matched:
+            self.hits += 1
+            self.hit_tokens += matched
+        else:
+            self.misses += 1
+        return blocks, matched
+
+    # -------------------------------------------------------------- insert
+    def insert(self, scope: Hashable, tokens: Sequence[int],
+               blocks: Sequence[int]) -> int:
+        """Donate a freshly prefilled chain: ``blocks[j]`` holds tokens
+        ``[j*bs, min((j+1)*bs, len(tokens)))``.
+
+        Chunks already present keep the tree's existing block (two
+        same-prompt requests prefilled in one micro-batch both compute
+        the chain; the second's copy stays private to it and dies with
+        it).  New chunks take one tree reference on the request's block.
+        Returns the number of newly retained blocks.
+        """
+        tokens = [int(t) for t in tokens]
+        root = self._scopes.setdefault(scope, _Root())
+        node: _Node = root
+        donated = 0
+        for j, block in enumerate(blocks):
+            chunk = tuple(tokens[j * self.block_size:
+                                 (j + 1) * self.block_size])
+            if not chunk:
+                break
+            child = node.children.get(chunk)
+            if child is None:
+                child = _Node(chunk, int(block), node)
+                node.children[chunk] = child
+                self.allocator.incref(int(block))
+                self._by_block[int(block)] = child
+                donated += 1
+            child.last_used = self._tick()
+            node = child
+        self.inserted_blocks += donated
+        return donated
+
+    # ------------------------------------------------------------ eviction
+    def evict(self, n_blocks: int) -> int:
+        """Drop LRU refcount-0 chains until ``n_blocks`` blocks actually
+        returned to the free list (or nothing more is evictable).
+
+        Only leaves are evictable (an interior block is the prefix of its
+        children), and leaves still pinned by a request are skipped —
+        dropping the tree's reference on those would reclaim nothing and
+        forfeit the future hit.  Returns the number of blocks freed.
+        """
+        freed = 0
+        if n_blocks <= 0 or self._retained <= 0:
+            return freed                   # nothing evictable: skip the walk
+        heap: List[Tuple[int, int, Hashable, _Node]] = []
+        seq = 0
+        for scope, root in self._scopes.items():
+            for node in self._nodes(root):
+                if not node.children:
+                    heapq.heappush(heap, (node.last_used, seq, scope, node))
+                    seq += 1
+        while heap and freed < n_blocks:
+            _, _, scope, node = heapq.heappop(heap)
+            if node.children:          # re-pushed parent grew? (defensive)
+                continue
+            if self.allocator.refcount(node.block) != 1:
+                continue               # request-pinned: not reclaimable
+            self.allocator.decref(node.block)
+            self.evicted_blocks += 1
+            self._retained -= 1
+            freed += 1
+            parent = node.parent
+            del parent.children[node.tokens]
+            self._by_block.pop(node.block, None)
+            if parent is not None and not isinstance(parent, _Root) \
+                    and not parent.children:
+                heapq.heappush(heap, (parent.last_used, seq, scope, parent))
+                seq += 1
+        return freed
+
+    # ------------------------------------------------------------- scoping
+    def drop_scope(self, *, tier: Optional[str] = None,
+                   version: Optional[int] = None) -> int:
+        """Release every tree reference of the matching scopes (None = any
+        on that axis) — weight-version GC and tier redefinition/revocation
+        must not keep serving stale activations.  Blocks still pinned by
+        in-flight requests stay alive until those requests release them.
+        """
+        dropped = 0
+        for scope in [s for s in self._scopes
+                      if (tier is None or s[0] == tier)
+                      and (version is None or s[1] == version)]:
+            for node in self._nodes(self._scopes.pop(scope)):
+                if self.allocator.refcount(node.block) == 1:
+                    self._retained -= 1    # was tree-only before the drop
+                self.allocator.decref(node.block)
+                self._by_block.pop(node.block, None)
+                dropped += 1
+        self.dropped_blocks += dropped
+        return dropped
+
+    def forget_block(self, block: int) -> bool:
+        """Drop the tree's reference on one retained *leaf* block so its
+        remaining holder can write it in place.
+
+        This is the pressure valve behind copy-on-write: when a request
+        must write into its shared prompt tail but the pool has no spare
+        block for a copy, forfeiting the tail's future hits beats
+        preempting a running request.  Interior nodes are refused —
+        their content is the prefix of live children.  Returns True if a
+        reference was dropped.
+        """
+        node = self._by_block.get(block)
+        if node is None or node.children:
+            return False
+        del node.parent.children[node.tokens]
+        del self._by_block[block]
+        if self.allocator.refcount(block) == 1:
+            self._retained -= 1            # was tree-only before the drop
+        self.allocator.decref(block)
+        self.evicted_blocks += 1
+        return True
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "hit_rate": round(self.hits / total, 4) if total else 0.0,
+            # raw matched tokens; the gateway's ``prefix_tokens_reused``
+            # stat is the capped number actually skipped at prefill
+            "matched_tokens": self.hit_tokens,
+            "cached_blocks": len(self._by_block),
+            "retained_blocks": self._retained,
+            "inserted_blocks": self.inserted_blocks,
+            "evicted_blocks": self.evicted_blocks,
+            "dropped_blocks": self.dropped_blocks,
+            "scopes": len(self._scopes),
+        }

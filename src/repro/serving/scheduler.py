@@ -76,6 +76,8 @@ class GatewayRequest:
     out_tokens: List[int] = field(default_factory=list)
     lane: Optional[int] = None               # cache-pool lane while RUNNING
     blocks: List[int] = field(default_factory=list)  # paged-pool block table
+    prefix_tokens: int = 0                   # prompt tokens served from the
+                                             # prefix cache at prefill
     pos: int = 0                             # next decode position
     start_seq: int = -1                      # admission order (preemption age)
     preemptions: int = 0
@@ -256,12 +258,17 @@ class Scheduler:
 
     def __init__(self, num_lanes: int, max_batch: int, *,
                  allocator: Any = None, prefill_blocks: int = 0,
-                 watermark_blocks: int = 0):
+                 watermark_blocks: int = 0,
+                 reclaimable: Optional[Callable[[], int]] = None):
         self.num_lanes = int(num_lanes)
         self.max_batch = int(max_batch)
         self.allocator = allocator
         self.prefill_blocks = int(prefill_blocks)
         self.watermark_blocks = int(watermark_blocks)
+        # blocks the gateway can reclaim on demand (prefix-cache retained
+        # chains with no live request references) — they count toward the
+        # admission budget because eviction frees them before allocation
+        self.reclaimable = reclaimable
         self.waiting: Deque[GatewayRequest] = deque()
         self.running: List[GatewayRequest] = []
         self._free_lanes: List[int] = list(range(num_lanes))
@@ -309,6 +316,7 @@ class Scheduler:
             self._free_lanes.append(req.lane)
         req.lane = None
         req.pos = 0
+        req.prefix_tokens = 0
         req.out_tokens.clear()
         if req.logits_rows is not None:
             req.logits_rows.clear()
@@ -349,6 +357,8 @@ class Scheduler:
         room = min(len(self._free_lanes), self.max_batch)
         if self.allocator is not None and self.prefill_blocks > 0:
             budget = self.allocator.num_free - self.watermark_blocks
+            if self.reclaimable is not None:
+                budget += self.reclaimable()
             room = min(room, max(0, budget // self.prefill_blocks))
         return room
 

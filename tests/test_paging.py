@@ -72,6 +72,33 @@ def test_allocator_rejects_foreign_and_bad_sizes():
     assert a.alloc(0) == []
 
 
+def test_allocator_refcount_guards():
+    """The double-alloc/free guards extend to the sharing paths: incref
+    on a freed block raises, free with live shared refs raises, and a
+    block only returns to the pool when the last reference drops."""
+    a = BlockAllocator(4)
+    (b,) = a.alloc(1)
+    assert a.refcount(b) == 1
+    assert a.incref(b) == 2                   # second holder (prefix cache)
+    with pytest.raises(ValueError):
+        a.free([b])                           # live refs: hard free refused
+    assert a.num_held == 1 and a.num_free == 3
+    assert a.decref(b) == 1                   # still held by one
+    assert a.num_free == 3
+    assert a.decref(b) == 0                   # last ref: back to the pool
+    assert a.num_free == 4 and a.refcount(b) == 0
+    with pytest.raises(ValueError):
+        a.incref(b)                           # incref on a freed block
+    with pytest.raises(ValueError):
+        a.decref(b)                           # over-release
+    with pytest.raises(ValueError):
+        a.incref(99)                          # foreign id
+    # free() still works for exclusively-held blocks (the non-shared path)
+    got = a.alloc(2)
+    a.free(got)
+    assert a.num_free == 4
+
+
 @settings(max_examples=30, deadline=None)
 @given(
     num_blocks=st.integers(min_value=1, max_value=32),
@@ -210,7 +237,11 @@ def test_preemption_requeue_roundtrip(setup):
     still complete every request with exactly its token budget — and the
     restarted requests must reproduce the tokens of an uncontended run."""
     want = {}
-    gw = _gateway(setup, max_batch=2, paged=True, block_size=4)
+    # prefix_cache=False: this test pins the PR 2 free-everything contract
+    # (every block returns on finish); retention semantics are covered in
+    # test_prefix.py
+    gw = _gateway(setup, max_batch=2, paged=True, block_size=4,
+                  prefix_cache=False)
     for i in range(5):
         r = gw.submit(_prompt(i), license="free", max_new_tokens=3 + 2 * (i % 2))
         want[i] = r
@@ -218,6 +249,7 @@ def test_preemption_requeue_roundtrip(setup):
     assert gw.stats["preempted"] == 0          # fully provisioned
 
     gw2 = _gateway(setup, max_batch=2, paged=True, block_size=4,
+                   prefix_cache=False,
                    max_lanes=4, num_blocks=9)  # 36 tokens for 4 lanes of 16
     reqs = [gw2.submit(_prompt(i), license="free", max_new_tokens=3 + 2 * (i % 2))
             for i in range(5)]

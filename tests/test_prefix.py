@@ -1,0 +1,330 @@
+"""Shared-prefix radix cache: radix-tree invariants, prefix-hit logit
+equivalence vs cold prefill, copy-on-write of shared tail blocks,
+(tier, version) scoping, LRU eviction under watermark pressure, and
+preemption of requests holding shared blocks."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.licensing import LicenseTier
+from repro.models import init_params
+from repro.serving import (BlockAllocator, LicensedGateway, PrefixCache,
+                           RequestState)
+
+MAX_PROMPT = 8
+MAX_NEW = 8
+BLOCK = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tiers = {
+        "free": LicenseTier(name="free", masks={"*": ((0.0, 0.004),)}),
+        "pro": LicenseTier(name="pro", masks={"*": ((0.0, 0.002),)}),
+    }
+    return cfg, params, tiers
+
+
+def _gateway(setup, **kw):
+    cfg, params, tiers = setup
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_prompt", MAX_PROMPT)
+    kw.setdefault("max_new_cap", MAX_NEW)
+    kw.setdefault("block_size", BLOCK)
+    return LicensedGateway(cfg, params, tiers=tiers, **kw)
+
+
+def _shared_prompts(seed, n, shared=BLOCK, total=MAX_PROMPT):
+    """n prompts sharing their first ``shared`` tokens (one system prompt),
+    each with a distinct tail — the tier-homogeneous traffic shape."""
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, 500, shared, dtype=np.int32)
+    return [np.concatenate([head,
+                            rng.integers(0, 500, total - shared,
+                                         dtype=np.int32)])
+            for _ in range(n)]
+
+
+def _recount_reclaimable(pc):
+    """Ground truth for the O(1) reclaimable counter: a full walk."""
+    return sum(1 for b in pc._by_block
+               if pc.allocator.refcount(b) == 1)
+
+
+def _release(pc, blocks):
+    """Release request references the way the gateway does: decref plus
+    the note_release() hook that keeps the reclaimable counter exact."""
+    for b in blocks:
+        if pc.allocator.decref(b) == 1:
+            pc.note_release(b)
+
+
+def _drain(gw, prompts, *, license="free", max_new=4, waves=1):
+    """Submit prompts in ``waves`` rounds (draining between rounds so later
+    rounds see the populated cache) and return the requests."""
+    reqs = []
+    per = -(-len(prompts) // waves)
+    for w in range(waves):
+        chunk = prompts[w * per: (w + 1) * per]
+        reqs += [gw.submit(p, license=license, max_new_tokens=max_new)
+                 for p in chunk]
+        gw.run()
+    assert all(r.state == RequestState.DONE for r in reqs), \
+        [r.error for r in reqs]
+    if getattr(gw, "prefix", None) is not None:
+        # the admission budget rides this counter: it must never drift
+        assert gw.prefix.reclaimable() == _recount_reclaimable(gw.prefix)
+    return reqs
+
+
+# --------------------------------------------------------------- radix tree
+def test_radix_match_insert_refcounts():
+    a = BlockAllocator(16)
+    pc = PrefixCache(a, block_size=4)
+    toks = list(range(10))                       # 2 full blocks + fill-2 tail
+    blocks = a.alloc(3)
+    assert pc.match("s", toks) == ([], 0)        # cold: miss
+    assert pc.insert("s", toks, blocks) == 3     # tree takes its refs
+    assert all(a.refcount(b) == 2 for b in blocks)
+    _release(pc, blocks)                         # request finishes
+    assert pc.reclaimable() == 3                 # tree-only now
+
+    got, n = pc.match("s", toks)                 # full chain incl. partial
+    assert got == blocks and n == 10
+    assert all(a.refcount(b) == 2 for b in got)  # incref'd for the caller
+    got2, n2 = pc.match("s", toks[:8] + [99, 98])  # diverging tail
+    assert got2 == blocks[:2] and n2 == 8
+    got3, n3 = pc.match("s", [77] + toks[1:])    # diverges at block 0
+    assert got3 == [] and n3 == 0
+    # a shorter query must not match a longer partial tail
+    got4, n4 = pc.match("s", toks[:9])
+    assert got4 == blocks[:2] and n4 == 8
+    st = pc.stats()
+    assert st["hits"] == 3 and st["misses"] == 2  # cold + diverged-at-0
+
+
+def test_radix_insert_keeps_existing_nodes():
+    """Two same-prompt chains: the second donation is skipped (the tree
+    keeps the first), and the duplicate stays the caller's to release."""
+    a = BlockAllocator(8)
+    pc = PrefixCache(a, block_size=4)
+    toks = list(range(8))
+    first, second = a.alloc(2), a.alloc(2)
+    assert pc.insert("s", toks, first) == 2
+    assert pc.insert("s", toks, second) == 0
+    assert a.refcount(second[0]) == 1            # still private
+    a.free(second)                               # dies with its request
+    got, n = pc.match("s", toks)
+    assert got == first and n == 8
+
+
+def test_radix_lru_eviction_leaf_first():
+    a = BlockAllocator(16)
+    pc = PrefixCache(a, block_size=4)
+    chains = {}
+    for s in range(3):
+        toks = [100 * s + i for i in range(8)]
+        blocks = a.alloc(2)
+        pc.insert("s", toks, blocks)
+        _release(pc, blocks)
+        chains[s] = (toks, blocks)
+    pc.match("s", chains[0][0])                  # chain 0 recently used
+    free_before = a.num_free
+    # release the match's refs so everything is tree-only again
+    _release(pc, chains[0][1])
+    assert pc.evict(2) == 2                      # LRU chain (1) goes first
+    assert a.num_free == free_before + 2
+    assert pc.match("s", chains[1][0]) == ([], 0)
+    got, n = pc.match("s", chains[0][0])         # survivor intact
+    assert n == 8
+    # pinned chains are skipped: chain 0 is request-held via the match
+    assert pc.evict(10) == 2                     # only chain 2 reclaimable
+    got2, n2 = pc.match("s", chains[0][0])
+    assert n2 == 8
+
+
+def test_radix_scope_isolation_and_drop():
+    a = BlockAllocator(8)
+    pc = PrefixCache(a, block_size=4)
+    toks = list(range(8))
+    blocks = a.alloc(2)
+    pc.insert(("free", 1), toks, blocks)
+    _release(pc, blocks)
+    assert pc.match(("pro", 1), toks) == ([], 0)   # tier boundary
+    assert pc.match(("free", 2), toks) == ([], 0)  # version boundary
+    assert pc.match(("free", 1), toks)[1] == 8
+    _release(pc, blocks)
+    assert pc.drop_scope(version=1) == 2
+    assert a.num_free == 8
+    assert pc.match(("free", 1), toks) == ([], 0)
+
+
+# ------------------------------------------------- gateway: hit equivalence
+def test_prefix_hits_match_cold_prefill_logits(setup):
+    """The acceptance bar: a shared-system-prompt stream served through
+    the prefix cache produces per-step logits equal (1e-5) to cold
+    serving, with identical tokens, while actually reusing blocks."""
+    prompts = _shared_prompts(0, 6) + [None]
+    prompts[-1] = prompts[0].copy()              # exact repeat: full match
+    streams, gws = [], []
+    for prefix in (False, True):
+        gw = _gateway(setup, prefix_cache=prefix, record_logits=True)
+        streams.append(_drain(gw, prompts, waves=2))
+        gws.append(gw)
+    for a, b in zip(*streams):
+        assert a.out_tokens == b.out_tokens
+        for ra, rb in zip(a.logits_rows, b.logits_rows):
+            np.testing.assert_allclose(ra, rb, atol=1e-5, rtol=0)
+    cold, warm = gws
+    assert warm.stats["prefix_tokens_reused"] > 0
+    assert warm.metrics()["prefix_cache"]["hits"] > 0
+    # strictly less prefill compute and strictly fewer block allocations
+    assert warm.stats["prefill_lane_tokens"] < cold.stats["prefill_lane_tokens"]
+    assert warm.pool.allocator.alloc_count < cold.pool.allocator.alloc_count
+
+
+def test_cow_on_shared_tail_block(setup):
+    """Non-block-aligned prompt bucket: the donated partial tail block is
+    shared between the radix tree and the request, so decode's first
+    write into it must copy-on-write — and tokens must still match the
+    prefix-disabled run exactly."""
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, 500, 6, dtype=np.int32)
+    prompts = [p.copy() for _ in range(4)]
+    streams, gws = [], []
+    for prefix in (False, True):
+        gw = _gateway(setup, max_prompt=6, max_new_cap=6,
+                      prefix_cache=prefix, record_logits=True)
+        streams.append(_drain(gw, prompts, max_new=3, waves=2))
+        gws.append(gw)
+    for a, b in zip(*streams):
+        assert a.out_tokens == b.out_tokens
+        for ra, rb in zip(a.logits_rows, b.logits_rows):
+            np.testing.assert_allclose(ra, rb, atol=1e-5, rtol=0)
+    m = gws[1].metrics()["prefix_cache"]
+    assert m["cow_copies"] > 0
+    assert gws[0].stats["cow_copies"] == 0
+
+
+def test_tier_and_version_isolation(setup):
+    """The same prompt under another tier — or after a weight update —
+    must not hit: cached blocks encode one masked view's activations."""
+    gw = _gateway(setup)
+    prompts = [_shared_prompts(1, 1)[0]] * 2
+    _drain(gw, prompts[:1], license="free")
+    hits0 = gw.prefix.hits
+    _drain(gw, prompts[:1], license="pro")       # same tokens, other tier
+    assert gw.prefix.hits == hits0               # no cross-tier reuse
+    _drain(gw, prompts[:1], license="free")      # same tier: hit
+    assert gw.prefix.hits == hits0 + 1
+
+    cfg, params, _ = setup
+    scopes0 = gw.prefix.stats()["scopes"]
+    assert scopes0 == 2
+    gw.update_weights(jax.tree_util.tree_map(lambda x: x * 1.01, params))
+    _drain(gw, prompts[:1], license="free")      # new version: no hit
+    assert gw.prefix.hits == hits0 + 1
+    # the old version drained, so its scopes (and retained chains) are gone
+    assert all(s[1] == gw.version for s in gw.prefix._scopes)
+
+
+def test_eviction_under_watermark_pressure(setup):
+    """A pool too small to retain every chain must keep serving: retained
+    refcount-0 chains are evicted LRU-first when admission or decode
+    growth needs blocks, and admission's budget counts them as free."""
+    # 6 blocks of 4 = 24 cache tokens; each request needs up to 4 blocks
+    gw = _gateway(setup, max_lanes=3, num_blocks=6, watermark_blocks=1)
+    prompts = [np.random.default_rng(10 + i).integers(0, 500, MAX_PROMPT,
+                                                      dtype=np.int32)
+               for i in range(6)]
+    _drain(gw, prompts, max_new=4, waves=3)
+    st = gw.metrics()["prefix_cache"]
+    assert st["evicted_blocks"] > 0
+    alloc = gw.pool.allocator
+    # accounting: every live block is tree-retained (no requests remain)
+    assert alloc.num_held == st["retained_blocks"] == st["cached_blocks"]
+    assert alloc.num_free + alloc.num_held == gw.pool.num_blocks
+
+
+def test_preempted_shared_holder_restarts_equivalently(setup):
+    """Preempting a request that holds shared (adopted) blocks releases
+    references, not blocks; on restart it re-matches the cache and must
+    reproduce the tokens of an uncontended run."""
+    prompts = _shared_prompts(5, 5)
+    ref = _drain(_gateway(setup, prefix_cache=True), prompts, max_new=5)
+    gw = _gateway(setup, prefix_cache=True, max_batch=2, max_lanes=4,
+                  num_blocks=7)                  # oversubscribed: 28 tokens
+    reqs = _drain(gw, prompts, max_new=5)
+    assert gw.stats["preempted"] > 0
+    preempted = [r for r in reqs if r.preemptions]
+    assert preempted
+    for a, b in zip(ref, reqs):
+        assert a.out_tokens == b.out_tokens
+    # every request reference came back; only tree retention holds blocks
+    st = gw.metrics()["prefix_cache"]
+    assert gw.pool.allocator.num_held == st["retained_blocks"]
+
+
+def test_prefix_disabled_paths_untouched(setup):
+    """prefix_cache=False and paged=False keep the PR 2 contract: no
+    retention, every block freed on finish, no prefix metrics surprises."""
+    gw = _gateway(setup, prefix_cache=False)
+    _drain(gw, _shared_prompts(7, 3))
+    assert gw.prefix is None
+    assert gw.pool.allocator.num_held == 0
+    assert gw.metrics()["prefix_cache"] == {"enabled": False}
+    gw = _gateway(setup, paged=False)
+    _drain(gw, _shared_prompts(8, 3))
+    assert gw.prefix is None
+    assert gw.metrics()["prefix_cache"] == {"enabled": False}
+
+
+def test_fully_provisioned_pool_never_preempts(setup):
+    """PR 2's guarantee must survive retention: with the default
+    fully-provisioned pool (zero spare blocks), a donated tail block's
+    first decode write steals the tree's reference back (write in place)
+    instead of preempting a running request to afford a CoW copy."""
+    # default num_blocks = max_lanes * blocks_per_lane: no headroom at all
+    gw = _gateway(setup, block_size=16)      # 1 block per request
+    prompts = [np.random.default_rng(20 + i).integers(0, 500, MAX_PROMPT,
+                                                      dtype=np.int32)
+               for i in range(4)]
+    _drain(gw, prompts, max_new=3)
+    assert gw.stats["preempted"] == 0
+    assert gw.stats["cow_copies"] == 0       # stolen back, not copied
+    # every decode step covered the full running group (no thrash)
+    assert gw.stats["prefill_batches"] == 2  # 4 requests, 2 lanes
+
+
+def test_one_token_bucket_releases_unusable_matches(setup):
+    """max_prompt=1: every match is capped to 0 reusable tokens (the last
+    position must recompute), so the gateway must release the match's
+    references instead of leaking them — repeated identical prompts must
+    not strand the block."""
+    gw = _gateway(setup, max_prompt=1, max_new_cap=4)
+    prompt = np.asarray([7], np.int32)
+    for _ in range(3):
+        _drain(gw, [prompt.copy()], max_new=2)
+    alloc = gw.pool.allocator
+    st = gw.metrics()["prefix_cache"]
+    assert st["matched_tokens"] > 0                  # matches did happen
+    assert gw.stats["prefix_tokens_reused"] == 0     # but nothing reusable
+    # the retained block is still evictable: only the tree holds it
+    assert alloc.num_held == st["retained_blocks"] == 1
+
+
+def test_pure_ssm_model_disables_prefix_cache():
+    """A model whose cache can't be block-seeded (recurrent state) falls
+    back to the contiguous pool — prefix caching silently off, serving
+    still correct."""
+    cfg = smoke_variant(get_config("mamba2-130m"))
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    gw = LicensedGateway(cfg, params, max_batch=2, max_prompt=4,
+                         max_new_cap=2, paged=True, prefix_cache=True)
+    assert gw.paged is False and gw.prefix is None
+    r = gw.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=2)
+    gw.run()
+    assert r.state == RequestState.DONE
