@@ -1,0 +1,193 @@
+"""Kernel-resident vs gather/scatter paged decode: bytes moved & tokens/s.
+
+The tentpole claim of the kernel-resident decode path: the per-step
+gather -> vmapped step -> scatter round trip of each lane's FULL logical
+cache (O(capacity) HBM bytes per generated token) is replaced by a step
+that reads each cache byte once through the (trimmed) block table and
+writes exactly ONE K/V token per lane through its block index — decode
+moves O(context) bytes where it moved O(capacity) several times over,
+and at long contexts that is the dominant per-token cost.
+
+Both paths run the same ≥512-token-context workload through the same
+gateway (same prefill, same pool, same sampling); the decode phase is
+timed per scheduler step so prefill cost never pollutes the comparison.
+Cache bytes per step are computed analytically from the pool geometry:
+
+  gather/scatter:   B * padded_capacity * token_bytes * 2   (materialize
+                    the view + write it back) + the attention read of the
+                    padded view (B * padded_capacity * token_bytes)
+  kernel-resident:  B * context * token_bytes (the attention read IS the
+                    table gather) + B * token_bytes (the one-token write)
+
+Reported rows (all asserted — the ISSUE's acceptance bar):
+  * ``decode/gather_scatter_total``   — decode-phase wall time, tokens/s,
+    analytic cache bytes per step.
+  * ``decode/kernel_resident_total``  — same stream, kernel-resident:
+    strictly fewer bytes per step AND higher tokens/s at >=512-token
+    contexts.
+  * ``decode/logit_equivalence``      — max |Δlogits| between the paths
+    over full generations (asserted <= 1e-5), identical tokens.
+  * ``decode/paged_write_kernel``     — Pallas block-indexed write kernel
+    vs its ``ref.py`` oracle, interpret mode (asserted exact).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.licensing import LicenseTier
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_decode_write
+from repro.models import init_params
+from repro.serving import LicensedGateway
+
+ARCH = "qwen2.5-3b"
+MAX_PROMPT = 512                 # >= 512-token contexts throughout decode
+BLOCK = 64
+MAX_BATCH = 4
+
+
+def _mk_gateway(cfg, params, tiers, *, kernel_decode, max_new_cap, **kw):
+    return LicensedGateway(
+        cfg, params, tiers=tiers, max_batch=MAX_BATCH,
+        max_prompt=MAX_PROMPT, max_new_cap=max_new_cap, block_size=BLOCK,
+        kernel_decode=kernel_decode, prefix_cache=False, **kw)
+
+
+def _drain_timed(gw, work):
+    """Submit + drain, timing the decode phase per scheduler step."""
+    reqs = [gw.submit(p, license="free", max_new_tokens=n) for p, n in work]
+    t_decode, decode_steps = 0.0, 0
+    while True:
+        t0 = time.perf_counter()
+        act = gw.step()
+        dt = time.perf_counter() - t0
+        if act is None:
+            break
+        if act.kind == "decode":
+            t_decode += dt
+            decode_steps += 1
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in reqs), \
+        [r.error for r in reqs]
+    return reqs, t_decode, decode_steps
+
+
+def _cache_token_bytes(pool):
+    """Per-token cache bytes summed over the pool's paged leaves."""
+    total = 0
+    for arr, (paged, _, _) in zip(pool._storage, pool._meta):
+        if paged:
+            total += arr.nbytes // (pool.num_blocks + 1) // pool.block_size
+    return total
+
+
+def run(smoke: bool = False) -> list:
+    cfg = smoke_variant(get_config(ARCH))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tiers = {"free": LicenseTier(name="free", masks={"*": ((0.0, 0.004),)})}
+    rng = np.random.default_rng(0)
+    max_new = 8 if smoke else 24
+    n_reqs = MAX_BATCH if smoke else 2 * MAX_BATCH
+    work = [(rng.integers(0, 500, MAX_PROMPT, dtype=np.int32), max_new)
+            for _ in range(n_reqs)]
+    total_new = sum(n for _, n in work)
+
+    results = {}
+    for kernel in (False, True):
+        mk = dict(kernel_decode=kernel, max_new_cap=max_new)
+        _drain_timed(_mk_gateway(cfg, params, tiers, **mk),
+                     work[:MAX_BATCH])                  # warm the jit paths
+        gw = _mk_gateway(cfg, params, tiers, **mk)
+        assert gw.kernel_decode is kernel
+        _, t_decode, steps = _drain_timed(gw, work)
+        tok_bytes = _cache_token_bytes(gw.pool)
+        b = MAX_BATCH
+        if kernel:
+            # attention read of the used blocks + the one-token write;
+            # contexts span [MAX_PROMPT, MAX_PROMPT + max_new), so use the
+            # mean used width (rounded up to whole blocks, as read)
+            used = -(-(MAX_PROMPT + max_new // 2) // BLOCK) * BLOCK
+            bytes_step = b * used * tok_bytes + b * tok_bytes
+        else:
+            # materialize the padded view + attention read + write-back
+            bytes_step = 3 * b * gw.pool.padded_capacity * tok_bytes
+        results[kernel] = dict(
+            t=t_decode, steps=steps, bytes_step=bytes_step,
+            tokens_per_s=total_new / t_decode,
+            resident_steps=gw.stats["resident_decode_steps"])
+
+    base, resident = results[False], results[True]
+    assert base["resident_steps"] == 0
+    assert resident["resident_steps"] == resident["steps"]
+    # the acceptance bar: strictly fewer cache bytes per decode step
+    # (deterministic, analytic), and faster decode at >=512-token
+    # contexts.  The wall-clock half is asserted only in the full run —
+    # the smoke lane's ~8-step sample on a shared CI runner is too noisy
+    # to gate a merge on (tokens/s is still reported for the artifact).
+    assert resident["bytes_step"] < base["bytes_step"], \
+        (resident["bytes_step"], base["bytes_step"])
+    if not smoke:
+        assert resident["tokens_per_s"] > base["tokens_per_s"], \
+            (resident["tokens_per_s"], base["tokens_per_s"])
+
+    # ---- logit equivalence over full generations, both sampling modes
+    eq_new = 4
+    streams = []
+    for kernel in (False, True):
+        gw = _mk_gateway(cfg, params, tiers, kernel_decode=kernel,
+                         max_new_cap=eq_new, record_logits=True)
+        reqs = [gw.submit(p, license="free", max_new_tokens=eq_new)
+                for p, _ in work[:MAX_BATCH]]
+        gw.run()
+        streams.append(reqs)
+    max_err = 0.0
+    for a, b_ in zip(*streams):
+        assert a.out_tokens == b_.out_tokens
+        for ra, rb in zip(a.logits_rows, b_.logits_rows):
+            max_err = max(max_err, float(np.max(np.abs(ra - rb))))
+    assert max_err <= 1e-5, max_err
+
+    # ---- Pallas block-indexed write kernel vs its oracle (interpret)
+    r = np.random.default_rng(5)
+    p_blocks, bs, kh, hd, b = 12, 16, 2, 64, 5
+    kb = jnp.asarray(r.standard_normal((p_blocks, bs, kh, hd)), jnp.float32)
+    vb = jnp.asarray(r.standard_normal((p_blocks, bs, kh, hd)), jnp.float32)
+    nk = jnp.asarray(r.standard_normal((b, kh, hd)), jnp.float32)
+    nv = jnp.asarray(r.standard_normal((b, kh, hd)), jnp.float32)
+    blocks = jnp.asarray(r.permutation(p_blocks)[:b], jnp.int32)
+    offs = jnp.asarray(r.integers(0, bs, b), jnp.int32)
+    t0 = time.perf_counter()
+    gk, gv = paged_decode_write(kb, vb, nk, nv, blocks, offs, interpret=True)
+    dt_kernel = time.perf_counter() - t0
+    rk, rv = ref.paged_decode_write(kb, vb, nk, nv, blocks, offs)
+    kerr = max(float(np.max(np.abs(np.asarray(gk) - np.asarray(rk)))),
+               float(np.max(np.abs(np.asarray(gv) - np.asarray(rv)))))
+    assert kerr == 0.0, kerr
+
+    ctx = f"[{MAX_PROMPT}, {MAX_PROMPT + max_new})"
+    return [
+        {"name": "decode/gather_scatter_total",
+         "us_per_call": base["t"] * 1e6 / max(1, base["steps"]),
+         "tokens_per_s": round(base["tokens_per_s"], 1),
+         "decode_steps": base["steps"],
+         "cache_bytes_per_step": base["bytes_step"], "contexts": ctx},
+        {"name": "decode/kernel_resident_total",
+         "us_per_call": resident["t"] * 1e6 / max(1, resident["steps"]),
+         "tokens_per_s": round(resident["tokens_per_s"], 1),
+         "decode_steps": resident["steps"],
+         "cache_bytes_per_step": resident["bytes_step"], "contexts": ctx,
+         "speedup_x": round(resident["tokens_per_s"]
+                            / base["tokens_per_s"], 2),
+         "bytes_ratio": round(base["bytes_step"]
+                              / resident["bytes_step"], 2)},
+        {"name": "decode/logit_equivalence", "us_per_call": 0.0,
+         "max_abs_err": max_err, "requests": MAX_BATCH,
+         "new_tokens_each": eq_new},
+        {"name": "decode/paged_write_kernel",
+         "us_per_call": dt_kernel * 1e6, "max_abs_err_vs_ref": kerr,
+         "interpret": True},
+    ]

@@ -24,7 +24,7 @@ import time
 import traceback
 
 SUITES = ("storage", "update", "licensing", "kernels", "serving", "gateway",
-          "paging", "prefix", "roofline")
+          "paging", "prefix", "decode", "roofline")
 
 
 def main(argv=None) -> None:
@@ -44,9 +44,10 @@ def main(argv=None) -> None:
         json_dir = pathlib.Path(args.json)
         json_dir.mkdir(parents=True, exist_ok=True)
 
-    from benchmarks import (gateway_bench, kernel_bench, licensing_ladder,
-                            paging_bench, prefix_bench, roofline_table,
-                            serving_bench, storage_cost, update_latency)
+    from benchmarks import (decode_bench, gateway_bench, kernel_bench,
+                            licensing_ladder, paging_bench, prefix_bench,
+                            roofline_table, serving_bench, storage_cost,
+                            update_latency)
 
     modules = {
         "storage": storage_cost,        # paper Table 1
@@ -57,6 +58,7 @@ def main(argv=None) -> None:
         "gateway": gateway_bench,       # continuous batching vs single-stream
         "paging": paging_bench,         # block-paged vs fixed-lane cache pool
         "prefix": prefix_bench,         # shared-prefix radix cache vs paged
+        "decode": decode_bench,         # kernel-resident vs gather/scatter
         "roofline": roofline_table,     # deliverable (g)
     }
 

@@ -21,6 +21,7 @@ null/pad table entries) are masked inert.
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -144,3 +145,68 @@ def paged_attention(
     )(jnp.asarray(block_tables, jnp.int32),
       jnp.asarray(context_lens, jnp.int32), q, k_blocks, v_blocks)
     return out
+
+
+def _write_kernel(blocks_ref, offs_ref, nk_ref, nv_ref, kb_ref, vb_ref,
+                  ok_ref, ov_ref):
+    # the scalars are consumed by the index maps; the aliased pools are
+    # written through the out refs, never read
+    del blocks_ref, offs_ref, kb_ref, vb_ref
+    ok_ref[0, 0] = nk_ref[0].astype(ok_ref.dtype)
+    ov_ref[0, 0] = nv_ref[0].astype(ov_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_write(
+    k_blocks: jnp.ndarray,    # (P, bs, KH, hd) physical key blocks
+    v_blocks: jnp.ndarray,    # (P, bs, KH, hd) physical value blocks
+    new_k: jnp.ndarray,       # (B, KH, hd)  this step's key, one per lane
+    new_v: jnp.ndarray,       # (B, KH, hd)  this step's value
+    block_ids: jnp.ndarray,   # (B,) int32 physical block receiving the token
+    offsets: jnp.ndarray,     # (B,) int32 row inside that block
+    *,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-indexed scatter of ONE K/V token per lane — the write half of
+    kernel-resident paged decode.
+
+    Each lane's token lands at ``(block_ids[b], offsets[b])``; the block
+    ids and offsets ride as scalar-prefetch operands so the output
+    BlockSpec routes every grid step's (1, 1, KH, hd) store straight to
+    its physical row, and ``input_output_aliases`` makes the update
+    in-place — the untouched 2 * (P - B) blocks are never copied.  Pad
+    lanes target the pool's null block (duplicates allowed: the null
+    block absorbs garbage by contract).  Oracle: ``ref.paged_decode_write``.
+    """
+    b, kh, hd = new_k.shape
+    assert new_v.shape == new_k.shape, (new_v.shape, new_k.shape)
+    assert block_ids.shape == offsets.shape == (b,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, kh, hd), lambda i, blk, off: (i, 0, 0)),
+            pl.BlockSpec((1, kh, hd), lambda i, blk, off: (i, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # aliased k pool (unread)
+            pl.BlockSpec(memory_space=pltpu.ANY),   # aliased v pool (unread)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, kh, hd),
+                         lambda i, blk, off: (blk[i], off[i], 0, 0)),
+            pl.BlockSpec((1, 1, kh, hd),
+                         lambda i, blk, off: (blk[i], off[i], 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _write_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(k_blocks.shape, k_blocks.dtype),
+            jax.ShapeDtypeStruct(v_blocks.shape, v_blocks.dtype),
+        ],
+        # alias the block pools through (operand indices count the scalar
+        # prefetch args): only the B addressed rows are ever written
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(jnp.asarray(block_ids, jnp.int32), jnp.asarray(offsets, jnp.int32),
+      new_k, new_v, k_blocks, v_blocks)

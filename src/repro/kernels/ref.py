@@ -76,6 +76,21 @@ def paged_attention(q: jnp.ndarray, k_blocks: jnp.ndarray,
     return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
 
 
+def paged_decode_write(k_blocks: jnp.ndarray, v_blocks: jnp.ndarray,
+                       new_k: jnp.ndarray, new_v: jnp.ndarray,
+                       block_ids: jnp.ndarray, offsets: jnp.ndarray):
+    """Oracle for the block-indexed decode write: one K/V token per lane
+    lands at ``(block_ids[b], offsets[b])``.
+
+    k/v blocks (P,bs,KH,hd); new_k/new_v (B,KH,hd).  Lanes never share a
+    write target except the null block (pad lanes), where any of the
+    duplicate writes may win — its content is garbage by contract.
+    """
+    kb = k_blocks.at[block_ids, offsets].set(new_k.astype(k_blocks.dtype))
+    vb = v_blocks.at[block_ids, offsets].set(new_v.astype(v_blocks.dtype))
+    return kb, vb
+
+
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: int = 0, q_offset: int = 0,
                     groups: int = 1) -> jnp.ndarray:

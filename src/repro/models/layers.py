@@ -160,6 +160,189 @@ def attention_core(
     return out.reshape(b, sq, h, vd)
 
 
+def _attn_qkv(p: Dict[str, Any], x: jnp.ndarray, cfg,
+              positions: jnp.ndarray):
+    """Shared GQA q/k/v projection + bias + RoPE — the ONE front end of
+    both the contiguous and the kernel-resident paged attention paths
+    (``positions`` broadcastable to (B, S)), so they cannot drift."""
+    b, s, _ = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"])
+    k = jnp.einsum("bsd,df->bsf", x, p["wk"])
+    v = jnp.einsum("bsd,df->bsf", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kh, hd)
+    v = v.reshape(b, s, kh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mla_qkv(p: Dict[str, Any], x: jnp.ndarray, cfg,
+             positions: jnp.ndarray):
+    """Shared MLA projection front end (query, compressed KV, rotary
+    key) of the contiguous and paged paths; see :func:`_attn_qkv`."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rope_d, r = cfg.qk_nope_dim, cfg.rope_head_dim, cfg.kv_lora_rank
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"]).reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    dkv = jnp.einsum("bsd,df->bsf", x, p["w_dkv"])            # (B,S,r+rope_d)
+    c_kv = rms_norm(dkv[..., :r], p["ckv_norm"])
+    k_rope = dkv[..., r:][:, :, None, :]                       # (B,S,1,rope_d)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+# ---------------------------------------------- kernel-resident paged decode
+def gather_paged(blocks: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """(P, bs, *rest) physical blocks + (B, T) tables -> (B, T*bs, *rest).
+
+    The only read of paged cache bytes during kernel-resident decode:
+    tables are trimmed to the micro-batch's used width, so this is
+    O(context) — not O(capacity) — and there is no write-back (the one
+    new token went in through its block index)."""
+    g = blocks[tables]
+    s = g.shape
+    return g.reshape(s[0], s[1] * s[2], *s[3:])
+
+
+def paged_decode_attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        ctx: jnp.ndarray, *,
+                        softmax_scale: Optional[float] = None) -> jnp.ndarray:
+    """One-token-per-lane attention over a table-gathered cache.
+
+    q (B, H, hd); k/v (B, S, KH, hd) in logical order with junk past each
+    lane's ``ctx`` (B,) valid length (masked).  Mirrors
+    :func:`attention_core`'s decode numerics — q scaled in its own dtype,
+    f32 scores, :func:`_masked_softmax`, probs cast to ``v.dtype`` — so
+    kernel-resident and gather/scatter decode agree to float tolerance.
+    """
+    b, h, hd = q.shape
+    kh = k.shape[2]
+    groups = h // kh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(hd)
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(b, kh, groups, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    mask = jnp.arange(k.shape[1])[None, :] < ctx[:, None]     # (B, S)
+    probs = _masked_softmax(scores, mask[:, None, None, :])
+    out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v.dtype), v)
+    return out.reshape(b, h, v.shape[-1])
+
+
+def attention_block_paged(
+    p: Dict[str, Any], x: jnp.ndarray, cfg, *,
+    cache: Dict[str, jnp.ndarray], tables: jnp.ndarray, pos: jnp.ndarray,
+    use_kernel: bool = False, interpret: bool = False,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """GQA decode straight against the paged pool — no contiguous view.
+
+    ``x`` is (B, 1, d) — one token per lane; ``cache`` holds this layer's
+    *physical block* leaves ``k``/``v`` (1, P+1, bs, KH, hd) (plus int8
+    scales) shared by every lane, and the per-lane ``len`` (B,).
+    ``tables`` (B, T) names each lane's blocks in logical order (trimmed
+    to the batch's used width, null-padded); ``pos`` (B,) is each lane's
+    absolute position.  The new K/V token is written through
+    ``(tables[b, pos // bs], pos % bs)`` — a block-indexed scatter, the
+    write half of ``kernels/paged_attention.paged_decode_write`` — and
+    attention reads the cache once through the table (``use_kernel=True``
+    routes it through the Pallas scalar-prefetch kernel; the default is
+    the pure-JAX gather fallback with identical semantics).
+    """
+    b, s, d = x.shape
+    assert s == 1, s
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _attn_qkv(p, x, cfg, pos[:, None])
+
+    quant = "k_scale" in cache
+    kc = cache["k"][0]                                        # (P+1, bs, ...)
+    vc = cache["v"][0]
+    bs_sz = kc.shape[1]
+    blk = jnp.take_along_axis(tables, (pos // bs_sz)[:, None], axis=1)[:, 0]
+    off = pos % bs_sz
+    if quant:
+        kq, ks = _kv_quantize(k)
+        vq, vs = _kv_quantize(v)
+        kc = kc.at[blk, off].set(kq[:, 0])
+        vc = vc.at[blk, off].set(vq[:, 0])
+        ksc = cache["k_scale"][0].at[blk, off].set(ks[:, 0])
+        vsc = cache["v_scale"][0].at[blk, off].set(vs[:, 0])
+        kk = _kv_dequantize(gather_paged(kc, tables),
+                            gather_paged(ksc, tables), k.dtype)
+        vv = _kv_dequantize(gather_paged(vc, tables),
+                            gather_paged(vsc, tables), v.dtype)
+        out = paged_decode_attend(q[:, 0], kk, vv, pos + 1)
+    elif use_kernel:
+        from repro.kernels.paged_attention import (paged_attention,
+                                                   paged_decode_write)
+
+        kc, vc = paged_decode_write(kc, vc, k[:, 0], v[:, 0], blk, off,
+                                    interpret=interpret)
+        out = paged_attention(q[:, 0], kc, vc, tables, pos + 1,
+                              interpret=interpret).astype(x.dtype)
+    else:
+        kc = kc.at[blk, off].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[blk, off].set(v[:, 0].astype(vc.dtype))
+        out = paged_decode_attend(q[:, 0], gather_paged(kc, tables),
+                                  gather_paged(vc, tables), pos + 1)
+    # len + 1 never clamps here: the gateway admits pos < capacity only
+    new_cache = {"k": kc[None], "v": vc[None], "len": cache["len"] + 1}
+    if quant:
+        new_cache["k_scale"] = ksc[None]
+        new_cache["v_scale"] = vsc[None]
+    y = jnp.einsum("bsf,fd->bsd", out.reshape(b, 1, h * hd), p["wo"])
+    return y, new_cache
+
+
+def mla_block_paged(
+    p: Dict[str, Any], x: jnp.ndarray, cfg, *,
+    cache: Dict[str, jnp.ndarray], tables: jnp.ndarray, pos: jnp.ndarray,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """MLA decode against paged compressed-KV blocks.
+
+    Same contract as :func:`attention_block_paged`: write the token's
+    ``c_kv``/rotary key through its block index, gather the lane's chain
+    once, decompress, attend.  Decompression covers T*bs gathered
+    positions instead of the full capacity — strictly fewer FLOPs than
+    the contiguous decode it replaces."""
+    b, s, d = x.shape
+    assert s == 1, s
+    h = cfg.num_heads
+    nope, rope_d, vd, r = (cfg.qk_nope_dim, cfg.rope_head_dim,
+                           cfg.v_head_dim, cfg.kv_lora_rank)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, pos[:, None])
+
+    ckv_blocks = cache["ckv"][0]                              # (P+1, bs, r)
+    kr_blocks = cache["k_rope"][0]
+    bs_sz = ckv_blocks.shape[1]
+    blk = jnp.take_along_axis(tables, (pos // bs_sz)[:, None], axis=1)[:, 0]
+    off = pos % bs_sz
+    ckv_blocks = ckv_blocks.at[blk, off].set(
+        c_kv[:, 0].astype(ckv_blocks.dtype))
+    kr_blocks = kr_blocks.at[blk, off].set(
+        k_rope[:, 0, 0].astype(kr_blocks.dtype))
+
+    c_all = gather_paged(ckv_blocks, tables)                  # (B, S, r)
+    kr_all = gather_paged(kr_blocks, tables)[:, :, None, :]   # (B, S, 1, rd)
+    ukv = jnp.einsum("bsr,rf->bsf", c_all, p["w_ukv"]).reshape(
+        b, c_all.shape[1], h, nope + vd)
+    k_nope, v = ukv[..., :nope], ukv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all, (*k_nope.shape[:3], rope_d))],
+        axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = paged_decode_attend(qfull[:, 0], k, v, pos + 1,
+                              softmax_scale=1.0 / np.sqrt(nope + rope_d))
+    new_cache = {"ckv": ckv_blocks[None], "k_rope": kr_blocks[None],
+                 "len": cache["len"] + 1}
+    y = jnp.einsum("bsf,fd->bsd", out.reshape(b, 1, h * vd), p["wo"])
+    return y, new_cache
+
+
 # ------------------------------------------------------------- GQA attention
 def init_attention(key, cfg, dtype) -> Dict[str, Any]:
     d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -197,18 +380,8 @@ def attention_block(
     """
     b, s, d = x.shape
     h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = jnp.einsum("bsd,df->bsf", x, p["wq"])
-    k = jnp.einsum("bsd,df->bsf", x, p["wk"])
-    v = jnp.einsum("bsd,df->bsf", x, p["wv"])
-    if "bq" in p:
-        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
-    q = q.reshape(b, s, h, hd)
-    k = k.reshape(b, s, kh, hd)
-    v = v.reshape(b, s, kh, hd)
-
     positions = pos + jnp.arange(s)
-    q = apply_rope(q, jnp.broadcast_to(positions, (b, s)), cfg.rope_theta)
-    k = apply_rope(k, jnp.broadcast_to(positions, (b, s)), cfg.rope_theta)
+    q, k, v = _attn_qkv(p, x, cfg, jnp.broadcast_to(positions, (b, s)))
 
     if cache is None:
         out = attention_core(q, k, v, q_offset=pos, window=window,
@@ -326,16 +499,9 @@ def mla_block(
     h = cfg.num_heads
     nope, rope_d, vd, r = cfg.qk_nope_dim, cfg.rope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
 
-    q = jnp.einsum("bsd,df->bsf", x, p["wq"]).reshape(b, s, h, nope + rope_d)
-    q_nope, q_rope = q[..., :nope], q[..., nope:]
-    dkv = jnp.einsum("bsd,df->bsf", x, p["w_dkv"])            # (B,S,r+rope_d)
-    c_kv = rms_norm(dkv[..., :r], p["ckv_norm"])
-    k_rope = dkv[..., r:][:, :, None, :]                       # (B,S,1,rope_d)
-
     positions = pos + jnp.arange(s)
-    posb = jnp.broadcast_to(positions, (b, s))
-    q_rope = apply_rope(q_rope, posb, cfg.rope_theta)
-    k_rope = apply_rope(k_rope, posb, cfg.rope_theta)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(
+        p, x, cfg, jnp.broadcast_to(positions, (b, s)))
 
     if cache is not None:
         cap = cache["ckv"].shape[1]

@@ -56,23 +56,39 @@ def _init_block(key, cfg: ModelConfig, kind: str) -> Dict[str, Any]:
 def _apply_block(
     p: Dict[str, Any], kind: str, x: jnp.ndarray, cfg: ModelConfig, *,
     cache: Optional[Dict[str, Any]], pos, attend_cache: bool = False,
+    paged_tables: Optional[jnp.ndarray] = None, paged_kernel: str = "off",
 ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict[str, Any]]]:
     """Pre-norm residual block.  Returns (x, aux_loss, new_cache).
 
     ``attend_cache`` (static) selects suffix-prefill attention — Sq > 1
     tokens starting at ``pos`` attend over resident cache contents; only
     attention blocks consume it (SSM/RG-LRU state is sequential, so the
-    prefix-cache gate never routes those models here)."""
+    prefix-cache gate never routes those models here).
+
+    ``paged_tables`` (B, T) selects *kernel-resident paged decode*:
+    attention blocks receive physical block leaves plus per-lane block
+    tables and absolute positions (``pos`` is a (B,) vector) instead of
+    a contiguous cache; SSM/RG-LRU state is position-independent and
+    batch-row-local, so those blocks run unchanged on their lane-stacked
+    state."""
     aux = jnp.zeros((), jnp.float32)
     h = L.apply_norm(x, p["norm1"], cfg)
     if kind == "attn":
-        window = cfg.window
-        if cfg.use_mla:
+        if paged_tables is not None and cfg.use_mla:
+            y, new_cache = L.mla_block_paged(p["mixer"], h, cfg, cache=cache,
+                                             tables=paged_tables, pos=pos)
+        elif paged_tables is not None:
+            y, new_cache = L.attention_block_paged(
+                p["mixer"], h, cfg, cache=cache, tables=paged_tables,
+                pos=pos, use_kernel=paged_kernel != "off",
+                interpret=paged_kernel == "interpret")
+        elif cfg.use_mla:
             y, new_cache = L.mla_block(p["mixer"], h, cfg, cache=cache, pos=pos,
-                                       window=window, attend_cache=attend_cache)
+                                       window=cfg.window,
+                                       attend_cache=attend_cache)
         else:
             y, new_cache = L.attention_block(p["mixer"], h, cfg, cache=cache,
-                                             pos=pos, window=window,
+                                             pos=pos, window=cfg.window,
                                              attend_cache=attend_cache)
         x = x + y.astype(x.dtype)
         h2 = L.apply_norm(x, p["norm2"], cfg)
@@ -173,6 +189,8 @@ def forward(
     pos=0,
     license_intervals=None,   # (lo, hi) f32[MAX_INTERVALS] — fused-dequant licensing
     attend_cache: bool = False,  # static: suffix prefill attends cache contents
+    paged_tables: Optional[jnp.ndarray] = None,  # (B, T): kernel-resident decode
+    paged_kernel: str = "off",   # static: "off" | "pallas" | "interpret"
 ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict[str, Any]]]:
     """Returns (logits (B,S,V), aux_loss, new_cache or None).
 
@@ -185,7 +203,19 @@ def forward(
     cache: ``tokens`` are the uncached tail of a prompt whose positions
     ``[0, pos)`` are already resident in ``cache``, and attention reads
     the cache (prefix + this step's writes) instead of only the provided
-    tokens.  Requires a linear (non-ring) cache; see ``attention_block``."""
+    tokens.  Requires a linear (non-ring) cache; see ``attention_block``.
+
+    ``paged_tables`` selects *kernel-resident paged decode* (one token
+    per lane): ``cache`` is the hybrid pytree from
+    ``PagedCachePool.decode_cache`` — attention leaves are the pool's
+    physical block arrays shared by every lane, per-lane state is
+    lane-gathered — ``pos`` is a (B,) vector of absolute positions, and
+    attention reads/writes the pool *through the block table* instead of
+    a contiguous per-lane view.  ``paged_kernel`` routes the read through
+    the Pallas scalar-prefetch kernel ("pallas"; "interpret" for CPU
+    testing) or the pure-JAX gather fallback ("off")."""
+    if paged_tables is not None:
+        assert cache is not None and not attend_cache
     parts = []
     if patch_embeds is not None:
         proj = params.get("vision_proj")
@@ -214,7 +244,9 @@ def forward(
             c = None if unit_cache is None else unit_cache[f"b{j}"]
             x, a, nc = _apply_block(unit_params[f"b{j}"], kind, x, cfg,
                                     cache=c, pos=pos,
-                                    attend_cache=attend_cache)
+                                    attend_cache=attend_cache,
+                                    paged_tables=paged_tables,
+                                    paged_kernel=paged_kernel)
             aux = aux + a
             new_caches[f"b{j}"] = nc if nc is not None else ()
         if cache is None and x.shape[1] > 1:
@@ -258,7 +290,9 @@ def forward(
             tp = _dq(params["tail"][f"t{j}"], license_intervals, cfg.dtype)
             x, a, nc = _apply_block(tp, kind, x, cfg,
                                     cache=c, pos=pos,
-                                    attend_cache=attend_cache)
+                                    attend_cache=attend_cache,
+                                    paged_tables=paged_tables,
+                                    paged_kernel=paged_kernel)
             aux_total = aux_total + a
             new_tail[f"t{j}"] = nc if nc is not None else ()
         if new_cache is not None:

@@ -62,6 +62,27 @@ def serve_step(params, cfg: ModelConfig, tokens, cache, pos,
     return logits[:, -1], cache
 
 
+def serve_step_paged(params, cfg: ModelConfig, tokens, cache, tables, pos,
+                     license_intervals=None, *, kernel: str = "off"):
+    """ONE kernel-resident decode step over the paged pool.
+
+    ``tokens`` (B, 1), ``cache`` the hybrid pytree from
+    ``PagedCachePool.decode_cache`` (attention leaves are physical block
+    arrays, per-lane state lane-gathered), ``tables`` (B, T) block tables
+    trimmed to the micro-batch's used width, ``pos`` (B,) per-lane
+    absolute positions.  Attention reads each cache byte once through the
+    table and writes the one new K/V token through its block index — no
+    contiguous view of any sequence exists (see ``models/layers.py``
+    ``attention_block_paged``).  ``kernel`` selects the Pallas
+    paged-attention kernel ("pallas" / "interpret") or the pure-JAX
+    gather fallback ("off")."""
+    logits, _, cache = model_lib.forward(
+        params, cfg, tokens, cache=cache, pos=pos,
+        license_intervals=license_intervals, paged_tables=tables,
+        paged_kernel=kernel)
+    return logits[:, -1], cache
+
+
 def right_align(prompts, width: int, rows: int) -> np.ndarray:
     """(rows, width) int32 token matrix; short prompts padded on the left
     with their own first token (position-consistent, never attends ahead).

@@ -31,8 +31,14 @@ return-logits escape hatch tests and the equivalence benchmark use.
 
 Cache memory
 ------------
-KV/SSM state lives in a shared pool gathered/scattered around each
-micro-batch.  Two pool modes, selected by the ``paged`` config flag:
+KV/SSM state lives in a shared pool.  Prefill gathers/scatters per-lane
+views around the vmapped step; decode — the hot path — runs
+**kernel-resident** by default (``kernel_decode``): one batched step
+whose cache operands are the paged pool's physical block arrays, so
+attention reads each cache byte once through the micro-batch's trimmed
+block tables and the one new K/V token per lane is a block-indexed
+scatter — no contiguous view of any sequence exists during decode.  Two
+pool modes, selected by the ``paged`` config flag:
 
 * ``paged=True`` (default): a :class:`~repro.serving.paging.PagedCachePool`
   — per-token KV leaves live as fixed-size physical blocks addressed
@@ -91,7 +97,8 @@ from repro.configs.base import ModelConfig
 from repro.core.licensing import FULL_TIER, LicenseTier, apply_license
 from repro.models import model as model_lib
 from repro.serving.engine import (prefill_step, prefill_suffix_step,
-                                  right_align, sample, sample_lane, serve_step)
+                                  right_align, sample, sample_lane,
+                                  serve_step, serve_step_paged)
 from repro.serving.paging import NoPagedLeavesError, PagedCachePool, cdiv
 from repro.serving.prefix import PrefixCache
 from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
@@ -137,6 +144,40 @@ def _compiled_steps(cfg: ModelConfig, fused: bool = False,
                              in_axes=(None, 0, 0, 0, 0, 0, 0, None))),
             jax.jit(jax.vmap(_decode_one,
                              in_axes=(None, 0, 0, 0, 0, 0, 0, 0, None))))
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_paged_decode(cfg: ModelConfig, fused: bool = False,
+                           with_rng: bool = True, with_topk: bool = True,
+                           kernel: str = "off"):
+    """Jitted *kernel-resident* decode step: one batched call over the
+    micro-batch (not a per-lane vmap) whose cache operands are the paged
+    pool's physical block arrays — attention reads each cache byte once
+    through the (trimmed) block tables and writes the one new K/V token
+    per lane through its block index.  No per-lane contiguous cache is
+    ever materialized; only the constant-size lane state rides in and
+    out.  One compilation per (config, used-table-width, sampling
+    variant); widths are ``ceil(context / block_size)`` so at most
+    ``blocks_per_lane`` widths ever compile per config."""
+
+    def _finish(logits, seed, n_out, temp, top_k):
+        return _finish_lane(logits, seed, n_out, temp, top_k, fused=fused,
+                            with_rng=with_rng, with_topk=with_topk)
+
+    def _step(view_params, toks, cache, tables, poss, seeds, nouts, temps,
+              topks, li):
+        rows, cache = serve_step_paged(view_params, cfg, toks[:, None],
+                                       cache, tables, poss,
+                                       license_intervals=li, kernel=kernel)
+        return jax.vmap(_finish)(rows, seeds, nouts, temps, topks), cache
+
+    # donate the cache operand: the pool's block arrays are updated IN
+    # PLACE (absorb_decode adopts the outputs wholesale and the old
+    # storage is dropped), so a step's one-token write never copies the
+    # pool.  Without donation XLA would clone O(num_blocks) bytes per
+    # step — more traffic than the gather/scatter path this replaces.
+    # Backends without donation support (CPU) fall back to a copy.
+    return jax.jit(_step, donate_argnums=(2,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -219,6 +260,26 @@ class LicensedGateway:
         when any per-lane cache state is not a reconstructible position
         counter — SSM/RG-LRU state and sliding-window ring caches cannot
         be seeded from blocks.  ``False`` restores PR 2 behavior exactly.
+    kernel_decode:
+        Kernel-resident paged decode (default auto).  Decode runs as ONE
+        batched step whose cache operands are the pool's physical block
+        arrays: attention reads each cache byte exactly once through the
+        micro-batch's trimmed block tables, and the new K/V token is a
+        block-indexed scatter — the per-step gather/scatter round trip of
+        each lane's full logical cache disappears (it survives only for
+        prefill, CoW copies, and the constant-size SSM/LRU lane state).
+        Auto-disabled (clean fallback to gather/scatter decode) for
+        sliding-window models, whose ring caches are per-lane state, and
+        moot for pure-recurrent models (contiguous pool).  ``False``
+        restores the PR 3 decode path exactly.
+    decode_pallas:
+        How the kernel-resident step reads the cache: ``"pallas"`` routes
+        attention through the scalar-prefetch Pallas kernel
+        (``kernels/paged_attention.py``), ``"interpret"`` the same kernel
+        in interpret mode (CPU testing), ``"off"`` the pure-JAX
+        block-gather fallback with identical semantics.  Default (None)
+        picks "pallas" on TPU backends, "off" elsewhere.  int8-KV and
+        MLA caches always use the fallback path.
     fuse_sampling:
         Sample per lane on device and return token ids (default).
         ``False`` is the return-logits escape hatch: logits rows come
@@ -247,6 +308,8 @@ class LicensedGateway:
         max_lanes: Optional[int] = None,
         watermark_blocks: int = 0,
         prefix_cache: bool = True,
+        kernel_decode: Optional[bool] = None,
+        decode_pallas: Optional[str] = None,
         fuse_sampling: bool = True,
         record_logits: bool = False,
         view_capacity: int = 8,
@@ -290,6 +353,20 @@ class LicensedGateway:
                 # attention cache): per-lane state is constant-size, so
                 # paging has nothing to page — fall back to the slab
                 self.paged = False
+        # kernel-resident decode: supported whenever every attention
+        # cache is paged — a sliding window below the pool capacity turns
+        # attention caches into per-lane ring state the batched step
+        # cannot address by block, so those models keep gather/scatter
+        supported = self.paged and cfg.window == 0
+        self.kernel_decode = (supported if kernel_decode is None
+                              else bool(kernel_decode) and supported)
+        if decode_pallas is None:
+            decode_pallas = ("pallas" if jax.default_backend() == "tpu"
+                             else "off")
+        if decode_pallas not in ("off", "pallas", "interpret"):
+            raise ValueError(f"decode_pallas={decode_pallas!r} not in "
+                             f"('off', 'pallas', 'interpret')")
+        self.decode_pallas = decode_pallas
         if self.paged:
             self._prefill_blocks = max(
                 1, cdiv(self.max_prompt, self.pool.block_size))
@@ -311,7 +388,9 @@ class LicensedGateway:
                 prefill_blocks=self._prefill_blocks,
                 watermark_blocks=int(watermark_blocks),
                 reclaimable=(self.prefix.reclaimable
-                             if self.prefix is not None else None))
+                             if self.prefix is not None else None),
+                suffix_bucket=(self._suffix_bucket
+                               if self.prefix is not None else None))
             zero_cap = self.pool.padded_capacity
         else:
             self.max_lanes = self.max_batch
@@ -342,7 +421,8 @@ class LicensedGateway:
         self._drain_sink: Optional[List[GatewayRequest]] = None
         self.stats: Dict[str, int] = {
             "admitted": 0, "rejected": 0, "completed": 0,
-            "prefill_batches": 0, "decode_steps": 0, "tokens_generated": 0,
+            "prefill_batches": 0, "decode_steps": 0,
+            "resident_decode_steps": 0, "tokens_generated": 0,
             "preempted": 0, "max_running": 0, "max_blocks_in_use": 0,
             # prefix-cache accounting: lane-tokens actually run through the
             # prefill step (the FLOPs axis the bench compares), prompt
@@ -350,6 +430,9 @@ class LicensedGateway:
             "prefill_lane_tokens": 0, "prefix_tokens_reused": 0,
             "cow_copies": 0,
         }
+        # prefix-aware admission: prefill batches served per suffix-width
+        # bucket (the grouping decision, exported via metrics())
+        self.bucket_batches: Dict[int, int] = {}
 
         # build the jit pair for the common case (all-greedy when fused);
         # _steps() dispatches per micro-batch, sharing the lru entries
@@ -376,6 +459,16 @@ class LicensedGateway:
         with_rng = any(r.temperature > 0 for r in reqs)
         with_topk = with_rng and any(r.top_k for r in reqs)
         return _compiled_prefix_prefill(self.cfg, True, with_rng, with_topk)
+
+    def _paged_decode_step(self, reqs: List[GatewayRequest]):
+        """Kernel-resident decode jit specialized like :meth:`_steps`."""
+        if not self.fuse_sampling:
+            return _compiled_paged_decode(self.cfg, False,
+                                          kernel=self.decode_pallas)
+        with_rng = any(r.temperature > 0 for r in reqs)
+        with_topk = with_rng and any(r.top_k for r in reqs)
+        return _compiled_paged_decode(self.cfg, True, with_rng, with_topk,
+                                      kernel=self.decode_pallas)
 
     # ------------------------------------------------------------ weight views
     def _resolve_tier(self, name: str) -> LicenseTier:
@@ -448,6 +541,24 @@ class LicensedGateway:
     def view_for(self, tier: str, version: Optional[int] = None):
         """Licensed weight view for (tier, version) — cached."""
         return self.views.get(tier, self.version if version is None else version)
+
+    def _suffix_bucket(self, req: GatewayRequest) -> int:
+        """Prefix-aware admission probe: the uncached suffix width this
+        request would prefill at — ``max_prompt`` when cold, down to 1
+        for a full match (the last position always recomputes).  Uses
+        the side-effect-free :meth:`PrefixCache.peek` so scheduling
+        probes never touch LRU order or reference counts, and caches the
+        answer on the request keyed by the cache's mutation epoch — a
+        deep backlog re-probes only after an insert/evict/drop actually
+        changed what a prompt could match."""
+        cached = getattr(req, "_suffix_probe", None)
+        if cached is not None and cached[0] == self.prefix.epoch:
+            return cached[1]
+        toks = right_align([req.prompt], self.max_prompt, 1)[0]
+        matched = self.prefix.peek((req.license, req.version), toks)
+        bucket = self.max_prompt - min(matched, self.max_prompt - 1)
+        req._suffix_probe = (self.prefix.epoch, bucket)
+        return bucket
 
     # -------------------------------------------------------------- admission
     def submit(self, prompt, *, license: str = "full", max_new_tokens: int = 16,
@@ -660,6 +771,9 @@ class LicensedGateway:
             else:
                 self._emit(r, logits_row=outs[i])
         self.stats["prefill_batches"] += 1
+        if act.suffix_bucket is not None:
+            self.bucket_batches[act.suffix_bucket] = \
+                self.bucket_batches.get(act.suffix_bucket, 0) + 1
 
     def _run_prefix_prefill(self, act: ScheduledAction, toks: np.ndarray,
                             matches: List[Tuple[List[int], int]],
@@ -835,25 +949,44 @@ class LicensedGateway:
             toks[i] = r.out_tokens[-1]
             poss[i] = r.pos
         seeds, nouts, temps, topks = self._sampling_lanes(reqs)
-        if self.paged:
-            tables = self.pool.pad_tables([r.blocks for r in reqs],
-                                          self.max_batch)
-            caches = self.pool.gather(lanes, tables)
+        if self.paged and self.kernel_decode:
+            # kernel-resident path: the pool's block arrays ARE the cache
+            # operands.  Tables are trimmed to the batch's used width, so
+            # attention reads O(context) bytes once through the table;
+            # the one new K/V token per lane is written through its block
+            # index (the target is private — _grow_block_tables CoW'd a
+            # shared tail before this step), and shared prefix blocks are
+            # never write targets, so no null-redirect is needed.
+            used = max(r.pos // self.pool.block_size + 1 for r in reqs)
+            tables = self.pool.pad_tables([r.blocks[:used] for r in reqs],
+                                          self.max_batch, used)
+            caches = self.pool.decode_cache(lanes)
+            step = self._paged_decode_step(reqs)
+            outs, caches = step(view_params, jnp.asarray(toks), caches,
+                                jnp.asarray(tables), jnp.asarray(poss),
+                                seeds, nouts, temps, topks, li)
+            self.pool.absorb_decode(lanes, caches)
+            self.stats["resident_decode_steps"] += 1
         else:
-            caches = self.pool.gather(lanes)
-        _, decode = self._steps(reqs)
-        outs, caches = decode(view_params, jnp.asarray(toks), caches,
-                              jnp.asarray(poss), seeds, nouts, temps,
-                              topks, li)
-        if self.paged:
-            # shared (prefix-cache) blocks are read-only: redirect their
-            # redundant write-back to the null block (the write target
-            # itself is always private — _grow_block_tables CoW'd it)
-            wb = (self._scatter_tables(tables, reqs)
-                  if self.prefix is not None else tables)
-            self.pool.scatter(lanes, wb, caches)
-        else:
-            self.pool.scatter(lanes, caches)
+            if self.paged:
+                tables = self.pool.pad_tables([r.blocks for r in reqs],
+                                              self.max_batch)
+                caches = self.pool.gather(lanes, tables)
+            else:
+                caches = self.pool.gather(lanes)
+            _, decode = self._steps(reqs)
+            outs, caches = decode(view_params, jnp.asarray(toks), caches,
+                                  jnp.asarray(poss), seeds, nouts, temps,
+                                  topks, li)
+            if self.paged:
+                # shared (prefix-cache) blocks are read-only: redirect
+                # their redundant write-back to the null block (the write
+                # target itself is always private — CoW'd above)
+                wb = (self._scatter_tables(tables, reqs)
+                      if self.prefix is not None else tables)
+                self.pool.scatter(lanes, wb, caches)
+            else:
+                self.pool.scatter(lanes, caches)
         outs = np.asarray(outs)
         for i, r in enumerate(reqs):
             r.pos += 1
@@ -976,6 +1109,14 @@ class LicensedGateway:
         out["oldest_wait_s"] = self.scheduler.oldest_wait_s()
         out["queue_wait_by_tier"] = self.scheduler.queue_wait_by_tier()
         out["cache_pool"] = {"paged": self.paged, **self.pool.stats()}
+        out["decode_path"] = {"kernel_resident": self.kernel_decode,
+                              "pallas": self.decode_pallas}
+        out["admission_grouping"] = {
+            "enabled": self.prefix is not None,
+            # prefill batches served per shared uncached-suffix width: a
+            # full-match batch shows up under width 1, never padded to a
+            # cold batch's max_prompt
+            "batches_by_suffix_width": dict(self.bucket_batches)}
         out["prefix_cache"] = {"enabled": self.prefix is not None}
         if self.prefix is not None:
             out["prefix_cache"].update(self.prefix.stats())

@@ -25,12 +25,23 @@ concurrency.  This module replaces the slab with **fixed-size blocks**:
 ``gather(lanes, tables)`` materializes each lane's logical cache as a
 contiguous batch-1 view (block-table order == logical order — blocks are
 appended as the sequence grows), so the gateway's lane-vmapped
-prefill/decode runs unmodified; ``scatter`` writes the views back through
+prefill runs unmodified; ``scatter`` writes the views back through
 the same tables.  Index ``num_blocks`` is a *null block* and index
 ``num_lanes`` a *scratch lane*: both absorb the writes of padding rows so
-duplicate pad indices can never corrupt a live request.  The
-TPU-compiled decode path that skips the materialized view and gathers
-K/V inside the kernel is ``kernels/paged_attention.py``.
+duplicate pad indices can never corrupt a live request.
+
+Decode does NOT round-trip through gather/scatter: ``decode_cache``
+hands the gateway's batched decode step the pool's physical block
+arrays *by reference* (plus the lane-stacked constant-size state,
+gathered by lane id), and ``absorb_decode`` adopts the step's returned
+arrays wholesale — the step wrote exactly one token per lane through
+the block table (``models/layers.py`` paged-decode attention /
+``kernels/paged_attention.py``), so no contiguous view of any sequence
+ever exists during decode.  Paged leaves are stored with the physical
+block axis *in place of* the capacity axis — ``(..., num_blocks + 1,
+block_size, ...)`` — so the unit axis stays leading and the model's
+``lax.scan`` over units can slice the pool per unit without a
+transpose.
 """
 from __future__ import annotations
 
@@ -206,33 +217,45 @@ class PagedCachePool:
         # a leaf whose shape grows by exactly block_size along one axis is
         # per-token (paged); anything else — SSM/LRU state, len counters,
         # window ring caches already capped below the pool capacity — is
-        # constant-size per-lane state.
+        # constant-size per-lane state.  A third probe at batch 2 finds
+        # each leaf's batch axis, which the kernel-resident decode path
+        # needs to splice the lane axis into the model's cache layout.
         template = model_lib.init_cache(cfg, 1, self.padded_capacity)
         probe = model_lib.init_cache(
             cfg, 1, self.padded_capacity + self.block_size)
+        bprobe = model_lib.init_cache(cfg, 2, self.padded_capacity)
         t_leaves, self._treedef = jax.tree_util.tree_flatten(template)
         p_leaves, _ = jax.tree_util.tree_flatten(probe)
-        self._meta: List[Tuple[bool, int]] = []   # (paged, capacity axis)
+        b_leaves, _ = jax.tree_util.tree_flatten(bprobe)
+        # (paged, capacity axis, batch axis); paged leaves are stored as
+        # t.shape[:axis] + (num_blocks + 1, block_size) + t.shape[axis+1:]
+        # — the block axis sits where the capacity axis was, so leading
+        # axes (the unit-scan axis) are untouched.
+        self._meta: List[Tuple[bool, int, int]] = []
         self._storage: List[jnp.ndarray] = []
         self._lane_init: List[Optional[jnp.ndarray]] = []  # pristine per-lane
-        for t, p in zip(t_leaves, p_leaves):
+        for t, p, bp in zip(t_leaves, p_leaves, b_leaves):
+            bdiff = [i for i, (a, b) in enumerate(zip(t.shape, bp.shape))
+                     if a != b]
+            assert len(bdiff) == 1, \
+                f"cache leaf without a unique batch axis: {t.shape}"
+            baxis = bdiff[0]
             diff = [i for i, (a, b) in enumerate(zip(t.shape, p.shape))
                     if a != b]
             if len(diff) == 1 and p.shape[diff[0]] - t.shape[diff[0]] == \
                     self.block_size:
                 axis = diff[0]
-                shape = list(t.shape)
-                shape[axis] = self.block_size
-                self._meta.append((True, axis))
-                self._storage.append(
-                    jnp.zeros((self.num_blocks + 1, *shape), t.dtype))
+                self._meta.append((True, axis, baxis))
+                self._storage.append(jnp.zeros(
+                    (*t.shape[:axis], self.num_blocks + 1, self.block_size,
+                     *t.shape[axis + 1:]), t.dtype))
                 self._lane_init.append(None)
             else:
-                self._meta.append((False, -1))
+                self._meta.append((False, -1, baxis))
                 self._storage.append(jnp.broadcast_to(
                     t[None], (self.num_lanes + 1, *t.shape)))
                 self._lane_init.append(t)
-        if not any(paged for paged, _ in self._meta):
+        if not any(paged for paged, _, _ in self._meta):
             raise NoPagedLeavesError(
                 "no per-token cache leaves to page (pure-recurrent model); "
                 "use the contiguous CachePool instead")
@@ -244,7 +267,7 @@ class PagedCachePool:
         # carrying any disable prefix reuse rather than serve wrong state.
         self.prefix_cacheable = all(
             jnp.issubdtype(t.dtype, jnp.integer)
-            for t, (paged, _) in zip(t_leaves, self._meta) if not paged)
+            for t, (paged, _, _) in zip(t_leaves, self._meta) if not paged)
 
     # ------------------------------------------------------------- indices
     @property
@@ -269,15 +292,17 @@ class PagedCachePool:
     def pad_lanes(self, lanes: Sequence[int], width: int) -> List[int]:
         return pad_lane_ids(lanes, width, self.scratch)
 
-    def pad_tables(self, tables: Sequence[Sequence[int]],
-                   width: int) -> np.ndarray:
-        """(width, blocks_per_lane) int32 table matrix, null-padded."""
+    def pad_tables(self, tables: Sequence[Sequence[int]], width: int,
+                   n_cols: Optional[int] = None) -> np.ndarray:
+        """(width, n_cols) int32 table matrix, null-padded.  ``n_cols``
+        defaults to ``blocks_per_lane`` (a full logical table); the
+        kernel-resident decode trims it to the micro-batch's used blocks
+        so attention reads O(context), not O(capacity)."""
+        n_cols = self.blocks_per_lane if n_cols is None else int(n_cols)
         assert len(tables) <= width, (len(tables), width)
-        out = np.full((width, self.blocks_per_lane), self.null_block,
-                      np.int32)
+        out = np.full((width, n_cols), self.null_block, np.int32)
         for i, t in enumerate(tables):
-            assert len(t) <= self.blocks_per_lane, (len(t),
-                                                    self.blocks_per_lane)
+            assert len(t) <= n_cols, (len(t), n_cols)
             out[i, : len(t)] = t
         return out
 
@@ -302,10 +327,13 @@ class PagedCachePool:
         tab = jnp.asarray(tables, jnp.int32)
         width = len(lanes)
         leaves = []
-        for arr, (paged, axis), init in zip(self._storage, self._meta,
-                                            self._lane_init):
+        for arr, (paged, axis, _), init in zip(self._storage, self._meta,
+                                               self._lane_init):
             if paged:
-                g = jnp.moveaxis(arr[tab], 1, 1 + axis)
+                # (..., P+1, bs, ...) taken at the block axis with (B, T)
+                # indices -> (..., B, T, bs, ...); lane axis to the front,
+                # then (T, bs) merges back into the capacity axis
+                g = jnp.moveaxis(jnp.take(arr, tab, axis=axis), axis, 0)
                 s = g.shape
                 g = g.reshape(*s[: 1 + axis], s[1 + axis] * s[2 + axis],
                               *s[3 + axis:])
@@ -326,16 +354,63 @@ class PagedCachePool:
         new_leaves, treedef = jax.tree_util.tree_flatten(caches)
         assert treedef == self._treedef
         out = []
-        for arr, new, (paged, axis) in zip(self._storage, new_leaves,
-                                           self._meta):
+        for arr, new, (paged, axis, _) in zip(self._storage, new_leaves,
+                                              self._meta):
             if paged:
                 s = new.shape
                 v = new.reshape(*s[: 1 + axis], s[1 + axis] // self.block_size,
                                 self.block_size, *s[2 + axis:])
-                v = jnp.moveaxis(v, 1 + axis, 1)
-                out.append(arr.at[tab].set(v.astype(arr.dtype)))
+                # (B, *pre, T, bs, *post) -> (*pre, B, T, bs, *post); the
+                # advanced index (B, T) at the block axis consumes (B, T)
+                v = jnp.moveaxis(v, 0, axis)
+                idx = (slice(None),) * axis + (tab,)
+                out.append(arr.at[idx].set(v.astype(arr.dtype)))
             else:
                 out.append(arr.at[lane_idx].set(new.astype(arr.dtype)))
+        self._storage = out
+
+    # ----------------------------------------------- kernel-resident decode
+    def decode_cache(self, lanes: Sequence[int]) -> Any:
+        """Hybrid cache pytree for the batched kernel-resident decode step.
+
+        Paged leaves enter *by reference* — the pool's physical block
+        arrays, ``(..., num_blocks + 1, block_size, ...)`` with the unit
+        axis still leading, so the model's unit scan slices them without
+        a gather and the paged-decode attention reads blocks through the
+        micro-batch's (trimmed) tables.  Non-paged leaves (SSM/LRU state,
+        ``len`` counters) are gathered by lane id, with the lane axis
+        spliced where ``init_cache(cfg, B)`` would put the batch axis —
+        the only O(1)-per-lane state that still round-trips per step.
+        """
+        lane_idx = jnp.asarray(lanes, jnp.int32)
+        leaves = []
+        for arr, (paged, _, baxis) in zip(self._storage, self._meta):
+            if paged:
+                leaves.append(arr)
+            else:
+                # (B, *t.shape) -> lane axis replaces the size-1 batch axis
+                g = jnp.moveaxis(arr[lane_idx], 0, baxis)
+                leaves.append(jnp.squeeze(g, axis=baxis + 1))
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    def absorb_decode(self, lanes: Sequence[int], caches: Any) -> None:
+        """Adopt a kernel-resident decode step's outputs: paged leaves
+        replace the pool arrays wholesale (the step wrote exactly one
+        token per lane through the block table — shared prefix blocks
+        were never write targets, ``_grow_block_tables`` CoW'd the tail
+        first), non-paged lane state scatters back by lane id."""
+        lane_idx = jnp.asarray(lanes, jnp.int32)
+        new_leaves, treedef = jax.tree_util.tree_flatten(caches)
+        assert treedef == self._treedef
+        out = []
+        for arr, new, (paged, _, baxis) in zip(self._storage, new_leaves,
+                                               self._meta):
+            if paged:
+                assert new.shape == arr.shape, (new.shape, arr.shape)
+                out.append(new.astype(arr.dtype))
+            else:
+                v = jnp.moveaxis(jnp.expand_dims(new, baxis + 1), baxis, 0)
+                out.append(arr.at[lane_idx].set(v.astype(arr.dtype)))
         self._storage = out
 
     # --------------------------------------------------- prefix-cache hooks
@@ -344,8 +419,12 @@ class PagedCachePool:
         the device half of copy-on-write: a request about to write into a
         shared block gets a private ``dst`` holding identical bytes."""
         out = []
-        for arr, (paged, _) in zip(self._storage, self._meta):
-            out.append(arr.at[dst].set(arr[src]) if paged else arr)
+        for arr, (paged, axis, _) in zip(self._storage, self._meta):
+            if paged:
+                idx = (slice(None),) * axis
+                out.append(arr.at[idx + (dst,)].set(arr[idx + (src,)]))
+            else:
+                out.append(arr)
         self._storage = out
 
     def override_counters(self, caches: Any, value: int) -> Any:
@@ -361,7 +440,7 @@ class PagedCachePool:
         out = [jnp.full_like(leaf, value)
                if not paged and jnp.issubdtype(leaf.dtype, jnp.integer)
                else leaf
-               for leaf, (paged, _) in zip(leaves, self._meta)]
+               for leaf, (paged, _, _) in zip(leaves, self._meta)]
         return jax.tree_util.tree_unflatten(treedef, out)
 
     def stats(self) -> Dict[str, int]:

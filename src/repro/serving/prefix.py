@@ -19,12 +19,19 @@ on top of the vLLM-style block pool in ``serving/paging.py``):
   need splitting).
 * Retention holds one allocator **reference** per tree-referenced
   block.  A block whose refcount is exactly 1 is held by the tree alone
-  ("refcount-0" from the requests' point of view) and is *reclaimable*:
-  :meth:`evict` walks leaves in LRU order and drops tree references
-  until enough blocks actually return to the free list, skipping
-  blocks still pinned by running requests.  A request's table holds the
-  whole chain of any block it holds, so a refcount-1 node can never
-  have a request-pinned descendant — its entire subtree is evictable.
+  ("refcount-0" from the requests' point of view) and is *reclaimable*.
+  The evictable set — reclaimable blocks whose node is a **leaf** — is
+  maintained *incrementally* as an ordered dict updated at every
+  transition (``note_release`` appends, ``match`` adoption removes,
+  ``insert`` refreshes/de-leafs, eviction promotes drained parents), so
+  :meth:`evict` pops from the front in O(1) per block instead of
+  rebuilding a leaf heap per call.  Order is LRU in the access sense:
+  a block enters when its last request releases it and moves to the
+  back when the tree re-touches it.  A request's table holds the whole
+  chain of any block it holds, so a refcount-1 node can never have a
+  request-pinned descendant — its entire subtree drains leaf-first.
+  Set ``debug = True`` to re-derive the set from a full walk at every
+  eviction and assert the incremental bookkeeping never drifted.
 * :meth:`match` returns the longest cached chain for a prompt and takes
   a reference on every returned block for the caller; :meth:`insert`
   donates a freshly prefilled chain (the tree takes its own references)
@@ -37,7 +44,7 @@ copy-on-writes a shared tail block before its first write into it
 """
 from __future__ import annotations
 
-import heapq
+from collections import OrderedDict
 from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 from repro.serving.paging import BlockAllocator
@@ -81,11 +88,25 @@ class PrefixCache:
         self._scopes: Dict[Hashable, _Root] = {}
         self._by_block: Dict[int, _Node] = {}   # block id -> retaining node
         # count of tree blocks whose ONLY reference is the tree's — the
-        # evictable set.  Kept O(1)-exact across every transition: the
+        # reclaimable set.  Kept O(1)-exact across every transition: the
         # tree sees its own incref/decref sites, and the gateway reports
         # request releases via note_release().  Admission reads this
         # every scheduling step, so it must not walk the tree.
         self._retained = 0
+        # the persistent eviction structure: reclaimable LEAF blocks in
+        # LRU order (front = evict next).  note_release appends (the
+        # releasing request was the last user), match-adoption removes,
+        # insert refreshes a re-donated leaf / removes a de-leafed
+        # parent, and evict promotes a drained chain's parent to the
+        # front so chains keep draining oldest-first.  evict(1) is O(1).
+        self._evictable: "OrderedDict[int, _Node]" = OrderedDict()
+        self.debug = False               # recount-assert at every evict()
+        # bumped whenever tree CONTENT changes (insert/evict/drop/forget)
+        # — i.e. whenever a previous peek()/match() result may be stale.
+        # The gateway keys its per-request suffix-bucket cache on this so
+        # admission probing is O(1) per request per epoch, not a fresh
+        # radix walk every scheduling pass.
+        self.epoch = 0
         self._clock = 0                  # LRU tick, bumped on every touch
         self.hits = 0                    # match() calls that reused >=1 block
         self.misses = 0
@@ -124,9 +145,41 @@ class PrefixCache:
     def note_release(self, block: int) -> None:
         """Gateway hook: a request dropped its reference on ``block`` and
         exactly one reference remains.  If that survivor is the tree's,
-        the block just became reclaimable."""
-        if block in self._by_block:
+        the block just became reclaimable — and, when its node is a
+        leaf, joins the back of the eviction order (the releasing
+        request was its most recent user)."""
+        node = self._by_block.get(block)
+        if node is not None:
             self._retained += 1
+            if not node.children:
+                self._evictable[block] = node
+
+    def _walk(self, scope: Hashable, tokens: List[int]) -> List["_Node"]:
+        """Longest cached chain for ``tokens``: the nodes in logical
+        order.  The ONE matching rule shared by :meth:`match` and
+        :meth:`peek` — full-block chunks by dict probe, then a partial
+        tail node only when it covers the remaining tokens exactly."""
+        root = self._scopes.get(scope)
+        path: List[_Node] = []
+        if root is None:
+            return path
+        node = root
+        i = 0
+        while i < len(tokens):
+            child = None
+            if i + self.block_size <= len(tokens):
+                child = node.children.get(
+                    tuple(tokens[i: i + self.block_size]))
+            if child is None:
+                tail = node.children.get(tuple(tokens[i:]))
+                if tail is not None and tail.fill < self.block_size:
+                    child = tail
+            if child is None:
+                break
+            path.append(child)
+            i += child.fill
+            node = child
+        return path
 
     # --------------------------------------------------------------- match
     def match(self, scope: Hashable, tokens: Sequence[int]) \
@@ -140,38 +193,31 @@ class PrefixCache:
         tokens the chain covers — a partial tail node matches only when
         it covers the remaining tokens exactly.
         """
-        tokens = [int(t) for t in tokens]
-        root = self._scopes.get(scope)
-        blocks: List[int] = []
-        matched = 0
-        if root is not None:
-            node = root
-            i = 0
-            while i < len(tokens):
-                child = None
-                if i + self.block_size <= len(tokens):
-                    child = node.children.get(
-                        tuple(tokens[i: i + self.block_size]))
-                if child is None:
-                    tail = node.children.get(tuple(tokens[i:]))
-                    if tail is not None and tail.fill < self.block_size:
-                        child = tail
-                if child is None:
-                    break
-                child.last_used = self._tick()
-                blocks.append(child.block)
-                matched += child.fill
-                node = child
-                i = matched
+        path = self._walk(scope, [int(t) for t in tokens])
+        blocks = [n.block for n in path]
+        matched = sum(n.fill for n in path)
+        for n in path:
+            n.last_used = self._tick()
         for b in blocks:
             if self.allocator.incref(b) == 2:
                 self._retained -= 1          # was tree-only, now adopted
+                self._evictable.pop(b, None)
         if matched:
             self.hits += 1
             self.hit_tokens += matched
         else:
             self.misses += 1
         return blocks, matched
+
+    def peek(self, scope: Hashable, tokens: Sequence[int]) -> int:
+        """Length of the longest cached chain for ``tokens`` — the same
+        :meth:`_walk` as :meth:`match` with NO side effects: no
+        references taken, no LRU touch, no hit/miss accounting.  The
+        scheduler's prefix-aware admission grouping probes waiting
+        requests with this each step, so it must not distort the
+        eviction order or pin anything."""
+        return sum(n.fill for n in self._walk(scope,
+                                              [int(t) for t in tokens]))
 
     # -------------------------------------------------------------- insert
     def insert(self, scope: Hashable, tokens: Sequence[int],
@@ -196,54 +242,99 @@ class PrefixCache:
                 break
             child = node.children.get(chunk)
             if child is None:
+                # the parent stops being a leaf: out of the evictable set
+                # (it may re-enter via promotion once its subtree drains)
+                if not isinstance(node, _Root):
+                    self._evictable.pop(node.block, None)
                 child = _Node(chunk, int(block), node)
                 node.children[chunk] = child
                 self.allocator.incref(int(block))
                 self._by_block[int(block)] = child
                 donated += 1
+            elif child.block in self._evictable:
+                # re-donated chunk: the tree keeps its block, but this is
+                # a fresh use — refresh its LRU position
+                self._evictable.move_to_end(child.block)
             child.last_used = self._tick()
             node = child
         self.inserted_blocks += donated
+        if donated:
+            self.epoch += 1
         return donated
 
     # ------------------------------------------------------------ eviction
+    def _recount_evictable(self) -> Tuple[int, Dict[int, "_Node"]]:
+        """Ground truth by full walk: (reclaimable count, evictable leaf
+        blocks).  Debug-mode oracle for the incremental structures."""
+        retained = 0
+        evictable: Dict[int, _Node] = {}
+        for root in self._scopes.values():
+            for node in self._nodes(root):
+                if self.allocator.refcount(node.block) == 1:
+                    retained += 1
+                    if not node.children:
+                        evictable[node.block] = node
+        return retained, evictable
+
+    def _check(self) -> None:
+        retained, evictable = self._recount_evictable()
+        assert retained == self._retained, (retained, self._retained)
+        assert set(evictable) == set(self._evictable), \
+            (sorted(evictable), sorted(self._evictable))
+
     def evict(self, n_blocks: int) -> int:
         """Drop LRU refcount-0 chains until ``n_blocks`` blocks actually
         returned to the free list (or nothing more is evictable).
 
-        Only leaves are evictable (an interior block is the prefix of its
-        children), and leaves still pinned by a request are skipped —
-        dropping the tree's reference on those would reclaim nothing and
-        forfeit the future hit.  Returns the number of blocks freed.
+        Pops the persistent evictable dict front-first — no tree walk,
+        no heap rebuild: ``evict(1)`` is O(1) however many nodes the
+        trees hold.  Only leaves are evictable (an interior block is the
+        prefix of its children); when a leaf's eviction drains its
+        parent into a reclaimable leaf, :meth:`_promote` places the
+        parent at the front when it is no younger than the current LRU
+        head (chains drain oldest-first) and at the back when a
+        diverging match kept the prefix hot.  Returns the number of
+        blocks freed.
         """
+        if self.debug:
+            self._check()
         freed = 0
-        if n_blocks <= 0 or self._retained <= 0:
-            return freed                   # nothing evictable: skip the walk
-        heap: List[Tuple[int, int, Hashable, _Node]] = []
-        seq = 0
-        for scope, root in self._scopes.items():
-            for node in self._nodes(root):
-                if not node.children:
-                    heapq.heappush(heap, (node.last_used, seq, scope, node))
-                    seq += 1
-        while heap and freed < n_blocks:
-            _, _, scope, node = heapq.heappop(heap)
-            if node.children:          # re-pushed parent grew? (defensive)
-                continue
-            if self.allocator.refcount(node.block) != 1:
-                continue               # request-pinned: not reclaimable
-            self.allocator.decref(node.block)
+        if n_blocks <= 0:
+            return freed
+        while self._evictable and freed < n_blocks:
+            block, node = self._evictable.popitem(last=False)
+            assert self.allocator.refcount(block) == 1, \
+                (block, self.allocator.refcount(block))
+            self.allocator.decref(block)
             self.evicted_blocks += 1
             self._retained -= 1
             freed += 1
             parent = node.parent
             del parent.children[node.tokens]
-            self._by_block.pop(node.block, None)
-            if parent is not None and not isinstance(parent, _Root) \
-                    and not parent.children:
-                heapq.heappush(heap, (parent.last_used, seq, scope, parent))
-                seq += 1
+            self._by_block.pop(block, None)
+            self._promote(parent)
+        if freed:
+            self.epoch += 1
         return freed
+
+    def _promote(self, parent: "_Node") -> None:
+        """A leaf eviction may leave its parent a reclaimable leaf.  In
+        the common chain-drain case the parent's last touch is the same
+        walk that touched the evicted child, so it belongs at the FRONT
+        (drain the chain oldest-first).  But a parent can be *younger*
+        than its drained child — a diverging match re-touches the shared
+        prefix without touching the stale branch — and front-promoting a
+        recently-hot prefix would evict it before genuinely colder
+        leaves; those keep their recency at the back instead."""
+        if isinstance(parent, _Root) or parent.children \
+                or self.allocator.refcount(parent.block) != 1 \
+                or parent.block in self._evictable:
+            return
+        self._evictable[parent.block] = parent
+        head = next(iter(self._evictable))
+        if head != parent.block and \
+                parent.last_used <= self._evictable[head].last_used:
+            self._evictable.move_to_end(parent.block, last=False)
 
     # ------------------------------------------------------------- scoping
     def drop_scope(self, *, tier: Optional[str] = None,
@@ -262,8 +353,11 @@ class PrefixCache:
                     self._retained -= 1    # was tree-only before the drop
                 self.allocator.decref(node.block)
                 self._by_block.pop(node.block, None)
+                self._evictable.pop(node.block, None)
                 dropped += 1
         self.dropped_blocks += dropped
+        if dropped:
+            self.epoch += 1
         return dropped
 
     def forget_block(self, block: int) -> bool:
@@ -280,12 +374,19 @@ class PrefixCache:
         node = self._by_block.get(block)
         if node is None or node.children:
             return False
-        del node.parent.children[node.tokens]
+        parent = node.parent
+        del parent.children[node.tokens]
         del self._by_block[block]
+        self._evictable.pop(block, None)
         if self.allocator.refcount(block) == 1:
             self._retained -= 1            # was tree-only before the drop
         self.allocator.decref(block)
         self.evicted_blocks += 1
+        self.epoch += 1
+        # the forgotten block's holder pins its whole chain, so the
+        # newly-leafed parent is never reclaimable here — but direct API
+        # callers may violate that, so keep the structure exact anyway
+        self._promote(parent)
         return True
 
     # --------------------------------------------------------------- stats
@@ -299,6 +400,7 @@ class PrefixCache:
             "matched_tokens": self.hit_tokens,
             "cached_blocks": len(self._by_block),
             "retained_blocks": self._retained,
+            "evictable_leaves": len(self._evictable),
             "inserted_blocks": self.inserted_blocks,
             "evicted_blocks": self.evicted_blocks,
             "dropped_blocks": self.dropped_blocks,

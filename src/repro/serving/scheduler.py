@@ -108,12 +108,17 @@ class GatewayRequest:
 
 @dataclass
 class ScheduledAction:
-    """One micro-batch decision: prefill or decode a tier-homogeneous group."""
+    """One micro-batch decision: prefill or decode a tier-homogeneous group.
+
+    ``suffix_bucket`` records the prefix-aware admission decision for
+    prefills: the uncached-suffix width every member of the batch shares
+    (None when grouping is off or for decode actions)."""
 
     kind: str                                # "prefill" | "decode"
     tier: str
     version: Optional[int]
     requests: List[GatewayRequest]
+    suffix_bucket: Optional[int] = None
 
 
 class TierViewCache:
@@ -259,7 +264,9 @@ class Scheduler:
     def __init__(self, num_lanes: int, max_batch: int, *,
                  allocator: Any = None, prefill_blocks: int = 0,
                  watermark_blocks: int = 0,
-                 reclaimable: Optional[Callable[[], int]] = None):
+                 reclaimable: Optional[Callable[[], int]] = None,
+                 suffix_bucket: Optional[
+                     Callable[[GatewayRequest], int]] = None):
         self.num_lanes = int(num_lanes)
         self.max_batch = int(max_batch)
         self.allocator = allocator
@@ -269,6 +276,13 @@ class Scheduler:
         # chains with no live request references) — they count toward the
         # admission budget because eviction frees them before allocation
         self.reclaimable = reclaimable
+        # prefix-aware admission grouping: probe of a request's uncached
+        # suffix width (the gateway wires PrefixCache.peek through this).
+        # Prefill lanes share one static suffix width, so batching a
+        # full-match lane (1-token suffix) with a cold lane pads the hit
+        # up to the cold lane's full width — grouping by bucket keeps
+        # each micro-batch at its own (narrow) width instead.
+        self.suffix_bucket = suffix_bucket
         self.waiting: Deque[GatewayRequest] = deque()
         self.running: List[GatewayRequest] = []
         self._free_lanes: List[int] = list(range(num_lanes))
@@ -373,15 +387,32 @@ class Scheduler:
                 if r.group_key not in oldest or cand < oldest[r.group_key]:
                     oldest[r.group_key] = cand
             key = min(oldest, key=lambda k: oldest[k])
+            bucket: Optional[int] = None
+            probed: Dict[int, int] = {}          # id(req) -> bucket, one
+                                                 # probe per request per pass
+            if self.suffix_bucket is not None:
+
+                def _bucket(r: GatewayRequest) -> int:
+                    got = probed.get(id(r))
+                    if got is None:
+                        got = probed[id(r)] = self.suffix_bucket(r)
+                    return got
+
+                # the oldest member defines the batch's suffix width;
+                # same-key requests with a different cached-suffix bucket
+                # wait for their own batch rather than padding this one
+                bucket = _bucket(self.waiting[oldest[key][1]])
             batch: List[GatewayRequest] = []
             remaining: Deque[GatewayRequest] = deque()
             for r in self.waiting:               # one pass: select + requeue
-                if len(batch) < room and r.group_key == key:
+                if len(batch) < room and r.group_key == key and (
+                        bucket is None or _bucket(r) == bucket):
                     batch.append(r)
                 else:
                     remaining.append(r)
             self.waiting = remaining
-            return ScheduledAction("prefill", key[0], key[1], batch)
+            return ScheduledAction("prefill", key[0], key[1], batch,
+                                   suffix_bucket=bucket)
 
         if self.running:
             groups: Dict[Hashable, List[GatewayRequest]] = {}

@@ -1,0 +1,246 @@
+"""Kernel-resident paged decode: logit equivalence vs the gather/scatter
+path on mixed lengths + GQA (+ MLA, int8 KV), the block-indexed write
+kernel vs its oracle, CoW-before-first-write under the resident path,
+window/SSM auto-fallback, and the Pallas kernel route end to end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.licensing import LicenseTier
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_decode_write
+from repro.models import init_params
+from repro.serving import LicensedGateway, RequestState
+
+MAX_PROMPT = 8
+MAX_NEW = 8
+BLOCK = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tiers = {
+        "free": LicenseTier(name="free", masks={"*": ((0.0, 0.004),)}),
+        "pro": LicenseTier(name="pro", masks={"*": ((0.0, 0.002),)}),
+    }
+    return cfg, params, tiers
+
+
+def _gateway(setup, **kw):
+    cfg, params, tiers = setup
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_prompt", MAX_PROMPT)
+    kw.setdefault("max_new_cap", MAX_NEW)
+    kw.setdefault("block_size", BLOCK)
+    return LicensedGateway(cfg, params, tiers=tiers, **kw)
+
+
+def _prompt(seed, n=MAX_PROMPT):
+    return np.random.default_rng(seed).integers(0, 500, n, dtype=np.int32)
+
+
+def _drain(gw, prompts, **kw):
+    reqs = [gw.submit(p, **kw) for p in prompts]
+    gw.run()
+    assert all(r.state == RequestState.DONE for r in reqs), \
+        [r.error for r in reqs]
+    return reqs
+
+
+def _assert_streams_equal(streams, atol=1e-5):
+    for a, b in zip(*streams):
+        assert a.out_tokens == b.out_tokens
+        assert len(a.logits_rows) == len(b.logits_rows)
+        for ra, rb in zip(a.logits_rows, b.logits_rows):
+            np.testing.assert_allclose(ra, rb, atol=atol, rtol=0)
+
+
+# ------------------------------------------------------- logit equivalence
+def test_resident_matches_gather_scatter_mixed_lengths(setup):
+    """The acceptance bar: the same mixed-length, mixed-tier stream
+    through the kernel-resident and the gather/scatter decode paths
+    produces identical tokens and logits equal to 1e-5 — and the
+    resident gateway really never ran a gather/scatter decode step."""
+    streams, gws = [], []
+    for kernel in (False, True):
+        gw = _gateway(setup, kernel_decode=kernel, record_logits=True)
+        reqs = [gw.submit(_prompt(i), license=lic,
+                          max_new_tokens=2 + 2 * (i % 3))
+                for i, lic in enumerate(["full", "free", "free", "pro",
+                                         "full"])]
+        gw.run()
+        assert all(r.state == RequestState.DONE for r in reqs)
+        streams.append(reqs)
+        gws.append(gw)
+    _assert_streams_equal(streams)
+    base, resident = gws
+    assert base.kernel_decode is False and base.stats[
+        "resident_decode_steps"] == 0
+    assert resident.kernel_decode is True
+    assert resident.stats["resident_decode_steps"] == \
+        resident.stats["decode_steps"] > 0
+
+
+def test_resident_fused_sampling_matches_host(setup):
+    """Fused on-device sampling through the resident step (greedy AND
+    stochastic temperature/top-k lanes) returns the same tokens as the
+    return-logits host path."""
+    outs = []
+    for fuse in (True, False):
+        gw = _gateway(setup, fuse_sampling=fuse)
+        assert gw.kernel_decode
+        rs = [gw.submit(_prompt(3), license="free", max_new_tokens=4),
+              gw.submit(_prompt(4), license="free", max_new_tokens=4,
+                        temperature=0.8, top_k=5, seed=7)]
+        gw.run()
+        outs.append([r.out_tokens for r in rs])
+    assert outs[0] == outs[1]
+
+
+@pytest.mark.parametrize("arch,extra", [
+    ("deepseek-v2-lite-16b", {}),            # MLA: compressed-KV blocks
+    ("qwen2.5-3b", {"kv_cache_int8": True}),  # int8 KV codes + scales
+])
+def test_resident_matches_on_other_cache_layouts(arch, extra):
+    cfg = smoke_variant(get_config(arch)).replace(**extra)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    streams = []
+    for kernel in (False, True):
+        gw = LicensedGateway(cfg, params, max_batch=2,
+                             max_prompt=MAX_PROMPT, max_new_cap=4,
+                             block_size=BLOCK, kernel_decode=kernel,
+                             record_logits=True)
+        assert gw.kernel_decode is kernel
+        streams.append(_drain(gw, [_prompt(i) for i in range(3)],
+                              max_new_tokens=3))
+    _assert_streams_equal(streams)
+
+
+def test_resident_pallas_interpret_route(setup):
+    """decode_pallas="interpret" sends attention through the actual
+    Pallas kernel (interpret mode) inside the resident step; tokens and
+    logits must still match the gather/scatter baseline."""
+    streams = []
+    for kw in (dict(kernel_decode=False),
+               dict(kernel_decode=True, decode_pallas="interpret")):
+        gw = _gateway(setup, record_logits=True, **kw)
+        streams.append(_drain(gw, [_prompt(9), _prompt(10)],
+                              max_new_tokens=2))
+    _assert_streams_equal(streams)
+
+
+def test_resident_preemption_roundtrip(setup):
+    """Preemption under block pressure still reproduces the uncontended
+    tokens when decode never scatters (recompute restart re-prefills)."""
+    want = [r.out_tokens for r in _drain(
+        _gateway(setup, prefix_cache=False),
+        [_prompt(i) for i in range(5)], max_new_tokens=5)]
+    gw = _gateway(setup, prefix_cache=False, max_lanes=4, num_blocks=9)
+    assert gw.kernel_decode
+    reqs = _drain(gw, [_prompt(i) for i in range(5)], max_new_tokens=5)
+    assert gw.stats["preempted"] > 0
+    assert [r.out_tokens for r in reqs] == want
+    assert gw.pool.allocator.num_held == 0
+
+
+# ------------------------------------------------------ write kernel/oracle
+def test_paged_write_kernel_matches_oracle():
+    r = np.random.default_rng(0)
+    p, bs, kh, hd, b = 9, 4, 2, 64, 4
+    kb = jnp.asarray(r.standard_normal((p, bs, kh, hd)), jnp.float32)
+    vb = jnp.asarray(r.standard_normal((p, bs, kh, hd)), jnp.float32)
+    nk = jnp.asarray(r.standard_normal((b, kh, hd)), jnp.float32)
+    nv = jnp.asarray(r.standard_normal((b, kh, hd)), jnp.float32)
+    blocks = jnp.asarray(r.permutation(p)[:b], jnp.int32)
+    offs = jnp.asarray(r.integers(0, bs, b), jnp.int32)
+    gk, gv = paged_decode_write(kb, vb, nk, nv, blocks, offs,
+                                interpret=True)
+    rk, rv = ref.paged_decode_write(kb, vb, nk, nv, blocks, offs)
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(rv))
+
+
+def test_paged_write_kernel_null_duplicates_inert():
+    """Pad lanes all target the null block: duplicate write targets must
+    corrupt nothing outside that one block (its content is garbage by
+    contract)."""
+    r = np.random.default_rng(1)
+    p, bs, kh, hd = 6, 4, 1, 64
+    kb = jnp.asarray(r.standard_normal((p, bs, kh, hd)), jnp.float32)
+    vb = jnp.asarray(r.standard_normal((p, bs, kh, hd)), jnp.float32)
+    nk = jnp.asarray(r.standard_normal((3, kh, hd)), jnp.float32)
+    nv = jnp.asarray(r.standard_normal((3, kh, hd)), jnp.float32)
+    null = p - 1
+    blocks = jnp.asarray([2, null, null], jnp.int32)   # 2 pad lanes
+    offs = jnp.asarray([1, 0, 0], jnp.int32)
+    gk, gv = paged_decode_write(kb, vb, nk, nv, blocks, offs,
+                                interpret=True)
+    keep = np.ones((p, bs), bool)
+    keep[2, 1] = keep[null, 0] = False
+    np.testing.assert_array_equal(np.asarray(gk)[keep], np.asarray(kb)[keep])
+    np.testing.assert_array_equal(np.asarray(gv)[keep], np.asarray(vb)[keep])
+    np.testing.assert_array_equal(np.asarray(gk)[2, 1], np.asarray(nk)[0])
+
+
+# ----------------------------------------------------- CoW under residency
+def test_cow_before_first_write_still_holds(setup):
+    """Shared prefix chains stay bit-stable under kernel-resident decode:
+    the tail block is CoW'd before the step's block-indexed write, so a
+    later wave re-adopting the chain reproduces the cold-run tokens
+    exactly — and shared non-tail blocks are never write targets."""
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, 500, 6, dtype=np.int32)     # non-aligned bucket
+    prompts = [p.copy() for _ in range(6)]
+    streams, gws = [], []
+    for prefix in (False, True):
+        gw = _gateway(setup, max_prompt=6, max_new_cap=6,
+                      prefix_cache=prefix, record_logits=True)
+        assert gw.kernel_decode
+        reqs = []
+        for wave in range(3):
+            reqs += _drain(gw, prompts[2 * wave: 2 * wave + 2],
+                           max_new_tokens=3)
+        streams.append(reqs)
+        gws.append(gw)
+    _assert_streams_equal(streams)
+    assert gws[1].stats["cow_copies"] > 0
+    assert gws[0].stats["cow_copies"] == 0
+    assert gws[1].stats["prefix_tokens_reused"] > 0
+
+
+# -------------------------------------------------------- clean fallbacks
+def test_window_model_falls_back_to_gather_scatter():
+    """Sliding-window attention keeps ring caches as per-lane state; the
+    resident path auto-disables (even when asked for) and serving stays
+    correct through the gather/scatter decode."""
+    cfg = smoke_variant(get_config("recurrentgemma-2b"))
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    gw = LicensedGateway(cfg, params, max_batch=2, max_prompt=8,
+                         max_new_cap=8, block_size=4, kernel_decode=True)
+    assert gw.paged is True and gw.kernel_decode is False
+    reqs = _drain(gw, [_prompt(i) for i in range(3)], max_new_tokens=3)
+    assert gw.stats["resident_decode_steps"] == 0
+    assert all(len(r.out_tokens) == 3 for r in reqs)
+
+
+def test_pure_ssm_model_falls_back_to_contiguous():
+    cfg = smoke_variant(get_config("mamba2-130m"))
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    gw = LicensedGateway(cfg, params, max_batch=2, max_prompt=4,
+                         max_new_cap=2, kernel_decode=True)
+    assert gw.paged is False and gw.kernel_decode is False
+    r = gw.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=2)
+    gw.run()
+    assert r.state == RequestState.DONE
+
+
+def test_decode_pallas_validation(setup):
+    with pytest.raises(ValueError):
+        _gateway(setup, decode_pallas="bogus")
+    m = _gateway(setup).metrics()
+    assert m["decode_path"]["kernel_resident"] is True
+    assert m["decode_path"]["pallas"] in ("off", "pallas")

@@ -316,6 +316,119 @@ def test_one_token_bucket_releases_unusable_matches(setup):
     assert alloc.num_held == st["retained_blocks"] == 1
 
 
+# ------------------------------------------- persistent eviction structure
+def test_evictable_dict_matches_recount_under_pressure(setup):
+    """The incrementally maintained evictable dict (and the O(1)
+    reclaimable counter) must agree with a full tree walk at every
+    eviction of a real eviction-heavy workload — debug mode asserts
+    inside evict(); we recheck at the end for good measure."""
+    gw = _gateway(setup, max_lanes=3, num_blocks=6, watermark_blocks=1)
+    gw.prefix.debug = True
+    prompts = [np.random.default_rng(30 + i).integers(0, 500, MAX_PROMPT,
+                                                      dtype=np.int32)
+               for i in range(6)]
+    # two shared-prefix rounds in the middle so match/insert/CoW churn
+    # the structure, not just insert/evict
+    prompts[2] = prompts[0].copy()
+    prompts[4] = prompts[1].copy()
+    _drain(gw, prompts, max_new=4, waves=3)
+    assert gw.prefix.evicted_blocks > 0
+    gw.prefix._check()
+    st = gw.prefix.stats()
+    assert st["evictable_leaves"] <= st["retained_blocks"]
+
+
+def test_evict_order_is_lru_with_chain_promotion():
+    """Release order defines the LRU front; a drained chain's parent is
+    promoted to the front so whole chains drain before newer leaves."""
+    a = BlockAllocator(16)
+    pc = PrefixCache(a, block_size=4)
+    pc.debug = True
+    chains = {}
+    for s in range(3):
+        toks = [100 * s + i for i in range(8)]
+        blocks = a.alloc(2)
+        pc.insert("s", toks, blocks)
+        chains[s] = (toks, blocks)
+    # release in order 1, 2, 0 -> eviction must follow that order
+    for s in (1, 2, 0):
+        _release(pc, chains[s][1])
+    assert pc.stats()["evictable_leaves"] == 3      # one leaf per chain
+    assert pc.evict(2) == 2                          # chain 1, leaf first
+    assert pc.match("s", chains[1][0]) == ([], 0)
+    got, n = pc.match("s", chains[2][0])             # chain 2 untouched
+    assert n == 8
+    _release(pc, chains[2][1])
+    # re-donating an evictable chunk refreshes its LRU position: chain 2
+    # moves behind chain 0, so chain 0 drains next
+    pc.insert("s", chains[2][0], chains[2][1])
+    assert pc.evict(2) == 2
+    assert pc.match("s", chains[0][0]) == ([], 0)
+    assert pc.match("s", chains[2][0])[1] == 8
+
+
+def test_evict_one_pops_without_walk():
+    """evict(1) must not rebuild anything: exactly one pop from the
+    persistent dict, exactly one block freed, structure still exact."""
+    a = BlockAllocator(64)
+    pc = PrefixCache(a, block_size=4)
+    pc.debug = True
+    for s in range(10):
+        toks = [100 * s + i for i in range(8)]
+        blocks = a.alloc(2)
+        pc.insert("s", toks, blocks)
+        _release(pc, blocks)
+    free0 = a.num_free
+    assert pc.evict(1) == 1
+    assert a.num_free == free0 + 1
+    assert pc.stats()["evictable_leaves"] == 9 + 1  # 9 leaves + 1 promoted
+    pc._check()
+
+
+def test_peek_is_side_effect_free():
+    a = BlockAllocator(8)
+    pc = PrefixCache(a, block_size=4)
+    toks = list(range(8))
+    blocks = a.alloc(2)
+    pc.insert("s", toks, blocks)
+    _release(pc, blocks)
+    st0 = pc.stats()
+    assert pc.peek("s", toks) == 8
+    assert pc.peek("s", toks[:4] + [9, 9, 9, 9]) == 4
+    assert pc.peek("s", [9] * 8) == 0
+    assert pc.peek("other", toks) == 0
+    assert pc.stats() == st0                       # no hits/misses/touches
+    assert all(a.refcount(b) == 1 for b in blocks)  # no references taken
+
+
+# ------------------------------------------------ prefix-aware admission
+def test_full_match_lane_gets_its_own_narrow_batch(setup):
+    """A full-match request must not pad to a cold request's suffix
+    width: the scheduler groups prefills by cached-suffix bucket, so the
+    hit prefills 1 lane-token while the cold one prefills max_prompt."""
+    gw = _gateway(setup)
+    a = _shared_prompts(40, 1)[0]
+    _drain(gw, [a.copy()], max_new=2)              # wave 1: populate
+    lane_tokens0 = gw.stats["prefill_lane_tokens"]
+    assert lane_tokens0 == MAX_PROMPT
+    b = _shared_prompts(41, 1, shared=0)[0]        # unrelated cold prompt
+    _drain(gw, [a.copy(), b], max_new=2)           # wave 2: hit + cold
+    # grouped: 1 (full match, W=1) + 8 (cold) — ungrouped would be 16
+    assert gw.stats["prefill_lane_tokens"] == lane_tokens0 + 1 + MAX_PROMPT
+    m = gw.metrics()["admission_grouping"]
+    assert m["enabled"] is True
+    assert m["batches_by_suffix_width"] == {MAX_PROMPT: 2, 1: 1}
+    assert gw.stats["prefill_batches"] == 3
+
+
+def test_grouping_decision_exposed_and_inert_when_disabled(setup):
+    gw = _gateway(setup, prefix_cache=False)
+    _drain(gw, _shared_prompts(42, 2), max_new=2)
+    m = gw.metrics()["admission_grouping"]
+    assert m["enabled"] is False
+    assert m["batches_by_suffix_width"] == {}
+
+
 def test_pure_ssm_model_disables_prefix_cache():
     """A model whose cache can't be block-seeded (recurrent state) falls
     back to the contiguous pool — prefix caching silently off, serving
