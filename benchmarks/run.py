@@ -23,8 +23,8 @@ import sys
 import time
 import traceback
 
-SUITES = ("storage", "update", "licensing", "kernels", "serving", "gateway",
-          "paging", "prefix", "decode", "roofline")
+SUITES = ("storage", "update-wire", "licensing", "kernels", "serving",
+          "gateway", "paging", "prefix", "decode", "update", "roofline")
 
 
 def main(argv=None) -> None:
@@ -47,11 +47,11 @@ def main(argv=None) -> None:
     from benchmarks import (decode_bench, gateway_bench, kernel_bench,
                             licensing_ladder, paging_bench, prefix_bench,
                             roofline_table, serving_bench, storage_cost,
-                            update_latency)
+                            update_bench, update_latency)
 
     modules = {
         "storage": storage_cost,        # paper Table 1
-        "update": update_latency,       # paper §4.3 low-latency update
+        "update-wire": update_latency,  # paper §4.3 bytes-on-the-wire
         "licensing": licensing_ladder,  # paper §3.5 / Algorithm 1
         "kernels": kernel_bench,
         "serving": serving_bench,
@@ -59,6 +59,7 @@ def main(argv=None) -> None:
         "paging": paging_bench,         # block-paged vs fixed-lane cache pool
         "prefix": prefix_bench,         # shared-prefix radix cache vs paged
         "decode": decode_bench,         # kernel-resident vs gather/scatter
+        "update": update_bench,         # staged sync vs blocking decode stall
         "roofline": roofline_table,     # deliverable (g)
     }
 

@@ -1,0 +1,240 @@
+"""Staged weight sync benchmark: decode-stall p99 with vs. without staging.
+
+The paper's headline is *low-latency dynamic licensing*: an edge pod
+pulls §3.1.2 delta updates and flips versions without interrupting
+service.  The blocking ``sync()`` pays the whole delta-apply (plus, on
+the int8 path, a whole-model requantize) between two scheduler steps —
+one giant stall.  The staged path (``serving/updates.py``) interleaves
+bounded stager steps with decode, so no scheduler step ever carries the
+full update.
+
+Method: two gateways serve the identical request stream while the
+server publishes a new production version mid-stream.  Every scheduler
+step is individually timed; the blocking gateway runs the pre-staging
+sync (whole packet pulled, applied, whole-model requantize — spelled
+out in ``_blocking_sync`` because the gateway's ``sync()`` itself now
+drives the staged machinery) inline between two steps, the staged
+gateway runs ``begin_sync()`` and lets ``step()`` carry the bounded
+work.  An update-free reference run pins token equivalence.
+
+Asserted claims (the CI gate behind ``BENCH_update.json``):
+  * staged p99 per-step stall (floor-interpolated, ~2nd-worst of ~50
+    steps so one CI-container contention outlier cannot flip the
+    verdict; the raw max is reported alongside) < the blocking sync
+    stall — no scheduler step is delayed by the full delta-apply;
+  * per-stager-step applied bytes respect ``max_step_bytes`` (+ one
+    indivisible chunk page);
+  * in-flight requests produce bit-identical tokens across the staged
+    flip (version pinning), and post-flip admissions serve the new
+    version through a prewarmed view.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.licensing import LicenseTier
+from repro.core.protocol import LicenseServer
+from repro.core.weightstore import WeightStore
+from repro.models import init_params
+
+ARCH = "qwen2.5-3b"
+MAX_PROMPT = 8
+MAX_BATCH = 4
+N_REQS = 8
+NEW_TOKENS = 24
+SYNC_AT_STEP = 4                 # publish + sync after this many steps
+MAX_STEP_BYTES = 256 << 10
+REQUANT_PER_STEP = 4
+CHUNK_ELEMS = 8 << 10            # 32 KiB pages < MAX_STEP_BYTES
+
+
+def _boot(cfg, server, params, **kw):
+    from repro.serving import LicensedGateway
+
+    template = jax.tree_util.tree_map(lambda x: np.zeros_like(x), params)
+    return LicensedGateway.from_server(
+        cfg, server, "lm", template, max_batch=MAX_BATCH,
+        max_prompt=MAX_PROMPT, max_new_cap=NEW_TOKENS, **kw)
+
+
+def _submit_all(gw, n_reqs):
+    return [gw.submit(np.random.default_rng(i).integers(
+                          0, 500, MAX_PROMPT, dtype=np.int32),
+                      license="free", max_new_tokens=NEW_TOKENS)
+            for i in range(n_reqs)]
+
+
+def _blocking_sync(gw, server) -> None:
+    """The pre-staging ``sync()`` reproduced as the baseline: tier
+    refresh, the whole packet pulled and applied in one call, then
+    ``update_weights`` — which requantizes the WHOLE model on the int8
+    path — all between two scheduler steps.  (The gateway's ``sync()``
+    itself now drives the staged machinery, so the old behavior must be
+    spelled out to be measured.)"""
+    gw._refresh_server_tiers()
+    gw._client.request_update(server)
+    gw.update_weights(gw._client.params, version=gw._client.version)
+
+
+def _drive(gw, n_reqs, *, publish, staged, server=None) -> tuple:
+    """Serve the stream; at SYNC_AT_STEP publish v2 and sync.  Returns
+    (per-step seconds, blocking-sync seconds or 0, requests)."""
+    reqs = _submit_all(gw, n_reqs)
+    steps: List[float] = []
+    sync_s = 0.0
+    i = 0
+    while gw.scheduler.waiting or gw.scheduler.running or gw.sync_active:
+        begin = False
+        if i == SYNC_AT_STEP:
+            publish()
+            if staged:
+                begin = True              # timed WITH this iteration's step:
+            else:                         # the §4.2 delta query at begin is
+                t0 = time.perf_counter()  # serving-thread work too
+                _blocking_sync(gw, server)
+                sync_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        if begin:
+            assert gw.begin_sync(
+                max_step_bytes=MAX_STEP_BYTES,
+                requant_layers_per_step=REQUANT_PER_STEP) is True
+        gw.step()
+        steps.append(time.perf_counter() - t0)
+        i += 1
+    return steps, sync_s, reqs
+
+
+def run(smoke: bool = False) -> list:
+    n_reqs = 4 if smoke else N_REQS
+    cfg = smoke_variant(get_config(ARCH))
+    params = jax.device_get(init_params(jax.random.PRNGKey(0), cfg))
+    tier = LicenseTier(name="free", masks={"*": ((0.0, 0.004),)})
+
+    def fresh_server():
+        store = WeightStore(":memory:", row_limit=2048,
+                            chunk_elems=CHUNK_ELEMS)
+        server = LicenseServer(store)
+        server.publish("lm", params, tag="v1")
+        server.publish_tier("lm", tier)
+        return server
+
+    # a realistic §3.1.2 delta touches a fraction of the layers; the
+    # blocking path still requantizes the WHOLE model (update_weights),
+    # the staged path only the touched third (requantize_layers)
+    from repro.core.pytree_io import flatten_params
+
+    flat = flatten_params(params)
+    warmp = {k: (v * 1.001 if i % 3 == 0 else v)
+             for i, (k, v) in enumerate(flat.items())}
+    newp = {k: (v * 1.01 if i % 3 == 0 else v)
+            for i, (k, v) in enumerate(flat.items())}
+
+    def _warm(gw, server, staged):
+        """Warm serving AND the arm's own update path (same touched
+        layers / page shapes as the measured delta) outside timing: the
+        bench measures steady-state stalls, not first-sync jit cost."""
+        w = gw.submit(np.zeros(MAX_PROMPT, np.int32), license="free",
+                      max_new_tokens=2)
+        gw.run()
+        assert w.out_tokens
+        server.publish("lm", warmp, tag="v1.1")
+        if staged:
+            assert gw.begin_sync(
+                max_step_bytes=MAX_STEP_BYTES,
+                requant_layers_per_step=REQUANT_PER_STEP) is True
+            while gw.sync_active:
+                gw.sync_step()
+        else:
+            _blocking_sync(gw, server)
+
+    # ---- update-free reference: the token stream pinning must reproduce.
+    # Boots from a server already at the warm version, so its weights
+    # equal the synced gateways' pre-measurement state.
+    server = fresh_server()
+    server.publish("lm", warmp, tag="v1.1")
+    ref = _boot(cfg, server, params, quantized=True)
+    warm = ref.submit(np.zeros(MAX_PROMPT, np.int32), license="free",
+                      max_new_tokens=2)
+    ref.run()                                    # compile outside timing
+    assert warm.out_tokens
+    ref_reqs = _submit_all(ref, n_reqs)
+    ref.run()
+
+    # ---- blocking baseline: the stall is the whole update in one step.
+    # quantized=True makes the blocking cost realistic: delta-apply PLUS
+    # whole-model requantize land between two scheduler steps.
+    server = fresh_server()
+    blocking = _boot(cfg, server, params, quantized=True)
+    _warm(blocking, server, staged=False)
+    v_before = blocking.version
+    steps_b, sync_s, reqs_b = _drive(
+        blocking, n_reqs, staged=False, server=server,
+        publish=lambda: server.publish("lm", newp, tag="v2"))
+
+    # ---- staged sync: bounded stager work rides along with decode
+    server2 = fresh_server()
+    staged = _boot(cfg, server2, params, quantized=True)
+    _warm(staged, server2, staged=True)
+    assert staged.version == v_before
+    steps_s, _, reqs_s = _drive(
+        staged, n_reqs, staged=True,
+        publish=lambda: server2.publish("lm", newp, tag="v2"))
+
+    # ---- claims ---------------------------------------------------------
+    # token equivalence: in-flight requests never see the new weights
+    for r, rr in zip(reqs_s, ref_reqs):
+        assert r.out_tokens == rr.out_tokens, "staged flip broke pinning"
+        assert r.version == v_before
+    for r, rr in zip(reqs_b, ref_reqs):
+        assert r.out_tokens == rr.out_tokens, "blocking sync broke pinning"
+    st = staged.metrics()["staged_update"]
+    assert st["flips"] == 1 and staged.version == blocking.version
+    # bounded bytes per stager step (+ one indivisible page; pages are
+    # zlib-compressed and incompressible data can exceed raw size by a
+    # few dozen bytes, plus 8 index bytes per page on the wire)
+    page_bytes = CHUNK_ELEMS * 4 + 1024
+    assert st["max_step_bytes_applied"] <= MAX_STEP_BYTES + page_bytes, st
+    # the tentpole: no staged scheduler step carries the full update.
+    # p99 with floor interpolation (~2nd-worst of ~50 steps) so a single
+    # scheduler-step outlier from CI-container contention cannot flip
+    # the verdict; the raw max is still reported below.
+    stall_b = sync_s                              # the blocking stall
+    stall_s = float(np.percentile(steps_s, 99, method="lower"))
+    assert stall_s < stall_b, (stall_s, stall_b)
+    # post-flip admission is warm: the hot tier was prewarmed
+    misses = staged.views.misses
+    post = staged.submit(np.random.default_rng(99).integers(
+        0, 500, MAX_PROMPT, dtype=np.int32), license="free",
+        max_new_tokens=2)
+    staged.run()
+    assert post.version == staged.version != v_before
+    assert staged.views.misses == misses, "new-version view was cold"
+
+    p99_b = float(np.percentile(steps_b, 99, method="lower"))
+    rows = [
+        {"name": "update/blocking_sync",
+         "us_per_call": sync_s * 1e6,
+         "decode_stall_p99_ms": round(p99_b * 1e3, 2),
+         "decode_stall_max_ms": round(float(np.max(steps_b)) * 1e3, 2),
+         "sync_stall_ms": round(stall_b * 1e3, 2),
+         "steps": len(steps_b)},
+        {"name": "update/staged_sync",
+         "us_per_call": float(np.sum(steps_s)) * 1e6 / max(len(steps_s), 1),
+         "decode_stall_p99_ms": round(stall_s * 1e3, 2),
+         "decode_stall_max_ms": round(float(np.max(steps_s)) * 1e3, 2),
+         "stall_vs_blocking_x": round(stall_b / max(stall_s, 1e-9), 1),
+         "steps": len(steps_s),
+         "stager_steps": st["steps"],
+         "bytes_applied": st["bytes_applied"],
+         "bytes_per_step_max": st["max_step_bytes_applied"],
+         "max_step_bytes_bound": MAX_STEP_BYTES + page_bytes,
+         "layers_requantized": st["layers_requantized"],
+         "views_prewarmed": st["views_prewarmed"],
+         "tokens_equivalent": True},
+    ]
+    return rows

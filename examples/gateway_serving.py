@@ -110,16 +110,26 @@ def main():
           f"{n * gw.max_prompt} cold), {pm['retained_blocks']} blocks "
           f"retained for future hits, {pm['cow_copies']} copy-on-writes")
 
-    # 5. weight update mid-service ------------------------------------------
+    # 5. staged weight update mid-service -----------------------------------
+    # publish v1.1 while requests decode: begin_sync() stages the delta in
+    # bounded steps riding along with the scheduler; the in-flight request
+    # stays pinned to the old version across the atomic flip
     newp = jax.tree_util.tree_map(lambda x: np.asarray(x) * 1.01, params)
     server.publish("lm", newp, tag="v1.1")
-    gw.sync()
+    old = gw.submit(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
+                    license="free", max_new_tokens=8)
+    gw.step()                                  # old is in flight
+    gw.begin_sync(max_step_bytes=2 << 20)      # pace the flip to land
+                                               # while old still decodes
+    gw.run()                                   # decode + staging interleave
     r = gw.submit(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
                   license="free", max_new_tokens=4)
     gw.run()
-    print(f"[5] synced to v{gw.version}; new request pinned to v{r.version}, "
-          f"stale views invalidated "
-          f"({gw.views.stats()['invalidations']} entries), "
+    st = gw.metrics()["staged_update"]
+    print(f"[5] staged sync to v{gw.version} in {st['steps']} bounded steps "
+          f"({st['bytes_applied']} delta bytes, {st['views_prewarmed']} view "
+          f"prewarmed); in-flight request stayed pinned to v{old.version}, "
+          f"new request pinned to v{r.version}, "
           f"prefix scopes live: {gw.prefix.stats()['scopes']}")
     store.close()
 

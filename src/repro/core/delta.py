@@ -40,27 +40,31 @@ def encode_delta(old_params: Any, new_params: Any) -> UpdatePacket:
 
 
 def delta_to_dense(delta: LayerDelta) -> np.ndarray:
-    """Materialize a LayerDelta into a dense update-or-zero buffer + mask."""
-    size = int(np.prod(delta.shape)) if delta.shape else 1
-    buf = np.zeros(size, dtype=np.float32)
-    if delta.chunks is not None:
-        import zlib
+    """Materialize a LayerDelta into a dense update-or-zero buffer + mask.
 
+    Chunk pages are decoded with the delta's own dtype and its explicit
+    per-chunk compression flags (never sniffed — raw bytes that happen to
+    parse as zlib must pass through untouched)."""
+    size = int(np.prod(delta.shape)) if delta.shape else 1
+    if delta.chunks is not None:
+        buf = np.zeros(size, dtype=delta.dtype)
         ce = delta.chunk_elems
-        for ci, payload in zip(delta.indices, delta.chunks):
-            try:
-                raw = zlib.decompress(payload)
-            except zlib.error:
-                raw = payload
-            page = np.frombuffer(raw, dtype=np.float32)
-            buf[int(ci) * ce : int(ci) * ce + page.size] = page
+        for ci, page in delta.iter_pages():
+            buf[ci * ce : ci * ce + page.size] = page
     else:
+        buf = np.zeros(size, dtype=np.float32)
         buf[delta.indices] = delta.values
     return buf.reshape(delta.shape)
 
 
-def apply_packet(params: Any, packet: UpdatePacket, *, use_kernel: bool = True) -> Any:
-    """Apply an update packet to local params (edge-device side, §3.1.2)."""
+def apply_packet(params: Any, packet: UpdatePacket, *, use_kernel: bool = True,
+                 donate: bool = False) -> Any:
+    """Apply an update packet to local params (edge-device side, §3.1.2).
+
+    ``donate=True`` lets the kernel consume its (freshly device-put) base
+    buffer and scatter in place — the staged-update path applies many
+    bounded parts against one staging copy, where cloning the layer per
+    part would dominate."""
     flat = flatten_params(params)
     out = dict(flat)
     for d in packet.deltas:
@@ -78,7 +82,9 @@ def apply_packet(params: Any, packet: UpdatePacket, *, use_kernel: bool = True) 
         elif use_kernel:
             from repro.kernels import ops
 
-            new = ops.delta_apply(base, jnp.asarray(d.indices), jnp.asarray(d.values, dtype=base.dtype))
+            new = ops.delta_apply(base, jnp.asarray(d.indices),
+                                  jnp.asarray(d.values, dtype=base.dtype),
+                                  donate=donate)
         else:
             new = base.at[jnp.asarray(d.indices)].set(jnp.asarray(d.values, dtype=base.dtype))
         out[d.layer] = np.asarray(new).reshape(flat[d.layer].shape)
@@ -101,14 +107,16 @@ def shard_delta(packet: UpdatePacket, shard_ranges: Dict[str, Tuple[int, int]]) 
         start, stop = rng
         if d.chunks is not None:
             ce = d.chunk_elems
-            keep = [(i, c) for i, c in zip(d.indices, d.chunks)
+            keep = [(i, c, f) for i, c, f in zip(d.indices, d.chunks,
+                                                 d.chunk_flags())
                     if int(i) * ce < stop and (int(i) + 1) * ce > start]
             if not keep:
                 continue
             out.deltas.append(LayerDelta(
                 layer=d.layer, shape=d.shape, dtype=d.dtype,
-                indices=np.array([i for i, _ in keep], dtype=np.int64),
-                chunks=[c for _, c in keep], chunk_elems=ce))
+                indices=np.array([i for i, _, _ in keep], dtype=np.int64),
+                chunks=[c for _, c, _ in keep], chunk_elems=ce,
+                chunk_compressed=[f for _, _, f in keep]))
         else:
             sel = (d.indices >= start) & (d.indices < stop)
             if not sel.any():

@@ -11,6 +11,15 @@ Message flow (paper §3.1.2):
      license mask applied to the *shipped values* so unlicensed weights
      never leave the server (the paper's access-control-in-the-DB);
   3. device applies the sparse delta locally (Pallas ``delta_apply``).
+
+Chunk-granular fetch (staged weight sync): :meth:`LicenseServer.open_update`
+answers the same query as ``handle_update`` but returns an
+:class:`UpdateCursor` instead of the whole packet; the client then pulls
+bounded *parts* (``fetch_update(cursor, max_bytes)``) — row-range or
+chunk-page slices of the masked deltas — so an edge pod can interleave the
+transfer and apply with its serving loop instead of stalling on the full
+payload.  Bytes on the wire are identical either way and are logged once
+when the cursor drains.
 """
 from __future__ import annotations
 
@@ -20,7 +29,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import delta as delta_lib
-from repro.core.licensing import FULL_TIER, LicenseTier, mask_weight
+from repro.core.licensing import FULL_TIER, LicenseTier
 from repro.core.pytree_io import flatten_params
 from repro.core.weightstore import LayerDelta, UpdatePacket, WeightStore
 
@@ -33,6 +42,72 @@ class UpdateLog:
     tier: str
     bytes_sent: int
     entries: int
+
+
+@dataclass
+class UpdateCursor:
+    """One incremental update session: the raw packet plus a read position.
+
+    Produced by :meth:`LicenseServer.open_update`; consumed part-by-part
+    through :meth:`LicenseServer.fetch_update`.  A *part* is a
+    ``LayerDelta`` covering a slice of one layer's delta — a run of
+    (index, value) rows or a run of whole chunk pages — so applying every
+    fetched part in order reproduces ``handle_update``'s packet exactly.
+    ``deltas`` are UNMASKED: license masking is applied per part at fetch
+    time, so opening a session never pays the whole-packet masking pass
+    (the point of the chunk-granular protocol is bounded per-step work).
+    """
+
+    model: str
+    from_version: Optional[int]
+    to_version: int
+    tier: str
+    deltas: List[LayerDelta] = field(default_factory=list)
+    tier_obj: Any = field(default=None, repr=False)
+    _delta_i: int = 0            # next delta to slice from
+    _entry_off: int = 0          # entries already taken from deltas[_delta_i]
+    fetched_bytes: int = 0
+    fetched_parts: int = 0
+    _log: Any = field(default=None, repr=False)   # live UpdateLog entry
+
+    @property
+    def done(self) -> bool:
+        return self._delta_i >= len(self.deltas)
+
+    @property
+    def total_bytes(self) -> int:
+        """Pre-mask payload size (masking preserves rows-mode sizes
+        exactly; a masked-then-recompressed chunk page can differ by a
+        few bytes)."""
+        return int(sum(d.nbytes for d in self.deltas))
+
+    def _take(self, budget: int) -> LayerDelta:
+        """Slice the next part off the cursor: at least one row/page, at
+        most ``budget`` bytes (a single page may overshoot — the page is
+        the smallest unit of transfer in chunk mode)."""
+        d = self.deltas[self._delta_i]
+        j = self._entry_off
+        if d.chunks is not None:
+            flags = d.chunk_flags()
+            k, got = j, 0
+            while k < len(d.chunks) and (k == j or
+                                         got + len(d.chunks[k]) + 8 <= budget):
+                got += len(d.chunks[k]) + 8
+                k += 1
+            part = LayerDelta(layer=d.layer, shape=d.shape, dtype=d.dtype,
+                              indices=d.indices[j:k], chunks=d.chunks[j:k],
+                              chunk_elems=d.chunk_elems,
+                              chunk_compressed=flags[j:k])
+        else:
+            per = d.indices.itemsize + d.values.itemsize
+            k = j + max(1, min(budget // per, len(d.indices) - j))
+            part = LayerDelta(layer=d.layer, shape=d.shape, dtype=d.dtype,
+                              indices=d.indices[j:k], values=d.values[j:k])
+        self._entry_off = k
+        if k >= len(d.indices):
+            self._delta_i += 1
+            self._entry_off = 0
+        return part
 
 
 class LicenseServer:
@@ -81,14 +156,76 @@ class LicenseServer:
         ))
         return packet
 
+    def production_version(self, model: str) -> Optional[int]:
+        """Cheap poll: the current production version id (None if unset) —
+        lets an edge pod decide whether to open an update at all without
+        paying the delta query."""
+        return self.store.production_version(model, missing_ok=True)
+
+    def open_update(
+        self, model: str, client_version: Optional[int], license_name: str = "full"
+    ) -> UpdateCursor:
+        """Chunk-granular variant of :meth:`handle_update`: same query, same
+        masking, but the payload stays server-side and the client pulls
+        bounded parts via :meth:`fetch_update` — which is also where the
+        license masking runs, one part at a time, so neither endpoint ever
+        pays a whole-packet pass.  The session is logged immediately (an
+        abandoned sync must still appear in the audit trail); its live
+        entry accumulates bytes/entries as parts are fetched."""
+        tier = self.tier(model, license_name)
+        packet = self.store.delta_since(model, client_version)
+        entry = UpdateLog(model=model, from_version=client_version,
+                          to_version=packet.to_version, tier=license_name,
+                          bytes_sent=0, entries=0)
+        self.log.append(entry)
+        return UpdateCursor(model=model, from_version=client_version,
+                            to_version=packet.to_version, tier=license_name,
+                            deltas=packet.deltas, tier_obj=tier, _log=entry)
+
+    def fetch_update(self, cursor: UpdateCursor,
+                     max_bytes: int = 1 << 20) -> List[LayerDelta]:
+        """Pull the next parts off an open cursor: at least one part, at
+        most ~``max_bytes`` on the wire (one chunk page may overshoot —
+        pages are indivisible), masked per the session's tier as they are
+        sliced.  Returns ``[]`` once the cursor is drained; the session's
+        log entry ends up with the same bytes/entries a ``handle_update``
+        of the whole packet would record."""
+        parts: List[LayerDelta] = []
+        got = 0
+        while not cursor.done and (not parts or got < max_bytes):
+            raw = cursor._take(max_bytes - got)
+            part = _mask_packet(
+                UpdatePacket(model=cursor.model,
+                             from_version=cursor.from_version,
+                             to_version=cursor.to_version, deltas=[raw]),
+                cursor.tier_obj).deltas[0]
+            parts.append(part)
+            got += part.nbytes
+            cursor._log.entries += len(part.indices)
+        cursor.fetched_bytes += got
+        cursor.fetched_parts += len(parts)
+        cursor._log.bytes_sent = cursor.fetched_bytes
+        return parts
+
+
+def _mask_page(page: np.ndarray, ivs) -> np.ndarray:
+    """Interval-mask one decoded chunk page in its own dtype.
+
+    Pure-numpy twin of ``licensing.mask_weight``: kept entries pass
+    through bit-identically (no float round trip through another
+    precision), zeroed entries match the jnp semantics exactly."""
+    mag = np.abs(page.astype(np.float32, copy=False))
+    dead = np.zeros(page.shape, bool)
+    for lo, hi in ivs:
+        dead |= (mag >= lo) & (mag < hi)
+    return np.where(dead, np.zeros((), page.dtype), page)
+
 
 def _mask_packet(packet: UpdatePacket, tier: LicenseTier) -> UpdatePacket:
     """Apply license masks to the values being shipped (server-side access
     control: free-tier clients never receive masked weights)."""
     if not tier.masks:
         return packet
-    import jax.numpy as jnp
-
     from repro.core.compression import is_dynamics_param
 
     out = UpdatePacket(model=packet.model, from_version=packet.from_version,
@@ -97,26 +234,28 @@ def _mask_packet(packet: UpdatePacket, tier: LicenseTier) -> UpdatePacket:
         ivs = tier.intervals_for(d.layer)
         if not ivs or is_dynamics_param(d.layer) or len(d.shape) < 2 or d.chunks is not None:
             if d.chunks is not None and ivs and not is_dynamics_param(d.layer) and len(d.shape) >= 2:
-                # chunk mode: mask inside each page
-                masked_chunks = []
+                # chunk mode: mask inside each page, decoding with the
+                # delta's dtype and trusting its explicit compression
+                # flags — sniffing zlib by trial-decompress mangles raw
+                # pages that happen to parse, and decoding non-f32 pages
+                # as f32 corrupts every masked value
                 import zlib
-                for payload in d.chunks:
-                    try:
-                        raw = zlib.decompress(payload)
-                        compressed = True
-                    except zlib.error:
-                        raw, compressed = payload, False
-                    page = np.frombuffer(raw, dtype=np.float32).copy()
-                    page = np.asarray(mask_weight(jnp.asarray(page), ivs))
-                    blob = page.tobytes()
-                    masked_chunks.append(zlib.compress(blob, 1) if compressed else blob)
+                masked_chunks = []
+                flags = d.chunk_flags()
+                for (_, page), compressed in zip(d.iter_pages(), flags):
+                    blob = _mask_page(page, ivs).tobytes()
+                    masked_chunks.append(zlib.compress(blob, 1)
+                                         if compressed else blob)
                 out.deltas.append(LayerDelta(layer=d.layer, shape=d.shape, dtype=d.dtype,
                                              indices=d.indices, chunks=masked_chunks,
-                                             chunk_elems=d.chunk_elems))
+                                             chunk_elems=d.chunk_elems,
+                                             chunk_compressed=flags))
             else:
                 out.deltas.append(d)
             continue
-        vals = np.asarray(mask_weight(jnp.asarray(d.values), ivs))
+        # dtype-preserving (kept values pass through bit-identically; a
+        # jnp round trip would downcast f64 rows to f32 with x64 off)
+        vals = _mask_page(np.asarray(d.values), ivs)
         out.deltas.append(LayerDelta(layer=d.layer, shape=d.shape, dtype=d.dtype,
                                      indices=d.indices, values=vals))
     return out

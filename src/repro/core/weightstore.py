@@ -97,7 +97,15 @@ CREATE TABLE IF NOT EXISTS accuracy (
 
 @dataclass
 class LayerDelta:
-    """Sparse update for one layer: values at flat indices (or whole chunks)."""
+    """Sparse update for one layer: values at flat indices (or whole chunks).
+
+    Chunk pages are encoded in the layer's ``dtype`` (decode with
+    ``np.frombuffer(raw, dtype=d.dtype)``), and whether each page payload
+    is zlib-compressed is carried *explicitly* in ``chunk_compressed`` —
+    one flag per entry of ``chunks``.  Receivers must never sniff
+    compression by attempting ``zlib.decompress``: raw pages can parse as
+    valid zlib streams by coincidence and would be silently mangled.
+    """
 
     layer: str
     shape: Tuple[int, ...]
@@ -106,12 +114,35 @@ class LayerDelta:
     values: Optional[np.ndarray] = None   # rows mode: scalar per index
     chunks: Optional[List[bytes]] = None  # chunks mode: raw page payloads
     chunk_elems: int = 0
+    chunk_compressed: Optional[List[bool]] = None  # per-chunk zlib flag
 
     @property
     def nbytes(self) -> int:
         if self.chunks is not None:
             return int(sum(len(c) for c in self.chunks) + self.indices.nbytes)
         return int(self.indices.nbytes + self.values.nbytes)
+
+    def chunk_flags(self) -> List[bool]:
+        """Per-chunk compression flags (all-False when never set)."""
+        if self.chunks is None:
+            return []
+        if self.chunk_compressed is None:
+            return [False] * len(self.chunks)
+        return list(self.chunk_compressed)
+
+    def iter_pages(self):
+        """Yield ``(chunk_index, page)`` per chunk, decoded in this
+        delta's dtype under its explicit compression flags — the ONE
+        place the wire-decode rule lives (consumers must never sniff
+        zlib by trial-decompress)."""
+        if self.chunks is None:
+            return
+        import zlib
+
+        for ci, payload, comp in zip(self.indices, self.chunks,
+                                     self.chunk_flags()):
+            raw = zlib.decompress(payload) if comp else payload
+            yield int(ci), np.frombuffer(raw, dtype=self.dtype)
 
 
 @dataclass
@@ -135,6 +166,10 @@ class UpdatePacket:
 class WeightStore:
     """sqlite3-backed versioned weight store (paper Fig. 4)."""
 
+    # bumped to 2 when chunk pages switched from always-f32 to the
+    # layer's registered dtype; see _check_chunk_encoding
+    _FORMAT_VERSION = 2
+
     def __init__(
         self,
         path: str = ":memory:",
@@ -149,6 +184,33 @@ class WeightStore:
         self.row_limit = int(row_limit)
         self.chunk_elems = int(chunk_elems)
         self.compress_chunks = compress_chunks
+        self._check_chunk_encoding()
+
+    def _check_chunk_encoding(self) -> None:
+        """Refuse to silently misread a pre-format-2 store.
+
+        Format 1 encoded every chunk page as float32 regardless of the
+        layer's dtype; format 2 encodes pages in the layer's own dtype.
+        The two agree whenever every chunk-mode layer is float32 (the
+        overwhelmingly common case), so such stores are stamped forward;
+        a legacy store holding non-f32 chunk pages would be decoded as
+        garbage and must be re-committed instead."""
+        ver, = self.conn.execute("PRAGMA user_version").fetchone()
+        if ver >= self._FORMAT_VERSION:
+            return
+        row = self.conn.execute(
+            "SELECT l.name, l.dtype FROM layer l WHERE l.storage='chunks'"
+            " AND l.dtype <> 'float32' AND EXISTS"
+            " (SELECT 1 FROM weight_chunk c WHERE c.layer_fk=l.id) LIMIT 1"
+        ).fetchone()
+        if row is not None:
+            raise RuntimeError(
+                f"weight store {self.path!r} was written by format 1 "
+                f"(chunk pages always float32) but layer {row[0]!r} is "
+                f"registered as {row[1]!r}; re-commit the model with this "
+                f"version to migrate — decoding would corrupt it")
+        self.conn.execute(f"PRAGMA user_version={self._FORMAT_VERSION}")
+        self.conn.commit()
 
     # ------------------------------------------------------------------ model
     def register_model(self, name: str, arch: str = "generic") -> int:
@@ -220,12 +282,16 @@ class WeightStore:
         version_id = cur.lastrowid
 
         for name, arr in flat.items():
-            layer_id, _, _, storage = self._layer_id(model_id, name)
-            flat_arr = np.asarray(arr, dtype=np.float32).reshape(-1)
+            layer_id, _, dtype, storage = self._layer_id(model_id, name)
             old = parent_flat.get(name)
             if storage == "rows":
+                flat_arr = np.asarray(arr, dtype=np.float32).reshape(-1)
                 self._commit_rows(layer_id, version_id, flat_arr, old, store_zeros, now)
             else:
+                # chunk pages are encoded in the layer's registered dtype so
+                # every receiver can decode with LayerDelta.dtype (non-f32
+                # layers used to be silently re-encoded as f32)
+                flat_arr = np.asarray(arr, dtype=dtype).reshape(-1)
                 self._commit_chunks(layer_id, version_id, flat_arr, old, now)
 
         if set_production:
@@ -364,7 +430,11 @@ class WeightStore:
         for layer_id, name, shape, dtype, storage in layers:
             shape = tuple(json.loads(shape))
             size = int(np.prod(shape)) if shape else 1
-            buf = np.zeros(size, dtype=np.float32)
+            # chunk pages are stored bit-exact in the layer's dtype —
+            # accumulating them through f32 would round f64 layers; rows
+            # values are sqlite REALs, f32 staging is the seed behavior
+            buf = np.zeros(size,
+                           dtype=dtype if storage == "chunks" else np.float32)
             touched = False
             for v in chain:
                 if storage == "rows":
@@ -388,7 +458,7 @@ class WeightStore:
                         ce = self.chunk_elems
                         for ci, payload in rows:
                             raw = zlib.decompress(payload) if self.compress_chunks else payload
-                            page = np.frombuffer(raw, dtype=np.float32)
+                            page = np.frombuffer(raw, dtype=dtype)
                             buf[ci * ce : ci * ce + page.size] = page
             if touched or True:  # layers with all-zero weights are legal (fully pruned)
                 out[name] = buf.reshape(shape).astype(dtype, copy=False)
@@ -424,7 +494,9 @@ class WeightStore:
         if full:
             flat = self._reconstruct(model_id, target)
             for layer_id, name, shape, dtype, storage in layers:
-                arr = flat[name].reshape(-1).astype(np.float32)
+                # ship in the layer's own dtype: a full pull of a
+                # chunk-mode f64/f16 layer must not round through f32
+                arr = flat[name].reshape(-1)
                 nz = np.nonzero(arr)[0]
                 packet.deltas.append(
                     LayerDelta(
@@ -469,6 +541,7 @@ class WeightStore:
                     LayerDelta(
                         layer=name, shape=shape_t, dtype=dtype, indices=idx,
                         chunks=[last_c[int(i)] for i in idx], chunk_elems=self.chunk_elems,
+                        chunk_compressed=[self.compress_chunks] * len(idx),
                     )
                 )
         return packet

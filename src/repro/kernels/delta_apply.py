@@ -39,20 +39,7 @@ def _kernel(buf_ref, idx_ref, val_ref, out_ref, *, block: int):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def delta_apply(
-    buf: jnp.ndarray,
-    indices: jnp.ndarray,
-    values: jnp.ndarray,
-    *,
-    block: int = 4096,
-    interpret: bool = False,
-) -> jnp.ndarray:
-    """Set buf[indices] = values (indices unique; padding idx >= buf.size).
-
-    buf is flat (N,) with N % block == 0 (``ops.delta_apply`` pads); indices
-    int32/int64 (n,), values (n,) castable to buf.dtype.
-    """
+def _call(buf, indices, values, *, block, interpret, alias):
     (n,) = buf.shape
     assert n % block == 0, (n, block)
     n_delta = indices.shape[0]
@@ -67,5 +54,43 @@ def delta_apply(
         ],
         out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, n), buf.dtype),
+        input_output_aliases={0: 0} if alias else {},
         interpret=interpret,
     )(buf.reshape(1, n), indices.reshape(1, -1), values.reshape(1, -1)).reshape(n)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def delta_apply(
+    buf: jnp.ndarray,
+    indices: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    block: int = 4096,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Set buf[indices] = values (indices unique; padding idx >= buf.size).
+
+    buf is flat (N,) with N % block == 0 (``ops.delta_apply`` pads); indices
+    int32/int64 (n,), values (n,) castable to buf.dtype.
+    """
+    return _call(buf, indices, values, block=block, interpret=interpret,
+                 alias=False)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"),
+                   donate_argnums=(0,))
+def delta_apply_inplace(
+    buf: jnp.ndarray,
+    indices: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    block: int = 4096,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """:func:`delta_apply` that consumes ``buf``: the parameter buffer is
+    donated and the scatter lands in place (``input_output_aliases``), so
+    a staged weight update writes O(delta) bytes instead of cloning the
+    whole layer per applied part.  The caller's ``buf`` array is invalid
+    afterwards; backends without donation fall back to a copy."""
+    return _call(buf, indices, values, block=block, interpret=interpret,
+                 alias=True)

@@ -115,20 +115,34 @@ def delta_apply(
     *,
     block: int = 4096,
     interpret: Optional[bool] = None,
+    donate: bool = False,
 ) -> jnp.ndarray:
-    """buf.at[indices].set(values) via the Pallas scatter kernel."""
+    """buf.at[indices].set(values) via the Pallas scatter kernel.
+
+    ``donate=True`` hands ``buf`` to the kernel for in-place update
+    (``delta_apply_inplace``): the caller's array is consumed, and the
+    scatter writes O(delta) bytes instead of cloning the buffer — the
+    contract staged weight sync relies on when applying many bounded
+    parts against one staging copy."""
     interpret = _on_cpu() if interpret is None else interpret
     (n,) = buf.shape
     if n < block or indices.shape[0] == 0:
         return ref.delta_apply(buf, indices, values)
     # interpret mode executes the kernel body in Python per grid cell —
     # O(tiles × n_delta) work is fine compiled on TPU but pathological
-    # interpreted; large updates take the (identical-semantics) ref path
-    if interpret and (n // block) * indices.shape[0] > 1 << 22:
+    # interpreted; large updates take the (identical-semantics) ref path.
+    # (The old 1<<22 threshold let a full-layer update burn ~7s *per
+    # layer* interpreted — a whole-model pull through apply_packet spent
+    # minutes here on CPU.)
+    if interpret and (n // block) * indices.shape[0] > 1 << 18:
         return ref.delta_apply(buf, indices, values)
     pad = (-n) % block
     bufp = jnp.pad(buf, (0, pad)) if pad else buf
-    out = _delta.delta_apply(
+    # the padded copy is fresh, so aliasing it is always safe; unpadded,
+    # in-place needs the caller's explicit donation
+    kernel = (_delta.delta_apply_inplace if (donate or pad)
+              else _delta.delta_apply)
+    out = kernel(
         bufp, indices.astype(jnp.int32), values.astype(buf.dtype),
         block=block, interpret=interpret,
     )

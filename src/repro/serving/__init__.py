@@ -5,10 +5,12 @@
 streams tier-tagged requests through (tier, version)-keyed masked
 weight views.  Host-side scheduling primitives live in scheduler.py;
 the block-paged KV pool (``BlockAllocator``/``PagedCachePool``) the
-gateway serves from by default lives in paging.py, and the
+gateway serves from by default lives in paging.py, the
 (tier, version)-scoped shared-prefix radix cache (``PrefixCache``)
 that lets same-prefix prompts skip redundant prefill lives in
-prefix.py.
+prefix.py, and the staged weight-sync state machine (``UpdateStager``)
+that flips license-server version bumps in without stalling a decode
+step lives in updates.py.
 """
 from repro.serving.engine import (Request, ServingEngine, prefill_step,
                                   prefill_suffix_step, sample, sample_lane,
@@ -18,11 +20,12 @@ from repro.serving.paging import BlockAllocator, PagedCachePool
 from repro.serving.prefix import PrefixCache
 from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
                                      ScheduledAction, Scheduler, TierViewCache)
+from repro.serving.updates import UpdateStager
 
 __all__ = [
     "Request", "ServingEngine", "prefill_step", "prefill_suffix_step",
     "sample", "sample_lane", "serve_step", "LicensedGateway",
     "GatewayRequest", "RequestState", "ScheduledAction", "Scheduler",
     "CachePool", "PagedCachePool", "BlockAllocator", "PrefixCache",
-    "TierViewCache",
+    "TierViewCache", "UpdateStager",
 ]

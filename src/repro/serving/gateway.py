@@ -75,8 +75,11 @@ Licensing integration
   long decode streams.
 * protocol: :meth:`LicensedGateway.from_server` boots the gateway from a
   ``LicenseServer`` via the §3.1.2 delta protocol (an internal
-  ``EdgeClient`` holds the raw weights); :meth:`sync` pulls newer
-  production weights and bumps the gateway's weight version.  Admission
+  ``EdgeClient`` holds the raw weights); :meth:`begin_sync` starts a
+  *staged* pull (``serving/updates.py``) whose bounded
+  fetch/apply/requantize/prewarm steps ride along with scheduler
+  iterations and whose weights+tiers flip is one atomic step —
+  :meth:`sync` is the blocking form of the same machinery.  Admission
   validates the tier (locally or against the server) and pins the
   request to the current version, so in-flight requests are never
   re-masked mid-generation; stale versions and their views are dropped
@@ -411,6 +414,11 @@ class LicensedGateway:
         # tier updates deferred while their requests are in flight;
         # value None = pending revocation
         self._pending_tiers: Dict[str, Optional[LicenseTier]] = {}
+        # staged weight sync (serving/updates.py): the active stager (one
+        # bounded step interleaved per scheduler step) and the version it
+        # is pre-registering weights/views under before the flip
+        self._stager = None
+        self._staging_version: Optional[int] = None
 
         self._next_rid = 0
         # bounded: a long-lived gateway must not grow host memory with
@@ -491,8 +499,10 @@ class LicensedGateway:
         gateway) or a revoked one must not keep serving its old masks —
         but in-flight requests are never re-masked mid-generation, so
         the change is *deferred* until the tier's current requests
-        drain.  While a revocation is pending, new admissions to the
-        tier are rejected."""
+        drain.  While a revocation OR redefinition is pending, new
+        admissions to the tier are rejected: nothing new may be served
+        under the superseded masks, and with no new joiners the tier
+        drains (and the change lands) in bounded time."""
         for name in list(self._server_tiers):
             try:
                 fresh = self._server.tier(self.model, name)
@@ -584,8 +594,17 @@ class LicensedGateway:
         self._next_rid += 1
         req.submit_t = time.perf_counter()
         try:
-            if self._pending_tiers.get(license, "") is None:
-                raise KeyError(f"license tier {license!r} is being revoked")
+            if license in self._pending_tiers:
+                # a pending revocation OR redefinition refuses admissions:
+                # serving new requests under the superseded masks while
+                # in-flight ones drain would let an observer see (old
+                # tier, new version) — the mixed state the atomic flip
+                # exists to rule out.  The tier drains in bounded time
+                # precisely because nothing new joins it.
+                verb = ("revoked" if self._pending_tiers[license] is None
+                        else "redefined; retry once in-flight requests "
+                             "drain")
+                raise KeyError(f"license tier {license!r} is being {verb}")
             self._resolve_tier(license)
         except KeyError as e:
             req.state = RequestState.REJECTED
@@ -617,14 +636,20 @@ class LicensedGateway:
 
     # ------------------------------------------------------------- scheduling
     def step(self) -> Optional[ScheduledAction]:
-        """Run ONE scheduler iteration (one prefill or decode micro-batch)."""
+        """Run ONE scheduler iteration (one prefill or decode micro-batch),
+        plus — when a staged weight sync is active — ONE bounded stager
+        step, so a version bump's work rides along with serving instead of
+        ever stalling it."""
         act = self.scheduler.next_action()
+        if act is not None:
+            if act.kind == "prefill":
+                self._run_prefill(act)
+            else:
+                self._run_decode(act)
+        if self._stager is not None and self._stager.active:
+            self._stager.step()
         if act is None:
             return None
-        if act.kind == "prefill":
-            self._run_prefill(act)
-        else:
-            self._run_decode(act)
         # a decode whose whole batch was preempted executed nothing —
         # keep the trace invariant that every entry covers >= 1 request
         if act.requests:
@@ -633,12 +658,14 @@ class LicensedGateway:
         return act
 
     def run(self, max_steps: int = 1_000_000) -> List[GatewayRequest]:
-        """Drain the queue; returns requests completed during this call."""
+        """Drain the queue; returns requests completed during this call.
+        An active staged sync keeps stepping after the queue empties, so
+        returning from ``run`` implies any begun version flip landed."""
         drained: List[GatewayRequest] = []
         self._drain_sink = drained
         try:
             for _ in range(max_steps):
-                if self.step() is None:
+                if self.step() is None and not self.sync_active:
                     break
         finally:
             self._drain_sink = None
@@ -1057,6 +1084,10 @@ class LicensedGateway:
 
     def _gc_versions(self) -> None:
         live = self.scheduler.pinned_versions() | {self.version}
+        if self._staging_version is not None:
+            # a staged sync pre-registers the incoming version (and may
+            # have prewarmed its views) before any request pins it
+            live.add(self._staging_version)
         for v in [v for v in self._weights if v not in live]:
             del self._weights[v]
             self.views.invalidate(version=v)
@@ -1084,21 +1115,90 @@ class LicensedGateway:
         gw._client = client
         return gw
 
-    def sync(self, server: Any = None) -> bool:
-        """Pull newer production weights (and tier redefinitions) from the
-        license server.
+    def _register_staging(self, version: int, params: Any) -> None:
+        """Pre-register a staged version's serving params so its views can
+        be prewarmed before the flip.  ``_gc_versions`` keeps the staging
+        version alive even though nothing pins it yet."""
+        if version in self._weights:
+            # overwriting a live version's weights: views (and cached
+            # prefix activations) built from the old bytes must not
+            # survive into the prewarm
+            self.views.invalidate(version=version)
+            if self.prefix is not None:
+                self.prefix.drop_scope(version=version)
+        self._staging_version = version
+        self._weights[version] = params
 
-        Returns True if a new weight version was installed (and pinned for
-        all subsequent admissions)."""
+    def _install_staged(self, version: int) -> None:
+        """The stager's atomic flip: bump the served version AND apply tier
+        redefinitions published alongside it, in one step with no
+        scheduler iteration in between.  Prewarmed views survive (no
+        invalidation here); in-flight requests stay pinned to the version
+        they were admitted under."""
+        assert version == self._staging_version, (version,
+                                                  self._staging_version)
+        if version < self.version:
+            raise ValueError(f"version {version} is older than the current "
+                             f"version {self.version}")
+        self.version = version
+        self._staging_version = None
+        if self._server is not None:
+            # tier redefinitions land with the bump — an admission never
+            # sees (new tiers, old version) or (old tiers, new version)
+            self._refresh_server_tiers()
+        self._gc_versions()
+
+    def begin_sync(self, server: Any = None, **stager_kw) -> bool:
+        """Start a *staged* (non-blocking) sync against the license server.
+
+        Returns True when a newer production version exists and a staging
+        session began — subsequent :meth:`step` calls each carry one
+        bounded unit of fetch/apply/requantize/prewarm work and the new
+        version flips in atomically at a step boundary.  Returns False
+        when the client is already current (tier-only redefinitions are
+        applied immediately — there is no flip to couple them to).  A
+        sync already in progress is left to finish (returns True)."""
         server = server or self._server
         if server is None or self._client is None:
             raise RuntimeError("gateway was not booted with from_server()")
-        self._refresh_server_tiers()
-        before = self._client.version
-        self._client.request_update(server)
-        if self._client.version == before:
-            return False
-        self.update_weights(self._client.params, version=self._client.version)
+        if self._stager is not None and self._stager.active:
+            return True
+        from repro.serving.updates import UpdateStager
+
+        stager = UpdateStager(self, server, **stager_kw)
+        if stager.begin():
+            self._stager = stager
+            return True
+        return False
+
+    def sync_step(self) -> Optional[str]:
+        """Advance an active staged sync by one bounded unit (for callers
+        driving the stager without scheduler traffic); returns the phase
+        that executed, or None when no sync is active."""
+        if self._stager is None or not self._stager.active:
+            return None
+        return self._stager.step()
+
+    @property
+    def sync_active(self) -> bool:
+        return self._stager is not None and self._stager.active
+
+    def sync(self, server: Any = None, **stager_kw) -> bool:
+        """Pull newer production weights (and tier redefinitions) from the
+        license server — blocking, but through the same staged machinery
+        as :meth:`begin_sync`, so the weights + tier flip is atomic either
+        way.
+
+        Returns True if a new weight version was installed (and pinned for
+        all subsequent admissions)."""
+        flipped = False
+        while self.sync_active:           # finish a staged sync first
+            self._stager.step()
+            flipped = True
+        if not self.begin_sync(server, **stager_kw):
+            return flipped
+        while self.sync_active:
+            self._stager.step()
         return True
 
     # ---------------------------------------------------------------- metrics
@@ -1111,6 +1211,9 @@ class LicensedGateway:
         out["cache_pool"] = {"paged": self.paged, **self.pool.stats()}
         out["decode_path"] = {"kernel_resident": self.kernel_decode,
                               "pallas": self.decode_pallas}
+        out["staged_update"] = ({"active": False} if self._stager is None
+                                else {"active": self._stager.active,
+                                      **self._stager.stats()})
         out["admission_grouping"] = {
             "enabled": self.prefix is not None,
             # prefill batches served per shared uncached-suffix width: a

@@ -42,24 +42,56 @@ def _eligible(name: str, leaf) -> bool:
     return "tail/" in name and leaf.ndim >= 2
 
 
-def quantize_serving_params(params: Any) -> Any:
-    """Same-structure tree; eligible weights become {"codes","scale"} dicts.
+def _quantize_leaf(w) -> Dict[str, jnp.ndarray]:
+    """Per-output-channel symmetric int8 of one eligible weight: scale
+    reduces over the second-to-last dim (the contraction dim of every
+    block matmul)."""
+    w = jnp.asarray(w).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    codes = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return {"codes": codes, "scale": scale}
 
-    Per-output-channel symmetric int8: scale reduces over the second-to-last
-    dim (the contraction dim of every block matmul)."""
+
+def quantize_serving_params(params: Any) -> Any:
+    """Same-structure tree; eligible weights become {"codes","scale"} dicts."""
     from repro.core.pytree_io import _path_str
 
     def q(path, leaf):
         name = _path_str(path)
         if not _eligible(name, leaf):
             return leaf
-        w = leaf.astype(jnp.float32)
-        amax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
-        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-        codes = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
-        return {"codes": codes, "scale": scale}
+        return _quantize_leaf(leaf)
 
     return jax.tree_util.tree_map_with_path(q, params)
+
+
+def requantize_layers(qparams: Any, new_flat: Dict[str, Any],
+                      touched: Sequence[str]) -> Any:
+    """Incremental requantize: rebuild the int8 store with ONLY ``touched``
+    layers re-derived from ``new_flat`` (flat name -> new float array, as
+    produced by ``core.pytree_io.flatten_params``); every other leaf is
+    reused by reference from ``qparams``.
+
+    This is the staged-update path's bounded alternative to
+    ``quantize_serving_params`` over the whole tree: a delta touching k
+    layers costs O(k) quantizations, and the stager can thread a batch of
+    layer names per scheduler step.  Leaf eligibility is decided by what
+    the *existing* store quantized (same names, same shapes across
+    versions), so the rebuilt tree always matches the full requantize
+    bit-for-bit."""
+    from repro.core.pytree_io import _path_str
+
+    want = set(touched)
+
+    def q(path, leaf):
+        name = _path_str(path)
+        if name not in want:
+            return leaf
+        new = new_flat[name]
+        return _quantize_leaf(new) if is_qleaf(leaf) else new
+
+    return jax.tree_util.tree_map_with_path(q, qparams, is_leaf=is_qleaf)
 
 
 def is_qleaf(leaf) -> bool:

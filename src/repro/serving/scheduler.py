@@ -349,6 +349,17 @@ class Scheduler:
         """Weight versions still referenced by queued or running requests."""
         return {r.version for r in self.waiting} | {r.version for r in self.running}
 
+    def hot_tiers(self) -> List[str]:
+        """License tiers with queued or running requests, busiest first.
+
+        This is the occupancy signal the staged-update prewarm uses: tiers
+        serving traffic *now* are the ones whose first admission at a new
+        weight version would otherwise pay a cold view materialization."""
+        counts: Dict[str, int] = {}
+        for r in list(self.running) + list(self.waiting):
+            counts[r.license] = counts.get(r.license, 0) + 1
+        return sorted(counts, key=lambda t: (-counts[t], t))
+
     # --------------------------------------------------------- wait metrics
     def oldest_wait_s(self, now: Optional[float] = None) -> float:
         """Age of the oldest queued request (0.0 with an empty queue)."""

@@ -1,0 +1,357 @@
+"""Staged weight sync: version bumps that never stall a decode step.
+
+``LicensedGateway.sync()`` used to pull the whole §3.1.2 update packet
+and run ``update_weights()`` synchronously on the serving thread — the
+full delta-apply, an optional whole-model requantize, and the view
+invalidation all landed between two scheduler steps, and the first
+admission at the new version then paid a cold view materialization on
+top.  :class:`UpdateStager` splits that work into small, *bounded* steps
+the gateway interleaves with its scheduler iterations:
+
+```
+poll ──▶ STAGE ──▶ REQUANT ──▶ PREWARM ──▶ FLIP
+         (fetch one ≤max_step_bytes part      (int8 path: re-quantize
+          from the server's UpdateCursor       ≤requant_layers_per_step
+          and delta-apply it into the          TOUCHED layers per step,
+          staging copy — kernels/delta_apply   reusing every untouched
+          scatters in place)                   leaf of the live store)
+                               (materialize the TierViewCache entry of
+                                one currently-hot tier per step at the
+                                NEW version, before anything serves it)
+                                              (one atomic step: bump the
+                                               gateway/client version AND
+                                               apply tier redefinitions
+                                               published alongside it)
+```
+
+Invariants the stager preserves:
+
+* **Serving state is untouched until the flip.**  The staging params are
+  a private copy (``apply_packet`` is copy-on-apply; the in-place kernel
+  consumes only staging buffers); in-flight requests stay pinned to
+  their admitted version throughout and produce bit-identical tokens to
+  an update-free run.
+* **Bounded work per step.**  A STAGE step transfers + applies at most
+  ``max_step_bytes`` of delta (one indivisible chunk page may
+  overshoot).  The layer being patched is held RESIDENT on device
+  across its parts — uploaded once when its first part arrives,
+  scattered into in place (``delta_apply`` donation), downloaded once
+  when the cursor moves past it — so a step's total traffic is the
+  delta bytes plus at most the layer-boundary transfers, never
+  2×layer-bytes per part.  A REQUANT step re-quantizes at most
+  ``requant_layers_per_step`` layers; a PREWARM step builds one tier
+  view.  No step ever performs the full delta-apply or a whole-model
+  requantize (the quantized fallback to a full requantize exists only
+  for a gateway whose version diverged from its edge client's —
+  impossible through the ``sync`` API).  Server-side, the masking of
+  shipped values is equally per-part (``fetch_update``); only the §4.2
+  delta query itself runs at ``begin`` — and the begin step is timed
+  like any other scheduler step in the update benchmark.
+* **Atomic flip.**  Tier redefinitions published together with the
+  version bump go live in the same stager step that installs the new
+  weights — an admission between any two scheduler steps sees either
+  (old tiers, old version) or (new tiers, new version), never a mix.
+  A redefined tier still serving in-flight requests at the flip defers
+  (they are never re-masked mid-generation) and refuses NEW admissions
+  until it drains — like a pending revocation — so the deferred window
+  admits nothing under (old masks, new version).  (Tier-only changes,
+  with no version bump, still apply immediately at ``begin`` — there is
+  no flip to couple them to.)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Set
+
+import numpy as np
+
+from repro.core.pytree_io import flatten_params, unflatten_like
+
+
+@functools.cache
+def _page_update():
+    """Jitted, buffer-donating contiguous page write: the staging buffer
+    is consumed and the page lands in place on backends with donation
+    support (elsewhere it degrades to one device-side copy per page —
+    still never a host round trip).  ``start`` is a traced scalar, so one
+    compilation serves every page offset of a (layer, page) shape pair."""
+    import jax
+
+    return jax.jit(
+        lambda buf, page, start: jax.lax.dynamic_update_slice(
+            buf, page, (start,)),
+        donate_argnums=(0,))
+
+
+class UpdateStager:
+    """Incremental ``sync()``: fetch → stage → requantize → prewarm → flip.
+
+    One stager serves one update session; the gateway constructs it in
+    :meth:`LicensedGateway.begin_sync` and advances it one :meth:`step`
+    per scheduler iteration (or in a tight loop for the blocking
+    ``sync()``).  ``stats()`` exports the per-step accounting the update
+    benchmark asserts its bounds on.
+    """
+
+    def __init__(self, gateway: Any, server: Any, *,
+                 max_step_bytes: int = 256 << 10,
+                 requant_layers_per_step: int = 2):
+        self.gw = gateway
+        self.server = server
+        self.max_step_bytes = int(max_step_bytes)
+        self.requant_layers_per_step = int(requant_layers_per_step)
+        self.phase = "idle"
+        self.to_version: Optional[int] = None
+        self._cursor = None
+        self._staged: Any = None          # staging copy of the raw params
+        self._staged_q: Any = None        # staging int8 store (quantized path)
+        self._touched: Set[str] = set()   # layer names the delta touched
+        self._requant_queue: List[str] = []
+        self._prewarm_queue: List[str] = []
+        self.stats_: Dict[str, Any] = {
+            "steps": 0, "parts_applied": 0, "bytes_applied": 0,
+            "max_step_bytes_applied": 0, "layers_requantized": 0,
+            "views_prewarmed": 0, "flips": 0,
+        }
+
+    # ------------------------------------------------------------------ state
+    @property
+    def active(self) -> bool:
+        return self.phase not in ("idle", "done", "failed")
+
+    def stats(self) -> Dict[str, Any]:
+        out = dict(self.stats_)
+        out["phase"] = self.phase
+        out["to_version"] = self.to_version
+        out["layers_touched"] = len(self._touched)
+        out["max_step_bytes_bound"] = self.max_step_bytes
+        return out
+
+    # ------------------------------------------------------------------ begin
+    def begin(self) -> bool:
+        """Poll the server.  Returns True when a staged update session
+        started (a newer production version exists); False when the
+        client is current — in which case tier-only redefinitions are
+        applied immediately, since there is no version flip to join."""
+        gw, client = self.gw, self.gw._client
+        # cheap poll first: a no-op sync must not pay the §4.2 delta
+        # query or leave an empty session in the server's audit log
+        if self.server.production_version(gw.model) == client.version:
+            gw._refresh_server_tiers()
+            self.phase = "done"
+            return False
+        cursor = self.server.open_update(gw.model, client.version,
+                                         client.license_name)
+        if cursor.to_version == client.version:   # raced: moved back to us
+            gw._refresh_server_tiers()
+            self.phase = "done"
+            return False
+        if cursor.to_version < gw.version:
+            raise ValueError(
+                f"server production version {cursor.to_version} is older "
+                f"than the gateway's current version {gw.version}")
+        self._cursor = cursor
+        self.to_version = cursor.to_version
+        # flat staging view: untouched layers stay the client's own (np)
+        # arrays by reference; a touched layer is uploaded once, patched
+        # in place on device part-by-part, and downloaded once when the
+        # cursor moves past it (_finalize_layer)
+        self._flat = dict(flatten_params(client.params))
+        self._pending_layer: Optional[str] = None
+        self._pending_buf = None
+        self._staged = None               # assembled when the cursor drains
+        self._touched = set()
+        # incremental requant reuses the live int8 store's untouched
+        # leaves; that store must correspond to the client's version
+        # (always true through the sync API — update_weights() bypassing
+        # the client is the only way to diverge, and then we requantize
+        # everything in one fallback step)
+        self._requant_base = (gw._weights.get(gw.version)
+                              if gw.quantized and gw.version == client.version
+                              else None)
+        self.phase = "stage"
+        return True
+
+    # ------------------------------------------------------------------- step
+    def step(self) -> Optional[str]:
+        """Run ONE bounded unit of staging work; returns the phase that
+        executed (None when the stager is idle/done).
+
+        A step that raises ABORTS the session first (staging state torn
+        down, the pre-registered version and any prewarmed views dropped,
+        ``active`` becomes False) and then re-raises: the gateway keeps
+        serving on its current version and a later ``begin_sync`` opens a
+        fresh cursor from scratch, so a failed stage can neither wedge
+        the serving loop nor flip a partially-applied update in."""
+        if not self.active:
+            return None
+        phase = self.phase
+        self.stats_["steps"] += 1
+        try:
+            if phase == "stage":
+                self._step_stage()
+            elif phase == "requant":
+                self._step_requant()
+            elif phase == "prewarm":
+                self._step_prewarm()
+            elif phase == "flip":
+                self._flip()
+        except BaseException:
+            self.abort()
+            raise
+        return phase
+
+    def abort(self) -> None:
+        """Tear down an in-progress session (no-op once done/failed).
+        Everything staged is private until the flip, so aborting is just
+        dropping it — plus unregistering the pre-registered version if
+        prewarm had begun (only when the flip has not already happened:
+        a failure *inside* the flip after the version bump must not
+        yank the now-live weights)."""
+        if not self.active:
+            return
+        gw = self.gw
+        if self.to_version is not None \
+                and gw._staging_version == self.to_version:
+            gw._weights.pop(self.to_version, None)
+            gw.views.invalidate(version=self.to_version)
+            if gw.prefix is not None:
+                gw.prefix.drop_scope(version=self.to_version)
+            gw._staging_version = None
+        self._cursor = None
+        self._staged = self._staged_q = None
+        self._pending_layer = None
+        self._pending_buf = None
+        self.phase = "failed"
+
+    def _apply_part(self, part) -> None:
+        """Apply one fetched part to the resident staging buffer of its
+        layer: sparse (index, value) rows go through the in-place
+        ``delta_apply`` scatter kernel; a chunk page is a *contiguous*
+        run, so it is a donated ``dynamic_update_slice`` — no scatter
+        needed (the scatter-as-compare kernel is built for sparse
+        deltas; page-dense updates would pay O(tiles × page) compares)."""
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        if part.layer not in self._flat:
+            raise KeyError(f"delta for unknown layer {part.layer!r}")
+        if self._pending_layer is not None and self._pending_layer != part.layer:
+            self._finalize_layer()
+        if self._pending_layer is None:
+            self._pending_layer = part.layer
+            self._pending_buf = jnp.asarray(self._flat[part.layer]).reshape(-1)
+        buf = self._pending_buf
+        if part.chunks is not None:
+            ce = part.chunk_elems
+            for ci, page in part.iter_pages():
+                buf = _page_update()(buf,
+                                     jnp.asarray(page).astype(buf.dtype),
+                                     np.int32(ci * ce))
+        elif len(part.indices):
+            buf = ops.delta_apply(buf, jnp.asarray(part.indices),
+                                  jnp.asarray(part.values).astype(buf.dtype),
+                                  donate=True)
+        self._pending_buf = buf
+
+    def _finalize_layer(self) -> None:
+        name = self._pending_layer
+        self._flat[name] = np.asarray(self._pending_buf).reshape(
+            self._flat[name].shape)
+        self._pending_layer = None
+        self._pending_buf = None
+
+    def _step_stage(self) -> None:
+        parts = self.server.fetch_update(self._cursor, self.max_step_bytes)
+        if parts:
+            for part in parts:
+                self._apply_part(part)
+            got = int(sum(p.nbytes for p in parts))
+            self.stats_["parts_applied"] += len(parts)
+            self.stats_["bytes_applied"] += got
+            self.stats_["max_step_bytes_applied"] = max(
+                self.stats_["max_step_bytes_applied"], got)
+            self._touched.update(p.layer for p in parts)
+        if self._cursor.done:
+            if self._pending_layer is not None:
+                self._finalize_layer()
+            # assemble the staged tree: touched layers are the patched
+            # buffers, untouched leaves the client's arrays by reference
+            self._staged = unflatten_like(self.gw._client.params, self._flat)
+            if self.gw.quantized:
+                self._requant_queue = sorted(self._touched)
+                self._staged_q = self._requant_base
+                self.phase = "requant"
+            else:
+                self._enter_prewarm()
+
+    def _step_requant(self) -> None:
+        from repro.serving.quantized import (quantize_serving_params,
+                                             requantize_layers)
+
+        if self._requant_base is None:
+            # diverged gateway (see begin): full requantize, one step
+            self._staged_q = quantize_serving_params(self._staged)
+            self._requant_queue = []
+        else:
+            batch = self._requant_queue[:self.requant_layers_per_step]
+            del self._requant_queue[:len(batch)]
+            self._staged_q = requantize_layers(self._staged_q, self._flat,
+                                               batch)
+            self.stats_["layers_requantized"] += len(batch)
+        if not self._requant_queue:
+            self._enter_prewarm()
+
+    def _enter_prewarm(self) -> None:
+        gw = self.gw
+        serving = self._staged_q if gw.quantized else self._staged
+        gw._register_staging(self.to_version, serving)
+        # hot tiers from scheduler occupancy: the tiers serving traffic
+        # now are the ones whose first new-version admission would pay a
+        # cold view build.  Tiers pending revocation are skipped, and the
+        # queue is capped at the view cache's SPARE slots: prewarming
+        # must never LRU-evict a view (in-flight pinned requests decode
+        # through the old-version entries; evicting one buys a cold
+        # rebuild mid-generation — the very stall staging removes).
+        # hot_tiers() is busiest-first, so any cap keeps the tiers whose
+        # warm view matters most; with no spare slots prewarm is skipped
+        # and the first admission builds its view as before.
+        spare = gw.views.capacity - len(gw.views)
+        self._prewarm_queue = [
+            t for t in gw.scheduler.hot_tiers()
+            if not (t in gw._pending_tiers and gw._pending_tiers[t] is None)
+        ][: max(0, spare)]
+        self.phase = "prewarm"
+        if not self._prewarm_queue:
+            self.phase = "flip"
+
+    def _step_prewarm(self) -> None:
+        gw = self.gw
+        if len(gw.views) >= gw.views.capacity:
+            # an admission since _enter_prewarm filled the spare slots:
+            # stop rather than LRU-evict a live view (the remaining
+            # tiers build their views cold on first admission, as before)
+            self._prewarm_queue = []
+        else:
+            tier = self._prewarm_queue.pop(0)
+            try:
+                gw.views.get(tier, self.to_version)
+                self.stats_["views_prewarmed"] += 1
+            except KeyError:
+                pass                      # tier vanished mid-staging
+        if not self._prewarm_queue:
+            self.phase = "flip"
+
+    def _flip(self) -> None:
+        """Atomic install: new weights + tier redefinitions in one step."""
+        gw, client = self.gw, self.gw._client
+        gw._install_staged(self.to_version)
+        client.params = self._staged
+        client.version = self.to_version
+        client.bytes_downloaded += self._cursor.fetched_bytes
+        client.updates += 1
+        self.stats_["flips"] += 1
+        self._cursor = None
+        self._staged = self._staged_q = None
+        self.phase = "done"

@@ -1,0 +1,454 @@
+"""Staged weight sync + delta-protocol correctness regressions.
+
+Covers the staged-update subsystem (``serving/updates.py``): bounded
+stager steps, mid-stream token equivalence across a staged ``sync()``,
+prewarmed views, the atomic weights+tiers flip — and the two
+``_mask_packet`` wire-format regressions (chunk dtype, explicit
+compression flags)."""
+import zlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core import delta as delta_lib
+from repro.core.licensing import LicenseTier
+from repro.core.protocol import EdgeClient, LicenseServer, _mask_packet
+from repro.core.weightstore import LayerDelta, UpdatePacket, WeightStore
+from repro.models import init_params
+from repro.serving import LicensedGateway, RequestState
+
+MAX_PROMPT = 8
+
+
+# ---------------------------------------------------------------- wire format
+@pytest.mark.parametrize("dtype", ["float32", "float16"])
+def test_mask_packet_chunk_dtype(dtype):
+    """Chunk pages must be decoded with the delta's dtype: masking a
+    non-f32 layer used to reinterpret its pages as f32 and silently
+    corrupt every shipped value."""
+    store = WeightStore(":memory:", row_limit=8, chunk_elems=4)
+    store.register_model("m", "mlp")
+    server = LicenseServer(store)
+    rng = np.random.default_rng(0)
+    p = {"l1/kernel": rng.standard_normal((8, 4)).astype(dtype)}
+    server.publish("m", p)
+    server.publish_tier("m", LicenseTier(name="free",
+                                         masks={"l1": ((0.5, 0.9),)}))
+
+    client = EdgeClient("m", {"l1/kernel": np.zeros((8, 4), dtype)},
+                        license_name="free")
+    client.request_update(server)
+    got = client.params["l1/kernel"]
+    assert got.dtype == np.dtype(dtype)
+    mag = np.abs(p["l1/kernel"].astype(np.float32))
+    banned = (mag >= 0.5) & (mag < 0.9)
+    assert banned.any()
+    assert (np.asarray(got)[banned] == 0).all()
+    np.testing.assert_array_equal(np.asarray(got)[~banned],
+                                  p["l1/kernel"][~banned])
+
+
+def _zlib_lookalike_page():
+    """Raw float32 bytes that happen to be a complete, valid zlib stream."""
+    for n in range(1, 4096):
+        blob = zlib.compress(b"\x00" * n, 9)
+        if len(blob) % 4 == 0:
+            page = np.frombuffer(blob, dtype=np.float32)
+            if np.isfinite(page).all():
+                return page
+    raise AssertionError("no lookalike found")
+
+
+def test_chunk_compression_flag_not_sniffed():
+    """An uncompressed page whose raw bytes parse as zlib must pass
+    through bit-identically: the explicit per-chunk flag, not a
+    trial-decompress, decides decoding."""
+    page = _zlib_lookalike_page()
+    # sanity: the old sniffing heuristic WOULD have decompressed this
+    zlib.decompress(page.tobytes())
+    d = LayerDelta(layer="l1/kernel", shape=(page.size, 1), dtype="float32",
+                   indices=np.array([0], np.int64), chunks=[page.tobytes()],
+                   chunk_elems=page.size, chunk_compressed=[False])
+    dense = delta_lib.delta_to_dense(d).reshape(-1)
+    np.testing.assert_array_equal(dense, page)
+
+    # and through the server-side masking path (2-D shape, matching tier)
+    packet = UpdatePacket(model="m", from_version=1, to_version=2, deltas=[d])
+    lo = float(np.nanpercentile(np.abs(page[np.isfinite(page)]), 50))
+    tier = LicenseTier(name="free", masks={"l1": ((lo, np.inf),)})
+    masked = _mask_packet(packet, tier).deltas[0]
+    assert masked.chunk_compressed == [False]
+    out = np.frombuffer(masked.chunks[0], dtype=np.float32)
+    mag = np.abs(page)
+    banned = mag >= lo
+    assert banned.any() and (~banned).any()
+    assert (out[banned] == 0).all()
+    np.testing.assert_array_equal(out[~banned], page[~banned])
+
+    # compressed pages still round-trip under their explicit flag
+    dz = LayerDelta(layer="l1/kernel", shape=(page.size, 1), dtype="float32",
+                    indices=np.array([0], np.int64),
+                    chunks=[zlib.compress(page.tobytes(), 1)],
+                    chunk_elems=page.size, chunk_compressed=[True])
+    np.testing.assert_array_equal(delta_lib.delta_to_dense(dz).reshape(-1),
+                                  page)
+
+
+def test_chunk_fetch_cursor_matches_blocking_pull():
+    """Applying every fetched part in order == applying handle_update's
+    whole packet; the session is byte-metered and logged once."""
+    store = WeightStore(":memory:", row_limit=8, chunk_elems=4)
+    store.register_model("m", "mlp")
+    server = LicenseServer(store)
+    p = {"big/kernel": np.arange(32, dtype=np.float32).reshape(8, 4),
+         "small/kernel": np.ones((2, 3), np.float32)}
+    v1 = server.publish("m", p)
+    client = EdgeClient("m", {k: np.zeros_like(v) for k, v in p.items()})
+    client.request_update(server)
+    ref = EdgeClient("m", {k: np.zeros_like(v) for k, v in p.items()})
+    ref.request_update(server)               # same from_version as client
+
+    p2 = {k: v.copy() for k, v in p.items()}
+    p2["big/kernel"][0] += 1.0
+    p2["small/kernel"][1, 1] = 7.0
+    server.publish("m", p2, parent=v1)
+
+    cursor = server.open_update("m", client.version, "full")
+    staged = client.params
+    fetches = 0
+    while True:
+        parts = server.fetch_update(cursor, max_bytes=24)
+        if not parts:
+            break
+        fetches += 1
+        pk = UpdatePacket(model="m", from_version=client.version,
+                          to_version=cursor.to_version, deltas=parts)
+        staged = delta_lib.apply_packet(staged, pk, donate=True)
+    assert fetches > 1                       # actually incremental
+    assert cursor.fetched_bytes == cursor.total_bytes
+
+    ref.request_update(server)
+    for k in p:
+        np.testing.assert_array_equal(staged[k], ref.params[k])
+    # exactly one log entry for the whole cursor session, byte-identical
+    # to what the blocking handle_update pull logs
+    sessions = [l for l in server.log if l.from_version == client.version]
+    assert len(sessions) == 2                # cursor drain + ref's pull
+    assert sessions[0].bytes_sent == sessions[1].bytes_sent
+
+
+def test_weightstore_guards_legacy_f32_chunk_encoding(tmp_path):
+    """Format 1 stores encoded chunk pages as f32 regardless of layer
+    dtype; opening one that actually holds non-f32 chunk layers must
+    refuse rather than decode garbage, while f32-only stores migrate."""
+    path = str(tmp_path / "legacy_f16.db")
+    store = WeightStore(path, row_limit=8, chunk_elems=4)
+    store.register_model("m", "mlp")
+    store.commit("m", {"l1/kernel": np.ones((8, 4), np.float16)})
+    store.conn.execute("PRAGMA user_version=0")    # masquerade as format 1
+    store.conn.commit()
+    store.close()
+    with pytest.raises(RuntimeError, match="format 1"):
+        WeightStore(path)
+
+    path = str(tmp_path / "legacy_f32.db")
+    store = WeightStore(path, row_limit=8, chunk_elems=4)
+    store.register_model("m", "mlp")
+    store.commit("m", {"l1/kernel": np.ones((8, 4), np.float32)})
+    store.conn.execute("PRAGMA user_version=0")
+    store.conn.commit()
+    store.close()
+    store = WeightStore(path)                      # f32-only: stamped forward
+    ver, = store.conn.execute("PRAGMA user_version").fetchone()
+    assert ver == WeightStore._FORMAT_VERSION
+    store.close()
+
+
+def test_delta_apply_inplace_matches_copy():
+    from repro.kernels import ops
+
+    buf = np.arange(8192, dtype=np.float32)
+    idx = np.array([0, 5000, 8191])
+    val = np.array([9.0, -1.0, 3.5], np.float32)
+    import jax.numpy as jnp
+
+    a = np.asarray(ops.delta_apply(jnp.asarray(buf), jnp.asarray(idx),
+                                   jnp.asarray(val)))
+    b = np.asarray(ops.delta_apply(jnp.asarray(buf), jnp.asarray(idx),
+                                   jnp.asarray(val), donate=True))
+    np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------ staged gateway
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    params = jax.device_get(init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+def _server_with(params, tier_masks=((0.0, 0.004),)):
+    store = WeightStore(":memory:", row_limit=2048)
+    server = LicenseServer(store)
+    server.publish("lm", params, tag="v1")
+    server.publish_tier("lm", LicenseTier(name="free",
+                                          masks={"*": tuple(tier_masks)}))
+    return server
+
+
+def _boot(cfg, server, params, **kw):
+    template = jax.tree_util.tree_map(lambda x: np.zeros_like(x), params)
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_prompt", MAX_PROMPT)
+    kw.setdefault("max_new_cap", 16)
+    return LicensedGateway.from_server(cfg, server, "lm", template, **kw)
+
+
+def _prompt(seed, n=MAX_PROMPT):
+    return np.random.default_rng(seed).integers(0, 500, n, dtype=np.int32)
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_midstream_staged_sync_equivalence(setup, quantized):
+    """Requests in flight across a staged sync produce bit-identical
+    tokens to an update-free run; admissions after the flip serve the
+    new version through a prewarmed view."""
+    cfg, params = setup
+    server = _server_with(params)
+
+    # update-free reference run
+    ref = _boot(cfg, server, params, quantized=quantized)
+    a0 = ref.submit(_prompt(1), license="free", max_new_tokens=12)
+    b0 = ref.submit(_prompt(2), license="free", max_new_tokens=12)
+    ref.run()
+
+    gw = _boot(cfg, server, params, quantized=quantized)
+    a = gw.submit(_prompt(1), license="free", max_new_tokens=12)
+    b = gw.submit(_prompt(2), license="free", max_new_tokens=12)
+    gw.step()                                # prefill: a, b in flight
+    newp = jax.tree_util.tree_map(lambda x: np.asarray(x) * 1.01, params)
+    server.publish("lm", newp, tag="v2")
+    # pace the staging so the flip lands while a and b are still decoding
+    # (the prewarm needs a hot tier to warm)
+    assert gw.begin_sync(max_step_bytes=4 << 20,
+                         requant_layers_per_step=8) is True
+    flip_checked = False
+    for _ in range(10_000):
+        if not (gw.sync_active or gw.scheduler.waiting
+                or gw.scheduler.running):
+            break
+        gw.step()
+        if not gw.sync_active and not flip_checked:
+            flip_checked = True
+            v2 = gw.version
+            assert v2 == gw._client.version != 1
+            # hot tier prewarmed at the new version BEFORE any admission
+            assert ("free", v2) in gw.views
+    assert flip_checked, "staged sync never flipped"
+    assert a.state == b.state == RequestState.DONE
+    assert (a.version, b.version) == (1, 1)  # pinned across the flip
+    assert a.out_tokens == a0.out_tokens
+    assert b.out_tokens == b0.out_tokens
+
+    st = gw.metrics()["staged_update"]
+    assert st["flips"] == 1 and st["views_prewarmed"] >= 1
+    if quantized:
+        # incremental path: only touched layers requantized, and the
+        # rebuilt store matches a from-scratch full requantize exactly
+        from repro.serving.quantized import quantize_serving_params
+
+        assert st["layers_requantized"] == st["layers_touched"] > 0
+        full = quantize_serving_params(gw._client.params)
+        for got, want in zip(jax.tree_util.tree_leaves(gw._weights[v2]),
+                             jax.tree_util.tree_leaves(full)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    # the prewarmed view serves the first new-version admission (no miss)
+    misses = gw.views.misses
+    r = gw.submit(_prompt(3), license="free", max_new_tokens=2)
+    gw.run()
+    assert r.state == RequestState.DONE and r.version == v2
+    assert gw.views.misses == misses
+
+
+def test_atomic_tier_and_version_flip(setup):
+    """A tier redefinition published together with a version bump goes
+    live in the same stager step as the new weights: at every scheduler
+    step boundary the gateway is either fully old or fully new."""
+    cfg, params = setup
+    old_masks = ((0.0, 0.004),)
+    new_masks = ((0.0, 0.01),)
+    server = _server_with(params, old_masks)
+    gw = _boot(cfg, server, params)
+    r = gw.submit(_prompt(1), license="free", max_new_tokens=4)
+    gw.run()
+    assert r.state == RequestState.DONE
+    assert gw.tiers["free"].masks == {"*": old_masks}
+
+    # same server commit: new production version AND redefined tier
+    newp = jax.tree_util.tree_map(lambda x: np.asarray(x) * 1.01, params)
+    server.publish("lm", newp, tag="v2")
+    server.publish_tier("lm", LicenseTier(name="free",
+                                          masks={"*": new_masks}))
+
+    assert gw.begin_sync(max_step_bytes=4096) is True
+    saw_staging_steps = 0
+    while gw.sync_active:
+        gw.step()
+        tier_new = gw.tiers["free"].masks == {"*": new_masks}
+        version_new = gw.version != 1
+        # the forbidden intermediate states: (new tier, old version) is
+        # the pre-fix sync() bug; (old tier, new version) its mirror
+        assert tier_new == version_new, (tier_new, version_new)
+        if gw.sync_active:
+            saw_staging_steps += 1
+            # mid-staging admissions pin the fully-old state
+            assert gw.submit(_prompt(5), license="free",
+                             max_new_tokens=1).version == 1
+    assert saw_staging_steps > 1             # the flip was actually staged
+    assert gw.tiers["free"].masks == {"*": new_masks}
+    gw.run()
+
+    # functional: a post-flip admission behaves exactly like a fresh pod
+    # booted from the server's new state
+    fresh = _boot(cfg, server, params)
+    assert fresh.version == gw.version
+    want = fresh.submit(_prompt(9), license="free", max_new_tokens=4)
+    fresh.run()
+    got = gw.submit(_prompt(9), license="free", max_new_tokens=4)
+    gw.run()
+    assert got.out_tokens == want.out_tokens
+
+
+def test_stager_bounded_bytes_per_step(setup):
+    """No stager step applies more than max_step_bytes (+ one indivisible
+    chunk page), no matter the update size — the bound the decode-stall
+    benchmark rides on."""
+    cfg, params = setup
+    store = WeightStore(":memory:", row_limit=2048, chunk_elems=2048)
+    server = LicenseServer(store)
+    server.publish("lm", params, tag="v1")
+    server.publish_tier("lm", LicenseTier(name="free",
+                                          masks={"*": ((0.0, 0.004),)}))
+    gw = _boot(cfg, server, params)
+    # touch ONE whole large (chunk-mode) layer: the per-step bound must
+    # hold however big a single layer's delta is
+    from repro.core.pytree_io import flatten_params
+
+    flat = flatten_params(params)
+    big = max(flat, key=lambda k: flat[k].size)
+    assert flat[big].size > 2048                 # really chunk-mode
+    newp = {k: (v * 1.01 if k == big else v) for k, v in flat.items()}
+    server.publish("lm", newp, tag="v2")
+
+    budget = 16 << 10
+    # one indivisible page of slack, plus zlib can exceed raw size on
+    # incompressible data (+8 index bytes per page)
+    page_bytes = 2048 * 4 + 1024
+    assert gw.begin_sync(max_step_bytes=budget) is True
+    while gw.sync_active:
+        gw.sync_step()
+    st = gw.metrics()["staged_update"]
+    assert st["flips"] == 1
+    assert st["bytes_applied"] > budget          # genuinely incremental
+    assert st["max_step_bytes_applied"] <= budget + page_bytes
+    assert st["steps"] > st["bytes_applied"] // (budget + page_bytes)
+
+
+def test_redefined_tier_in_flight_at_flip_rejects_admissions(setup):
+    """The deferred window is unobservable: when the flip lands while
+    the redefined tier still has requests decoding, the redefinition
+    defers (pinning holds) and NEW admissions to that tier are refused
+    until it drains — nothing is ever served under (old masks, new
+    version)."""
+    cfg, params = setup
+    old_masks = ((0.0, 0.004),)
+    new_masks = ((0.0, 0.01),)
+    server = _server_with(params, old_masks)
+    gw = _boot(cfg, server, params)
+    warm = gw.submit(_prompt(0), license="free", max_new_tokens=1)
+    gw.run()
+    assert warm.state == RequestState.DONE
+
+    # a long request holds the tier in flight across the whole staging
+    r = gw.submit(_prompt(1), license="free", max_new_tokens=16)
+    gw.step()
+    newp = jax.tree_util.tree_map(lambda x: np.asarray(x) * 1.01, params)
+    server.publish("lm", newp, tag="v2")
+    server.publish_tier("lm", LicenseTier(name="free",
+                                          masks={"*": new_masks}))
+    assert gw.begin_sync(max_step_bytes=8 << 20) is True
+    while gw.sync_active:
+        gw.step()
+    v2 = gw.version
+    assert v2 != 1 and r.state == RequestState.RUNNING
+    # deferred: old masks still in the table, but the tier refuses new
+    # admissions rather than serving them under (old masks, v2)
+    assert gw.tiers["free"].masks == {"*": old_masks}
+    rej = gw.submit(_prompt(2), license="free", max_new_tokens=1)
+    assert rej.state == RequestState.REJECTED and "redefined" in rej.error
+    gw.run()                                 # r drains -> redefinition lands
+    assert r.state == RequestState.DONE and r.version == 1
+    assert gw.tiers["free"].masks == {"*": new_masks}
+    ok = gw.submit(_prompt(3), license="free", max_new_tokens=1)
+    assert ok.state != RequestState.REJECTED and ok.version == v2
+    gw.run()
+    assert ok.state == RequestState.DONE
+
+
+def test_failed_staging_aborts_clean(setup):
+    """A stage step that raises must tear the session down (active ->
+    False, staging version unregistered) instead of wedging the serving
+    loop; the gateway keeps serving and can begin a fresh sync."""
+    cfg, params = setup
+    server = _server_with(params)
+    gw = _boot(cfg, server, params)
+    r = gw.submit(_prompt(1), license="free", max_new_tokens=4)
+    gw.run()
+    assert r.state == RequestState.DONE
+
+    # v2's delta names a layer the gateway's client never had
+    from repro.core.pytree_io import flatten_params
+
+    flat = flatten_params(params)
+    newp = dict(flat)
+    newp["rogue/kernel"] = np.ones((4, 4), np.float32)
+    server.publish("lm", newp, tag="v2")
+
+    assert gw.begin_sync(max_step_bytes=1 << 30) is True
+    with pytest.raises(KeyError, match="rogue/kernel"):
+        while gw.sync_active:
+            gw.step()
+    assert not gw.sync_active
+    assert gw.version == 1 and gw._staging_version is None
+    assert 2 not in gw._weights
+    assert gw.metrics()["staged_update"]["phase"] == "failed"
+    # the gateway still serves, and a fresh sync can be attempted
+    r2 = gw.submit(_prompt(2), license="free", max_new_tokens=2)
+    gw.run()
+    assert r2.state == RequestState.DONE and r2.version == 1
+    assert gw.begin_sync() is True           # fresh cursor, same failure
+    with pytest.raises(KeyError):
+        gw.sync_step()
+
+
+def test_sync_already_current_refreshes_tiers_only(setup):
+    """Blocking-sync parity through the stager: no new version -> False,
+    and a tier-only redefinition still lands immediately."""
+    cfg, params = setup
+    server = _server_with(params)
+    gw = _boot(cfg, server, params)
+    r = gw.submit(_prompt(1), license="free", max_new_tokens=2)
+    gw.run()
+    assert r.state == RequestState.DONE
+    log_before = len(server.log)
+    assert gw.sync() is False
+    stricter = LicenseTier(name="free", masks={"*": ((0.0, 0.02),)})
+    server.publish_tier("lm", stricter)
+    assert gw.sync() is False                    # no weights to stage...
+    assert gw.tiers["free"].masks == stricter.masks   # ...tiers applied
+    # no-op polls use the cheap production_version probe: no delta query,
+    # no empty sessions accumulating in the audit log
+    assert len(server.log) == log_before
