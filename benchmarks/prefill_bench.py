@@ -1,0 +1,182 @@
+"""Chunked prefill: bounded decode stalls + length-independent reuse.
+
+The tentpole claim of left-aligned chunked prefill: admitting a long
+prompt no longer freezes running decodes for the whole prompt — the
+scheduler alternates one chunk with one decode step, so the worst-case
+inter-token gap a decode lane sees is (one decode step + one chunk
+step), not (one decode step + the entire prompt's prefill).  The chunk
+step itself is trimmed to O(context) bytes (vmap width and gathered
+table columns bucketed to powers of two), so a chunk costs no more than
+the decode step it interleaves with.
+
+``chunk_size`` is the latency SLO knob: halving it halves the stall a
+chunk injects between two decode steps (and doubles the number of
+chunks a prompt needs).  This bench pins it to one block.
+
+Three phases, one gateway geometry (long-context decode lanes so the
+baseline is honest — a decode step over three 4k-context lanes, not an
+idle gateway):
+
+  1. *Baseline*: three decode lanes at full ``N``-token context tick
+     with no prefill in flight; per-token gaps are timed.
+  2. *Concurrent*: a fresh ``N``-token prompt is submitted and chunks
+     to completion while the same lanes keep decoding; gaps between
+     consecutive decode steps now include one interleaved chunk each.
+     Acceptance (full run): floor-interpolated p99 concurrent gap
+     <= 2x the baseline p99.
+  3. *Cross-length reuse*: two prompts share a block-aligned head but
+     have different-length tails; the radix cache (keyed on true token
+     ids, not padded buckets) must hand the second request the shared
+     blocks with zero copy-on-write.
+
+Reported rows (asserted bars noted inline):
+  * ``prefill/decode_only_baseline``  — median/p99 inter-token gap.
+  * ``prefill/concurrent_prefill``    — same, while the prompt chunks;
+    p99 ratio vs baseline asserted <= 2.0 in the full run (the smoke
+    lane's small sample on a shared CI runner is too noisy to gate on).
+  * ``prefill/cross_length_reuse``    — reused prefix tokens > 0 across
+    different prompt lengths, cow_copies == 0 (asserted both lanes).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.licensing import LicenseTier
+from repro.models import init_params
+from repro.serving import LicensedGateway, RequestState
+
+ARCH = "qwen2.5-3b"
+BLOCK = 64
+CHUNK = 64                       # the SLO knob: stall <= one 64-token chunk
+MAX_BATCH = 4
+N_DECODERS = 3
+
+
+def _mk_gateway(cfg, params, tiers, *, max_prompt, max_new_cap):
+    return LicensedGateway(
+        cfg, params, tiers=tiers, max_batch=MAX_BATCH,
+        max_prompt=max_prompt, max_new_cap=max_new_cap, block_size=BLOCK,
+        chunk_size=CHUNK)
+
+
+def _scenario(gw, n_ctx, window, rng):
+    """Run baseline + concurrent phases; return (base_ts, conc_ts, chunks).
+
+    ``base_ts``/``conc_ts`` are wall-clock timestamps of consecutive
+    decode steps in each phase — their diffs are the inter-token gaps a
+    streaming client observes.
+    """
+    prompts = [rng.integers(0, 500, n_ctx, dtype=np.int32)
+               for _ in range(N_DECODERS + 1)]
+    chunks_needed = -(-n_ctx // CHUNK)
+    # decoders must outlive: baseline window + one decode per chunk of
+    # the concurrent prompt (strict alternation) + drain slack
+    max_new = window + chunks_needed + 8
+    decoders = [gw.submit(p, license="free", max_new_tokens=max_new)
+                for p in prompts[:N_DECODERS]]
+    while not all(r.state is RequestState.RUNNING for r in decoders):
+        assert gw.step() is not None
+    base_ts = [time.perf_counter()]
+    while len(base_ts) <= window:
+        act = gw.step()
+        assert act is not None and act.kind == "decode"
+        base_ts.append(time.perf_counter())
+    chunks0 = gw.stats["prefill_chunks"]
+    long_req = gw.submit(prompts[-1], license="free", max_new_tokens=4)
+    conc_ts = []
+    while long_req.state in (RequestState.QUEUED, RequestState.PREFILLING):
+        act = gw.step()
+        assert act is not None
+        # the measured gaps are decode-to-decode (each one includes the
+        # chunk step interleaved between them); the decoders must not
+        # drain before the prompt finishes chunking
+        assert any(r.state is RequestState.RUNNING for r in decoders)
+        if act.kind == "decode":
+            conc_ts.append(time.perf_counter())
+    assert long_req.state is RequestState.RUNNING
+    chunks = gw.stats["prefill_chunks"] - chunks0
+    assert chunks >= chunks_needed, (chunks, chunks_needed)
+    gw.run()                               # drain the tail
+    assert all(r.state is RequestState.DONE for r in decoders)
+    return np.diff(base_ts), np.diff(conc_ts), chunks
+
+
+def _p99(gaps):
+    return float(np.percentile(gaps, 99, method="lower"))
+
+
+def run(smoke: bool = False) -> list:
+    cfg = smoke_variant(get_config(ARCH))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tiers = {"free": LicenseTier(name="free", masks={"*": ((0.0, 0.004),)})}
+    rng = np.random.default_rng(0)
+
+    n_ctx = 1024 if smoke else 4096
+    window = 12 if smoke else 32
+    chunks_needed = -(-n_ctx // CHUNK)
+    max_new_cap = window + chunks_needed + 16
+    mk = dict(max_prompt=n_ctx, max_new_cap=max_new_cap)
+
+    # warm EVERY jit specialization the measured run will hit — the
+    # chunk step compiles per pow2 (lanes, table-cols) bucket, and one
+    # compile inside the measured window would dominate p99
+    _scenario(_mk_gateway(cfg, params, tiers, **mk), n_ctx, window, rng)
+    gw = _mk_gateway(cfg, params, tiers, **mk)
+    base, conc, chunks = _scenario(gw, n_ctx, window,
+                                   np.random.default_rng(0))
+    p99_base, p99_conc = _p99(base), _p99(conc)
+    ratio = p99_conc / p99_base
+    if not smoke:
+        # the ISSUE's acceptance bar: a decode lane's p99 inter-token
+        # gap while a 4k prompt chunks concurrently stays within 2x the
+        # no-prefill baseline
+        assert ratio <= 2.0, (p99_conc, p99_base, ratio)
+
+    # ---- cross-length prefix reuse: shared head, different tails ----
+    gw2 = LicensedGateway(cfg, params, tiers=tiers, max_batch=2,
+                          max_prompt=512, max_new_cap=16, block_size=BLOCK,
+                          chunk_size=CHUNK)
+    # block-aligned lengths: a partial tail block is donated to the
+    # radix too (exact-duplicate hits) at the cost of one CoW on the
+    # first decode write — aligned tails are the zero-CoW case the
+    # tentpole claims, so that is what this row asserts
+    head = rng.integers(0, 500, 4 * BLOCK, dtype=np.int32)
+    lens = (5 * BLOCK, 7 * BLOCK)
+    reused = []
+    for n in lens:
+        tail = rng.integers(0, 500, n - len(head), dtype=np.int32)
+        r = gw2.submit(np.concatenate([head, tail]), license="free",
+                       max_new_tokens=4)
+        gw2.run()
+        assert r.state is RequestState.DONE
+        reused.append(r.prefix_tokens)
+    pm = gw2.metrics()["prefix_cache"]
+    assert reused[1] == len(head), reused     # full aligned head adopted
+    assert pm["prefix_tokens_reused"] >= len(head)
+    assert pm["cow_copies"] == 0, pm          # aligned tails never CoW
+    assert gw2.metrics()["chunked_prefill"]["enabled"]
+
+    us = 1e6
+    return [
+        {"name": "prefill/decode_only_baseline",
+         "us_per_call": float(np.median(base)) * us,
+         "p99_gap_us": round(p99_base * us, 1),
+         "decode_steps": len(base), "context": n_ctx,
+         "decode_lanes": N_DECODERS},
+        {"name": "prefill/concurrent_prefill",
+         "us_per_call": float(np.median(conc)) * us,
+         "p99_gap_us": round(p99_conc * us, 1),
+         "p99_ratio_vs_baseline": round(ratio, 3),
+         "prompt_tokens": n_ctx, "chunk_size": CHUNK,
+         "prefill_chunks": chunks,
+         "bound_asserted": not smoke},
+        {"name": "prefill/cross_length_reuse",
+         "us_per_call": 0.0,
+         "shared_head_tokens": len(head), "prompt_lens": list(lens),
+         "prefix_tokens_reused": int(pm["prefix_tokens_reused"]),
+         "cow_copies": int(pm["cow_copies"])},
+    ]

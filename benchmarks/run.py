@@ -24,7 +24,8 @@ import time
 import traceback
 
 SUITES = ("storage", "update-wire", "licensing", "kernels", "serving",
-          "gateway", "paging", "prefix", "decode", "update", "roofline")
+          "gateway", "paging", "prefix", "decode", "update", "prefill",
+          "roofline")
 
 
 def main(argv=None) -> None:
@@ -45,9 +46,9 @@ def main(argv=None) -> None:
         json_dir.mkdir(parents=True, exist_ok=True)
 
     from benchmarks import (decode_bench, gateway_bench, kernel_bench,
-                            licensing_ladder, paging_bench, prefix_bench,
-                            roofline_table, serving_bench, storage_cost,
-                            update_bench, update_latency)
+                            licensing_ladder, paging_bench, prefill_bench,
+                            prefix_bench, roofline_table, serving_bench,
+                            storage_cost, update_bench, update_latency)
 
     modules = {
         "storage": storage_cost,        # paper Table 1
@@ -60,6 +61,7 @@ def main(argv=None) -> None:
         "prefix": prefix_bench,         # shared-prefix radix cache vs paged
         "decode": decode_bench,         # kernel-resident vs gather/scatter
         "update": update_bench,         # staged sync vs blocking decode stall
+        "prefill": prefill_bench,       # chunked prefill decode-stall SLO
         "roofline": roofline_table,     # deliverable (g)
     }
 

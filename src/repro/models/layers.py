@@ -114,8 +114,16 @@ def attention_core(
     kv_len: Optional[jnp.ndarray] = None,  # valid cache length (decode)
     q_chunk: int = 512,
     softmax_scale: Optional[float] = None,
+    k_positions: Optional[jnp.ndarray] = None,  # (Sk,) absolute key positions
 ) -> jnp.ndarray:
-    """Causal (optionally windowed) attention, chunked over queries."""
+    """Causal (optionally windowed) attention, chunked over queries.
+
+    By default key slot ``i`` is assumed to hold absolute position ``i``
+    (linear cache / fresh prefill).  ``k_positions`` overrides that for
+    out-of-order key buffers (the ring suffix-prefill path): masking uses
+    the supplied absolute position per slot, and slots with a negative
+    position are treated as empty.
+    """
     b, sq, h, hd = q.shape
     _, sk, kh, _ = k.shape
     groups = h // kh
@@ -124,15 +132,18 @@ def attention_core(
     q = q * jnp.asarray(scale, q.dtype)
     qg = q.reshape(b, sq, kh, groups, hd)
     k_pos = jnp.arange(sk)
+    kp = k_pos if k_positions is None else k_positions
 
     def block(q_blk, q_pos):
         # q_blk (B, c, KH, G, hd); q_pos (c,) absolute positions
         scores = jnp.einsum("bqkgh,bskh->bkgqs", q_blk.astype(jnp.float32),
                             k.astype(jnp.float32))
         qp = q_pos[:, None]                         # (c, 1)
-        mask = k_pos[None, :] <= qp                 # causal
+        mask = kp[None, :] <= qp                    # causal
+        if k_positions is not None:
+            mask &= kp[None, :] >= 0                # empty ring slots
         if window:
-            mask &= k_pos[None, :] > qp - window
+            mask &= kp[None, :] > qp - window
         mask = mask[None, None, None]               # (1,1,1,c,S)
         if kv_len is not None:
             valid = k_pos[None, :] < jnp.reshape(kv_len, (-1, 1, 1))[:, None]
@@ -364,19 +375,35 @@ def attention_block(
     p: Dict[str, Any], x: jnp.ndarray, cfg, *,
     cache: Optional[Dict[str, jnp.ndarray]] = None,
     pos=0, window: int = 0, attend_cache: bool = False,
+    chunk_valid=None,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """GQA/MQA attention.  ``cache`` holds k/v (B, cap, KH, hd) + ``len``.
 
     Modes: train/prefill (cache None or filled-from-empty), decode
     (Sq == 1 with a pre-filled ring/linear cache), and — with
-    ``attend_cache=True`` — *suffix prefill*: Sq > 1 new tokens starting
-    at absolute ``pos`` attend over the updated cache contents instead of
-    only each other, so a prompt whose prefix ``[0, pos)`` is already
-    resident (prefix cache) runs prefill on the uncached tail alone.
-    ``attend_cache`` assumes a linear (non-ring) cache — slot == absolute
-    position — which the gateway's prefix-cacheable gate guarantees;
+    ``attend_cache=True`` — *suffix/chunked prefill*: Sq > 1 new tokens
+    starting at absolute ``pos`` attend over the updated cache contents
+    instead of only each other, so a prompt whose prefix ``[0, pos)`` is
+    already resident (prefix cache, or an earlier chunk of the same
+    prompt) runs prefill on the uncached tail alone.
+
+    For a *linear* cache (``window == 0``, slot == absolute position)
     writes beyond the last slot clamp onto it (masked until a real decode
-    write lands there) rather than wrapping over live prefix slots.
+    write lands there) rather than wrapping over live prefix slots.  With
+    ``window > 0`` the cache is a ring: the chunk's own writes may evict
+    positions its earliest queries still need, so attention reads a
+    pre-write snapshot of the ring concatenated with the fresh chunk K/V,
+    with per-slot absolute positions reconstructed from ``pos`` (see
+    ``k_positions`` in :func:`attention_core`); writes then land at
+    ``mod(position, cap)`` as usual.
+
+    ``chunk_valid`` (optional, scalar or (B,)) is the number of leading
+    *real* rows in this chunk — trailing rows are right-padding.  It
+    keeps the ``len`` counter exact and, on the ring path, masks the pad
+    rows' writes so they cannot clobber live slots.  Pad rows on the
+    linear path are safe unmasked: their clamped/high slots are causally
+    invisible to every real query and are overwritten by the next chunk
+    or the first decode write before anything can attend to them.
     """
     b, s, d = x.shape
     h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -390,29 +417,84 @@ def attention_block(
     else:
         quant = "k_scale" in cache
         cap = cache["k"].shape[1]
-        if attend_cache:
+        ring = bool(window) and attend_cache
+        if ring:
+            assert s <= cap, (s, cap)  # one chunk may not lap the ring
+            slot = jnp.mod(positions, cap)
+            # snapshot BEFORE the writes: the chunk's earliest queries may
+            # need positions its own writes are about to evict
+            if quant:
+                old_k = _kv_dequantize(cache["k"], cache["k_scale"], k.dtype)
+                old_v = _kv_dequantize(cache["v"], cache["v_scale"], v.dtype)
+            else:
+                old_k, old_v = cache["k"], cache["v"]
+            # absolute position resident in ring slot i before this chunk:
+            # the largest p < pos with mod(p, cap) == i (negative = empty,
+            # masked in attention_core)
+            last = positions[0] - 1
+            old_pos = last - jnp.mod(last - jnp.arange(cap), cap)
+        elif attend_cache:
             # linear cache: clamp instead of wrap, so a lane whose suffix
             # is padded past the capacity piles the pad writes onto the
             # (masked) last slot rather than corrupting prefix slots
             slot = jnp.clip(positions, 0, cap - 1)
         else:
             slot = jnp.mod(positions, cap)                 # ring for windowed
+        sel = None
+        if ring and chunk_valid is not None:
+            # mask pad rows' writes: an invalid row re-writes the old
+            # content of its slot (identity), so junk never lands
+            keep = (jnp.arange(s)[None, :]
+                    < jnp.reshape(jnp.asarray(chunk_valid), (-1, 1)))
+            sel = keep[..., None, None]                     # (B|1, s, 1, 1)
         if quant:
             kq, ks = _kv_quantize(k)
             vq, vs = _kv_quantize(v)
+            if sel is not None:
+                # mask at the code/scale level so pad rows round-trip the
+                # resident int8 content exactly
+                kq = jnp.where(sel, kq, cache["k"][:, slot])
+                vq = jnp.where(sel, vq, cache["v"][:, slot])
+                ks = jnp.where(sel, ks, cache["k_scale"][:, slot])
+                vs = jnp.where(sel, vs, cache["v_scale"][:, slot])
             ck = cache["k"].at[:, slot].set(kq)
             cv = cache["v"].at[:, slot].set(vq)
             cks = cache["k_scale"].at[:, slot].set(ks)
             cvs = cache["v_scale"].at[:, slot].set(vs)
         else:
+            k_w = k if sel is None else jnp.where(sel, k, old_k[:, slot])
+            v_w = v if sel is None else jnp.where(sel, v, old_v[:, slot])
+            # the offset-0 contiguous fast path only holds for a filled-
+            # from-empty prefill; a chunk at pos > 0 must scatter by slot
+            dus = s == cap and not attend_cache
             ck = jax.lax.dynamic_update_slice(  # contiguous when s==cap write
-                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
-            ) if s == cap else cache["k"].at[:, slot].set(k.astype(cache["k"].dtype))
+                cache["k"], k_w.astype(cache["k"].dtype), (0, 0, 0, 0)
+            ) if dus else cache["k"].at[:, slot].set(
+                k_w.astype(cache["k"].dtype))
             cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
-            ) if s == cap else cache["v"].at[:, slot].set(v.astype(cache["v"].dtype))
-        new_len = jnp.minimum(cache["len"] + s, cap)
-        if s == 1 or attend_cache:
+                cache["v"], v_w.astype(cache["v"].dtype), (0, 0, 0, 0)
+            ) if dus else cache["v"].at[:, slot].set(
+                v_w.astype(cache["v"].dtype))
+        cv_n = s if chunk_valid is None else jnp.asarray(chunk_valid)
+        new_len = jnp.minimum(cache["len"] + cv_n, cap)
+        if ring:
+            # attend over [ring snapshot | fresh chunk K/V] with explicit
+            # absolute key positions; window masking bounds the lookback.
+            # Quantized caches attend the fresh chunk in round-tripped
+            # int8 form so every key is seen dequantized no matter which
+            # chunk boundary it fell on.
+            if quant:
+                k_att = _kv_dequantize(*_kv_quantize(k), k.dtype)
+                v_att = _kv_dequantize(*_kv_quantize(v), v.dtype)
+            else:
+                k_att, v_att = k, v
+            out = attention_core(
+                q, jnp.concatenate([old_k, k_att], axis=1),
+                jnp.concatenate([old_v, v_att], axis=1),
+                q_offset=pos, window=window, q_chunk=cfg.q_chunk,
+                k_positions=jnp.concatenate([old_pos, positions]),
+            )
+        elif s == 1 or attend_cache:
             # decode: attend over the valid cache (mask handles ring order —
             # with RoPE already applied per absolute position, order in the
             # buffer is irrelevant to the score computation).  Suffix
@@ -489,7 +571,7 @@ def init_mla(key, cfg, dtype) -> Dict[str, Any]:
 def mla_block(
     p: Dict[str, Any], x: jnp.ndarray, cfg, *,
     cache: Optional[Dict[str, jnp.ndarray]] = None, pos=0, window: int = 0,
-    attend_cache: bool = False,
+    attend_cache: bool = False, chunk_valid=None,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """Multi-head Latent Attention (DeepSeek-V2).  The cache stores the
     COMPRESSED c_kv (r) + shared rotary key (rope_d) — the paper's KV-cache
@@ -505,13 +587,18 @@ def mla_block(
 
     if cache is not None:
         cap = cache["ckv"].shape[1]
-        # suffix prefill (attend_cache): linear cache — clamp, don't wrap
-        # (see attention_block); pad writes pile onto the masked last slot
+        # suffix/chunked prefill (attend_cache): linear cache — clamp,
+        # don't wrap (see attention_block); pad writes pile onto the
+        # masked last slot.  MLA configs never use sliding windows, so
+        # the ring snapshot path is not implemented here.
+        assert not (attend_cache and window), \
+            "windowed MLA chunked prefill is unsupported"
         slot = (jnp.clip(positions, 0, cap - 1) if attend_cache
                 else jnp.mod(positions, cap))
         c_all = cache["ckv"].at[:, slot].set(c_kv.astype(cache["ckv"].dtype))
         kr_all = cache["k_rope"].at[:, slot].set(k_rope.squeeze(2).astype(cache["k_rope"].dtype))
-        new_len = jnp.minimum(cache["len"] + s, cap)
+        cv_n = s if chunk_valid is None else jnp.asarray(chunk_valid)
+        new_len = jnp.minimum(cache["len"] + cv_n, cap)
         new_cache = {"ckv": c_all, "k_rope": kr_all, "len": new_len}
         kv_src, kr_src = c_all, kr_all[:, :, None, :]
         # attend_cache: causal masking alone bounds the scores (slot ==

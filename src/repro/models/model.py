@@ -56,6 +56,7 @@ def _init_block(key, cfg: ModelConfig, kind: str) -> Dict[str, Any]:
 def _apply_block(
     p: Dict[str, Any], kind: str, x: jnp.ndarray, cfg: ModelConfig, *,
     cache: Optional[Dict[str, Any]], pos, attend_cache: bool = False,
+    chunk_valid=None,
     paged_tables: Optional[jnp.ndarray] = None, paged_kernel: str = "off",
 ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict[str, Any]]]:
     """Pre-norm residual block.  Returns (x, aux_loss, new_cache).
@@ -85,11 +86,13 @@ def _apply_block(
         elif cfg.use_mla:
             y, new_cache = L.mla_block(p["mixer"], h, cfg, cache=cache, pos=pos,
                                        window=cfg.window,
-                                       attend_cache=attend_cache)
+                                       attend_cache=attend_cache,
+                                       chunk_valid=chunk_valid)
         else:
             y, new_cache = L.attention_block(p["mixer"], h, cfg, cache=cache,
                                              pos=pos, window=cfg.window,
-                                             attend_cache=attend_cache)
+                                             attend_cache=attend_cache,
+                                             chunk_valid=chunk_valid)
         x = x + y.astype(x.dtype)
         h2 = L.apply_norm(x, p["norm2"], cfg)
         if cfg.num_experts:
@@ -189,6 +192,7 @@ def forward(
     pos=0,
     license_intervals=None,   # (lo, hi) f32[MAX_INTERVALS] — fused-dequant licensing
     attend_cache: bool = False,  # static: suffix prefill attends cache contents
+    chunk_valid=None,         # scalar or (B,): real rows in a right-padded chunk
     paged_tables: Optional[jnp.ndarray] = None,  # (B, T): kernel-resident decode
     paged_kernel: str = "off",   # static: "off" | "pallas" | "interpret"
 ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Dict[str, Any]]]:
@@ -203,7 +207,11 @@ def forward(
     cache: ``tokens`` are the uncached tail of a prompt whose positions
     ``[0, pos)`` are already resident in ``cache``, and attention reads
     the cache (prefix + this step's writes) instead of only the provided
-    tokens.  Requires a linear (non-ring) cache; see ``attention_block``.
+    tokens.  Linear caches clamp pad writes; windowed (ring) caches take
+    the snapshot-attend path — see ``attention_block``.  ``chunk_valid``
+    gives the number of leading real rows per lane when a chunk is
+    right-padded (keeps ``len`` counters exact and masks ring pad
+    writes); only attention blocks consume it.
 
     ``paged_tables`` selects *kernel-resident paged decode* (one token
     per lane): ``cache`` is the hybrid pytree from
@@ -245,6 +253,7 @@ def forward(
             x, a, nc = _apply_block(unit_params[f"b{j}"], kind, x, cfg,
                                     cache=c, pos=pos,
                                     attend_cache=attend_cache,
+                                    chunk_valid=chunk_valid,
                                     paged_tables=paged_tables,
                                     paged_kernel=paged_kernel)
             aux = aux + a
@@ -291,6 +300,7 @@ def forward(
             x, a, nc = _apply_block(tp, kind, x, cfg,
                                     cache=c, pos=pos,
                                     attend_cache=attend_cache,
+                                    chunk_valid=chunk_valid,
                                     paged_tables=paged_tables,
                                     paged_kernel=paged_kernel)
             aux_total = aux_total + a

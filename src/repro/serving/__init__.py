@@ -12,9 +12,9 @@ prefix.py, and the staged weight-sync state machine (``UpdateStager``)
 that flips license-server version bumps in without stalling a decode
 step lives in updates.py.
 """
-from repro.serving.engine import (Request, ServingEngine, prefill_step,
-                                  prefill_suffix_step, sample, sample_lane,
-                                  serve_step)
+from repro.serving.engine import (Request, ServingEngine, prefill_chunk_step,
+                                  prefill_step, prefill_suffix_step, sample,
+                                  sample_lane, serve_step, stack_lane_caches)
 from repro.serving.gateway import LicensedGateway
 from repro.serving.paging import BlockAllocator, PagedCachePool
 from repro.serving.prefix import PrefixCache
@@ -24,6 +24,7 @@ from repro.serving.updates import UpdateStager
 
 __all__ = [
     "Request", "ServingEngine", "prefill_step", "prefill_suffix_step",
+    "prefill_chunk_step", "stack_lane_caches",
     "sample", "sample_lane", "serve_step", "LicensedGateway",
     "GatewayRequest", "RequestState", "ScheduledAction", "Scheduler",
     "CachePool", "PagedCachePool", "BlockAllocator", "PrefixCache",

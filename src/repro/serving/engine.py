@@ -51,6 +51,50 @@ def prefill_suffix_step(params, cfg: ModelConfig, tokens, cache, pos,
     return logits, cache
 
 
+def stack_lane_caches(cfg: ModelConfig, b: int, capacity: int):
+    """``b`` independent batch-1 caches stacked on a new leading lane
+    axis — the layout :func:`prefill_chunk_step` (and the gateway's
+    vmapped per-lane steps) operates on.  Unlike ``init_cache(cfg, b,
+    capacity)``, every leaf gets the lane axis *first* regardless of
+    where its batch axis sits, so ``vmap`` over axis 0 hands each lane
+    exactly a batch-1 cache."""
+    lane = model_lib.init_cache(cfg, 1, capacity)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (b, *x.shape)), lane)
+
+
+def prefill_chunk_step(params, cfg: ModelConfig, tokens, caches, pos,
+                       chunk_valid=None, license_intervals=None):
+    """Left-aligned chunked prefill: advance each lane's cursor by up to
+    ``chunk_size`` tokens against its own cache.
+
+    ``tokens`` (B, W) holds each lane's next chunk starting at that
+    lane's absolute cursor ``pos`` (B,); lanes whose remaining prompt is
+    shorter than W right-pad the row and report the real row count in
+    ``chunk_valid`` (B,) — pad rows are causally invisible and their
+    cache writes are clamped/masked (see ``attention_block``).
+    ``caches`` is the lane-stacked layout from :func:`stack_lane_caches`;
+    per-lane offsets mean no single batch cache layout fits, so the step
+    vmaps a batch-1 suffix prefill over the lane axis.  Returns the full
+    per-chunk logits (B, W, V) — the caller reads row ``chunk_valid - 1``
+    of the final chunk — and the updated lane caches."""
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+
+    def _one(t, c, po, cv):
+        logits, _, nc = model_lib.forward(
+            params, cfg, t[None], cache=c, pos=po,
+            license_intervals=license_intervals, attend_cache=True,
+            chunk_valid=cv)
+        return logits[0], nc
+
+    if chunk_valid is None:
+        return jax.vmap(lambda t, c, po: _one(t, c, po, None),
+                        in_axes=(0, 0, 0))(tokens, caches, pos)
+    cv = jnp.broadcast_to(jnp.asarray(chunk_valid, jnp.int32), (b,))
+    return jax.vmap(_one, in_axes=(0, 0, 0, 0))(tokens, caches, pos, cv)
+
+
 def serve_step(params, cfg: ModelConfig, tokens, cache, pos,
                license_intervals=None):
     """ONE decode step: tokens (B,1) + cache at fill-level ``pos``.

@@ -12,7 +12,14 @@ Execution model
 ---------------
 Two jitted functions, each compiled once per gateway:
 
-* ``prefill``: ``vmap`` over ``max_batch`` lanes of a batch-1
+* ``prefill``: by default (paged + reconstructible lane state)
+  *left-aligned chunked* — every prompt keeps its true positions from 0
+  and advances up to ``chunk_size`` tokens per prefill action, with
+  chunk actions strictly interleaved against decode steps so no decode
+  ever waits longer than one chunk; the per-lane variable-offset suffix
+  step (``prefill_suffix_step``) is the chunk engine.  The legacy
+  bucket path (``chunk_size=0``, and the fallback for ring/SSM lane
+  state): ``vmap`` over ``max_batch`` lanes of a batch-1
   ``prefill_step`` with a fixed prompt bucket (``max_prompt``); short
   prompts are right-aligned with repeated-first-token padding (same
   trick as ``ServingEngine``).
@@ -55,12 +62,15 @@ pool modes, selected by the ``paged`` config flag:
 
 With paging, a **shared-prefix radix cache** (``serving/prefix.py``,
 ``prefix_cache=True`` default) retains finished prompts' block chains
-per (tier, version) scope: a later request whose padded prompt shares a
-cached prefix adopts those blocks by reference and prefills only the
-uncached suffix (per-lane variable offsets in one vmapped step); shared
-blocks are read-only — decode copy-on-writes a shared tail block before
-its first write into it — and retained chains with no live request are
-evicted LRU-first under allocation pressure.
+per (tier, version) scope: a later request whose prompt shares a cached
+prefix adopts those blocks by reference and prefills only the uncached
+remainder; shared blocks are read-only — decode copy-on-writes a shared
+tail block before its first write into it — and retained chains with no
+live request are evicted LRU-first under allocation pressure.  Under
+chunked prefill the radix keys are the TRUE token ids (left alignment
+puts every prompt's positions at 0..len), so prompts of *different
+lengths* sharing a system prefix share its KV blocks — the padded
+bucket rows of the legacy path could only ever match same-bucket rows.
 
 Licensing integration
 ---------------------
@@ -106,6 +116,11 @@ from repro.serving.paging import NoPagedLeavesError, PagedCachePool, cdiv
 from repro.serving.prefix import PrefixCache
 from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
                                      ScheduledAction, Scheduler, TierViewCache)
+
+
+def _pow2(n: int) -> int:
+    """Smallest power of two >= n (bucketing for jit specialization)."""
+    return 1 << max(0, int(n) - 1).bit_length()
 
 
 def _finish_lane(logits, seed, n_out, temp, top_k, *, fused, with_rng,
@@ -232,11 +247,14 @@ class LicensedGateway:
     max_batch:
         Lanes per micro-batch (the vmap width).
     max_prompt:
-        Prompt bucket; longer prompts are rejected at admission.  Shorter
-        prompts are right-aligned into the bucket with repeated-first-token
-        padding, so absolute positions (and therefore logits) match a
-        ``ServingEngine`` group padded to the same width — not an
-        unpadded shorter run.
+        Maximum prompt length; longer prompts are rejected at admission.
+        Under chunked prefill (default) every prompt is *left-aligned* —
+        its absolute positions run from 0, independent of other lanes —
+        so logits match an unpadded run of the same prompt.  Under the
+        legacy bucket path (``chunk_size=0``) shorter prompts are
+        right-aligned into the bucket with repeated-first-token padding,
+        so absolute positions (and therefore logits) match a
+        ``ServingEngine`` group padded to the same width instead.
     max_new_cap:
         Decode budget per lane; ``max_new_tokens`` is clamped to it.
     paged:
@@ -263,6 +281,20 @@ class LicensedGateway:
         when any per-lane cache state is not a reconstructible position
         counter — SSM/RG-LRU state and sliding-window ring caches cannot
         be seeded from blocks.  ``False`` restores PR 2 behavior exactly.
+    chunk_size:
+        Left-aligned chunked prefill: each prefill action advances every
+        PREFILLING lane by up to ``chunk_size`` prompt tokens, and chunk
+        actions strictly alternate with decode steps — a long prompt
+        never stalls in-flight decodes for more than one chunk, and the
+        radix cache keys on true token ids so prefix reuse crosses
+        prompt-length boundaries.  Default (None): the pool's
+        ``block_size`` when supported (paged pool with reconstructible
+        lane state — the ``prefix_cache`` condition), else 0.  ``0``
+        forces the legacy right-aligned bucket prefill; an explicit
+        positive value on an unsupported model raises.  Values above
+        ``max_prompt`` are clamped.  Smaller chunks bound decode stalls
+        tighter at the cost of more prefill step launches — this is the
+        latency-SLO knob.
     kernel_decode:
         Kernel-resident paged decode (default auto).  Decode runs as ONE
         batched step whose cache operands are the pool's physical block
@@ -311,6 +343,7 @@ class LicensedGateway:
         max_lanes: Optional[int] = None,
         watermark_blocks: int = 0,
         prefix_cache: bool = True,
+        chunk_size: Optional[int] = None,
         kernel_decode: Optional[bool] = None,
         decode_pallas: Optional[str] = None,
         fuse_sampling: bool = True,
@@ -385,17 +418,49 @@ class LicensedGateway:
             self.prefix = (
                 PrefixCache(self.pool.allocator, self.pool.block_size)
                 if prefix_cache and self.pool.prefix_cacheable else None)
+            # left-aligned chunked prefill: prompts advance chunk_size
+            # tokens per prefill action, strictly interleaved with decode
+            # steps.  It needs every per-lane non-paged cache leaf to be
+            # a reconstructible position counter — the same condition as
+            # prefix caching — so ring/SSM lane state opts the model out.
+            chunk_ok = self.pool.prefix_cacheable
+            if chunk_size is None:
+                self.chunk_size = self.pool.block_size if chunk_ok else 0
+            else:
+                self.chunk_size = int(chunk_size)
+                if self.chunk_size > 0 and not chunk_ok:
+                    raise ValueError(
+                        "chunked prefill needs reconstructible per-lane "
+                        "cache state (the prefix_cache condition); this "
+                        "model keeps ring/SSM lane state — pass "
+                        "chunk_size=0 or leave it None")
+            if self.chunk_size > 0:
+                self.chunk_size = min(self.chunk_size, self.max_prompt)
+            self.chunked = self.chunk_size > 0
             self.scheduler = Scheduler(
                 self.max_lanes, self.max_batch,
                 allocator=self.pool.allocator,
-                prefill_blocks=self._prefill_blocks,
+                prefill_blocks=(0 if self.chunked
+                                else self._prefill_blocks),
                 watermark_blocks=int(watermark_blocks),
                 reclaimable=(self.prefix.reclaimable
                              if self.prefix is not None else None),
                 suffix_bucket=(self._suffix_bucket
-                               if self.prefix is not None else None))
+                               if self.prefix is not None
+                               and not self.chunked else None),
+                suffix_revalidate=(self._suffix_bucket_fresh
+                                   if self.prefix is not None
+                                   and not self.chunked else None),
+                chunked=self.chunked,
+                blocks_needed=(self._blocks_needed
+                               if self.chunked else None))
             zero_cap = self.pool.padded_capacity
         else:
+            if chunk_size:
+                raise ValueError(
+                    "chunked prefill requires the paged pool")
+            self.chunk_size = 0
+            self.chunked = False
             self.max_lanes = self.max_batch
             self.pool = CachePool(cfg, self.max_batch, self.capacity)
             self.scheduler = Scheduler(self.max_batch, self.max_batch)
@@ -437,6 +502,8 @@ class LicensedGateway:
             # tokens served from retained blocks, and copy-on-write copies
             "prefill_lane_tokens": 0, "prefix_tokens_reused": 0,
             "cow_copies": 0,
+            # chunked prefill: prefill actions executed (one chunk each)
+            "prefill_chunks": 0,
         }
         # prefix-aware admission: prefill batches served per suffix-width
         # bucket (the grouping decision, exported via metrics())
@@ -552,7 +619,7 @@ class LicensedGateway:
         """Licensed weight view for (tier, version) — cached."""
         return self.views.get(tier, self.version if version is None else version)
 
-    def _suffix_bucket(self, req: GatewayRequest) -> int:
+    def _suffix_bucket(self, req: GatewayRequest, fresh: bool = False) -> int:
         """Prefix-aware admission probe: the uncached suffix width this
         request would prefill at — ``max_prompt`` when cold, down to 1
         for a full match (the last position always recomputes).  Uses
@@ -560,8 +627,15 @@ class LicensedGateway:
         probes never touch LRU order or reference counts, and caches the
         answer on the request keyed by the cache's mutation epoch — a
         deep backlog re-probes only after an insert/evict/drop actually
-        changed what a prompt could match."""
-        cached = getattr(req, "_suffix_probe", None)
+        changed what a prompt could match.
+
+        The cached probe is a scheduling *hint*, not a fact: an eviction
+        between the probe and batch formation (or anything else that
+        desynchronizes the stored epoch from the tree) would let a stale
+        bucket mis-group the batch.  ``fresh=True`` bypasses the cache —
+        the scheduler re-validates every selected member through
+        :meth:`_suffix_bucket_fresh` at formation time."""
+        cached = None if fresh else getattr(req, "_suffix_probe", None)
         if cached is not None and cached[0] == self.prefix.epoch:
             return cached[1]
         toks = right_align([req.prompt], self.max_prompt, 1)[0]
@@ -569,6 +643,16 @@ class LicensedGateway:
         bucket = self.max_prompt - min(matched, self.max_prompt - 1)
         req._suffix_probe = (self.prefix.epoch, bucket)
         return bucket
+
+    def _suffix_bucket_fresh(self, req: GatewayRequest) -> int:
+        """Cache-bypassing probe for batch-formation re-validation."""
+        return self._suffix_bucket(req, fresh=True)
+
+    def _blocks_needed(self, req: GatewayRequest) -> int:
+        """Chunked-admission block budget: blocks covering the TRUE
+        prompt length — conservative, since adopted prefix blocks only
+        reduce the fresh allocation."""
+        return max(1, cdiv(len(req.prompt), self.pool.block_size))
 
     # -------------------------------------------------------------- admission
     def submit(self, prompt, *, license: str = "full", max_new_tokens: int = 16,
@@ -643,7 +727,10 @@ class LicensedGateway:
         act = self.scheduler.next_action()
         if act is not None:
             if act.kind == "prefill":
-                self._run_prefill(act)
+                if self.chunked:
+                    self._run_chunked_prefill(act)
+                else:
+                    self._run_prefill(act)
             else:
                 self._run_decode(act)
         if self._stager is not None and self._stager.active:
@@ -671,13 +758,16 @@ class LicensedGateway:
             self._drain_sink = None
         return drained
 
-    def _sampling_lanes(self, reqs):
+    def _sampling_lanes(self, reqs, width: Optional[int] = None):
         """Per-lane (seed, n_generated, temperature, top_k) arrays for the
-        fused sampler; padding lanes sample junk that is discarded."""
-        seeds = np.zeros(self.max_batch, np.int32)
-        nouts = np.zeros(self.max_batch, np.int32)
-        temps = np.zeros(self.max_batch, np.float32)
-        topks = np.zeros(self.max_batch, np.int32)
+        fused sampler; padding lanes sample junk that is discarded.
+        ``width`` defaults to ``max_batch``; the chunked-prefill path
+        passes its trimmed vmap width."""
+        width = self.max_batch if width is None else width
+        seeds = np.zeros(width, np.int32)
+        nouts = np.zeros(width, np.int32)
+        temps = np.zeros(width, np.float32)
+        topks = np.zeros(width, np.int32)
         for i, r in enumerate(reqs):
             seeds[i] = r.seed
             nouts[i] = len(r.out_tokens)
@@ -724,8 +814,9 @@ class LicensedGateway:
         under concurrent readers (decode CoWs before any real write)."""
         out = tables.copy()
         alloc = self.pool.allocator
+        n_cols = out.shape[1]              # chunked prefill trims columns
         for i, r in enumerate(reqs):
-            for j, b in enumerate(r.blocks):
+            for j, b in enumerate(r.blocks[:n_cols]):
                 if alloc.refcount(b) > 1:
                     out[i, j] = self.pool.null_block
         return out
@@ -850,6 +941,147 @@ class LicensedGateway:
         self.pool.scatter(lane_ids, self._scatter_tables(tables, reqs),
                           lane_caches)
         return outs
+
+    # ------------------------------------------------------ chunked prefill
+    def _run_chunked_prefill(self, act: ScheduledAction) -> None:
+        """One chunked-prefill action: admit newly scheduled requests
+        (adopt cached prefix blocks, allocate the rest, park the cursor
+        past the reused tokens), then advance every member one
+        ``chunk_size`` chunk.  An admission runs its first chunk in the
+        same action, so a prompt no longer than one chunk still reaches
+        its first token in a single step — the legacy one-step-prefill
+        latency."""
+        if act.requests[0].state is not RequestState.PREFILLING:
+            self._admit_chunked(act)
+        self._run_prefill_chunk(act)
+
+    def _admit_chunked(self, act: ScheduledAction) -> None:
+        """Admission half of a chunked prefill: prefix-match every
+        prompt on its TRUE token ids (left alignment gives every prompt
+        absolute positions from 0, so different-length prompts sharing
+        a prefix share its blocks — the cross-length reuse padded
+        bucket rows ruled out), then allocate the uncached remainder.
+        Matching runs for the whole batch BEFORE any allocation:
+        matching increfs the chains, so this batch's own allocation
+        pressure can never evict a block another lane is about to
+        adopt."""
+        scope = (act.tier, act.version)
+        reqs = act.requests
+        matches: List[Tuple[List[int], int]] = []
+        for r in reqs:
+            if self.prefix is not None:
+                blocks, ntok = self.prefix.match(scope, r.prompt)
+            else:
+                blocks, ntok = [], 0
+            # always recompute >= 1 token: the first sampled token needs
+            # the last prompt position's logits
+            capped = min(ntok, len(r.prompt) - 1)
+            if capped == 0 and blocks:
+                # the cap zeroed a real match (1-token prompt): the
+                # chain is unusable — release the match's references
+                for b in blocks:
+                    self._decref_block(b)
+                blocks = []
+            matches.append((blocks, capped))
+        bs = self.pool.block_size
+        for r, (blocks, capped) in zip(reqs, matches):
+            self.scheduler.start(r, prefilling=True)
+            # a partial match adopts only FULL blocks (the radix tree
+            # matches a partial tail only when it covers the whole
+            # prompt), so the uncached suffix starts on a block boundary
+            # and chunk writes never touch a shared block: aligned tails
+            # are CoW-free by construction
+            fresh = self._alloc_blocks(
+                max(0, cdiv(len(r.prompt), bs) - len(blocks)))
+            r.blocks = list(blocks) + fresh
+            r.cursor = capped
+            r.prefix_tokens = capped
+            self.stats["prefix_tokens_reused"] += capped
+        self._note_block_use()
+        self.stats["prefill_batches"] += 1
+        self.stats["max_running"] = max(self.stats["max_running"],
+                                        len(self.scheduler.running))
+
+    def _run_prefill_chunk(self, act: ScheduledAction) -> None:
+        """Advance every member by one left-aligned chunk.
+
+        All lanes share the static ``chunk_size`` width; a lane with
+        fewer tokens left is right-padded with junk whose writes land
+        past its real rows — scattered to the null block beyond its
+        table, or into private rows that the next chunk / first decode
+        write overwrites and the ``len`` counter masks until then.  A
+        lane whose cursor reaches the prompt end emits its first token
+        (the last chunk's selected row is the last prompt position's
+        logits) and enters decode."""
+        view_params, li = self.views.get(act.tier, act.version)
+        reqs = act.requests
+        w = self.chunk_size
+        bs = self.pool.block_size
+        # trim the vmap width and the gathered table to what THIS chunk
+        # can touch: a chunk step must move O(context) bytes, not
+        # O(max_batch * capacity), or one chunk stalls decode far longer
+        # than one decode step and the interleaving SLO is fiction.
+        # Pow2 buckets bound the number of jit specializations to
+        # log2(max_batch) * log2(blocks_per_lane).
+        b = min(self.max_batch, _pow2(len(reqs)))
+        # cols must cover cursor + w INCLUDING junk pad rows: the linear
+        # attend-cache write clamps out-of-range slots onto the last one,
+        # and a junk row colliding with the chunk's final real token
+        # would corrupt the K/V its own last query attends.  Covering
+        # the junk keeps every pad write on a distinct slot strictly
+        # past the real rows (causally unattended, scattered to null).
+        need = max(cdiv(r.cursor + w, bs) for r in reqs)
+        cols = min(self.pool.blocks_per_lane, _pow2(need))
+        sub = np.zeros((b, w), np.int32)
+        poss = np.zeros(b, np.int32)
+        lasts = np.zeros(b, np.int32)
+        fills = np.zeros(b, np.int32)
+        valid = np.zeros(len(reqs), np.int32)
+        for i, r in enumerate(reqs):
+            v = min(w, len(r.prompt) - r.cursor)
+            valid[i] = v
+            sub[i, :v] = r.prompt[r.cursor: r.cursor + v]
+            sub[i, v:] = int(r.prompt[-1])     # right pad: junk region
+            poss[i] = r.cursor
+            lasts[i] = v - 1
+            fills[i] = r.cursor + v
+        seeds, nouts, temps, topks = self._sampling_lanes(reqs, b)
+        lane_ids = self.pool.pad_lanes([r.lane for r in reqs], b)
+        tables = self.pool.pad_tables([r.blocks[:cols] for r in reqs], b,
+                                      n_cols=cols)
+        # per-lane counters are pinned to the true fill below, and the
+        # attend-cache step masks positionally — fresh lane state is
+        # correct for EVERY chunk, not just the first
+        caches = self.pool.gather(lane_ids, tables, fresh_lane_state=True)
+        prefill = self._prefix_steps(reqs)
+        outs, lane_caches = prefill(view_params, jnp.asarray(sub), caches,
+                                    jnp.asarray(poss), jnp.asarray(lasts),
+                                    seeds, nouts, temps, topks, li)
+        lane_caches = self.pool.override_counters(lane_caches,
+                                                  jnp.asarray(fills))
+        self.pool.scatter(lane_ids, self._scatter_tables(tables, reqs),
+                          lane_caches)
+        self.stats["prefill_lane_tokens"] += w * len(reqs)
+        self.stats["prefill_chunks"] += 1
+        outs = np.asarray(outs)
+        now = time.perf_counter()
+        scope = (act.tier, act.version)
+        for i, r in enumerate(reqs):
+            r.cursor += int(valid[i])
+            if r.cursor < len(r.prompt):
+                continue
+            r.state = RequestState.RUNNING
+            r.pos = len(r.prompt)
+            r.first_token_t = now
+            if self.prefix is not None:
+                # donate the TRUE-token chain (full blocks + partial
+                # tail) so any future prompt sharing the prefix — at any
+                # length — adopts it
+                self.prefix.insert(scope, r.prompt, r.blocks)
+            if self.fuse_sampling:
+                self._emit(r, tok=int(outs[i]))
+            else:
+                self._emit(r, logits_row=outs[i])
 
     def _try_alloc_one(self) -> Optional[int]:
         """One block from the free list, reclaiming retained prefix chains
@@ -1214,8 +1446,15 @@ class LicensedGateway:
         out["staged_update"] = ({"active": False} if self._stager is None
                                 else {"active": self._stager.active,
                                       **self._stager.stats()})
+        out["chunked_prefill"] = {
+            "enabled": self.chunked, "chunk_size": self.chunk_size,
+            # prefill actions executed (one chunk each); decode steps
+            # never wait longer than one of these
+            "chunks": self.stats["prefill_chunks"]}
         out["admission_grouping"] = {
-            "enabled": self.prefix is not None,
+            # suffix-width bucketing is the LEGACY bucket-prefill
+            # grouping; chunked mode admits per true prompt length
+            "enabled": self.prefix is not None and not self.chunked,
             # prefill batches served per shared uncached-suffix width: a
             # full-match batch shows up under width 1, never padded to a
             # cold batch's max_prompt

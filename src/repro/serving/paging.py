@@ -427,20 +427,32 @@ class PagedCachePool:
                 out.append(arr)
         self._storage = out
 
-    def override_counters(self, caches: Any, value: int) -> Any:
+    def override_counters(self, caches: Any, value) -> Any:
         """Set every non-paged integer leaf (position counters) to ``value``.
 
-        The suffix prefill runs only ``W`` uncached tokens per lane, so
-        the model's ``len`` accounting comes out as ``W`` (or junk for
-        padded lanes) instead of the true logical fill; the gateway pins
-        it to the prompt bucket before scattering.  Valid exactly because
+        The suffix/chunked prefill runs only ``W`` uncached tokens per
+        lane, so the model's ``len`` accounting comes out as ``W`` (or
+        junk for padded lanes) instead of the true logical fill; the
+        gateway pins it to the real fill before scattering.  ``value``
+        may be a scalar (every lane gets it — the bucketed suffix path)
+        or a (B,) array of per-lane fills (the left-aligned chunked path,
+        where every lane's cursor differs).  Valid exactly because
         ``prefix_cacheable`` guarantees non-paged leaves are counters."""
         leaves, treedef = jax.tree_util.tree_flatten(caches)
         assert treedef == self._treedef
-        out = [jnp.full_like(leaf, value)
-               if not paged and jnp.issubdtype(leaf.dtype, jnp.integer)
-               else leaf
-               for leaf, (paged, _, _) in zip(leaves, self._meta)]
+        val = jnp.asarray(value, jnp.int32)
+        out = []
+        for leaf, (paged, _, _) in zip(leaves, self._meta):
+            if not paged and jnp.issubdtype(leaf.dtype, jnp.integer):
+                if val.ndim == 0:
+                    out.append(jnp.full_like(leaf, value))
+                else:
+                    # gathered non-paged leaves carry the lane axis first:
+                    # (B, *batch1_leaf_shape)
+                    v = val.reshape((val.shape[0],) + (1,) * (leaf.ndim - 1))
+                    out.append(jnp.broadcast_to(v, leaf.shape).astype(leaf.dtype))
+            else:
+                out.append(leaf)
         return jax.tree_util.tree_unflatten(treedef, out)
 
     def stats(self) -> Dict[str, int]:

@@ -13,10 +13,15 @@ on top of the vLLM-style block pool in ``serving/paging.py``):
   activations of a *masked weight view*, so a ``free``-tier prefix must
   never seed a ``pro``-tier request even when the tokens match —
   cross-tier reuse would leak the better view's representations.  Each
-  tree node covers one physical block (up to ``block_size`` tokens;
-  the last node of a chain may be *partial* — prompt buckets are fixed
-  per scope, so partial fills only ever terminate a chain and never
-  need splitting).
+  tree node covers one physical block (up to ``block_size`` tokens; the
+  last node of a chain may be *partial*).  Keys are whatever token rows
+  the gateway donates: under chunked prefill these are TRUE unpadded
+  prompts, so chains match across prompt-*length* boundaries — any
+  prompt sharing a full-block prefix adopts it, whatever its own
+  length.  A partial tail node matches only when it covers the
+  remaining tokens *exactly* (:meth:`_walk`), which is what lets
+  partial fills terminate a chain without ever needing node splitting:
+  a shorter or diverging prompt simply stops at the last full block.
 * Retention holds one allocator **reference** per tree-referenced
   block.  A block whose refcount is exactly 1 is held by the tree alone
   ("refcount-0" from the requests' point of view) and is *reclaimable*.

@@ -47,6 +47,7 @@ from repro.serving.paging import pad_lane_ids
 
 class RequestState(str, Enum):
     QUEUED = "queued"        # admitted, waiting for a free lane
+    PREFILLING = "prefilling"  # holds a lane, prompt chunking through
     RUNNING = "running"      # prefilled, holds a lane, decoding
     DONE = "done"            # produced max_new_tokens
     REJECTED = "rejected"    # failed admission (unknown tier / bad prompt)
@@ -78,6 +79,8 @@ class GatewayRequest:
     blocks: List[int] = field(default_factory=list)  # paged-pool block table
     prefix_tokens: int = 0                   # prompt tokens served from the
                                              # prefix cache at prefill
+    cursor: int = 0                          # prompt tokens already prefilled
+                                             # (chunked prefill progress)
     pos: int = 0                             # next decode position
     start_seq: int = -1                      # admission order (preemption age)
     preemptions: int = 0
@@ -259,6 +262,13 @@ class Scheduler:
       queue (it keeps its original ``submit_t``, so aging re-admits it
       first) — the gateway invokes it on the youngest running request
       when the block pool is exhausted mid-decode.
+    * ``chunked=True`` switches to the left-aligned chunked-prefill
+      policy: admitted requests enter PREFILLING and advance one chunk
+      per prefill action, strictly alternating with decode steps over
+      the RUNNING set — the bounded-stall guarantee that no decode step
+      waits longer than one chunk.  Admission budgets blocks per request
+      via ``blocks_needed`` (true prompt length) instead of the flat
+      worst-case ``prefill_blocks``.
     """
 
     def __init__(self, num_lanes: int, max_batch: int, *,
@@ -266,6 +276,11 @@ class Scheduler:
                  watermark_blocks: int = 0,
                  reclaimable: Optional[Callable[[], int]] = None,
                  suffix_bucket: Optional[
+                     Callable[[GatewayRequest], int]] = None,
+                 suffix_revalidate: Optional[
+                     Callable[[GatewayRequest], int]] = None,
+                 chunked: bool = False,
+                 blocks_needed: Optional[
                      Callable[[GatewayRequest], int]] = None):
         self.num_lanes = int(num_lanes)
         self.max_batch = int(max_batch)
@@ -283,12 +298,26 @@ class Scheduler:
         # up to the cold lane's full width — grouping by bucket keeps
         # each micro-batch at its own (narrow) width instead.
         self.suffix_bucket = suffix_bucket
+        # fresh (cache-bypassing) probe used to re-validate members at
+        # batch formation: a cached probe taken before an eviction can
+        # report a bucket the radix tree no longer backs, and admitting
+        # on it would mis-group the batch
+        self.suffix_revalidate = suffix_revalidate
+        # chunked mode: admitted requests enter PREFILLING and their
+        # prompts advance chunk-by-chunk, strictly alternating with
+        # decode steps (no decode waits longer than one chunk)
+        self.chunked = bool(chunked)
+        # per-request block need (chunked admission budgets per prompt
+        # length instead of the flat worst-case ``prefill_blocks``)
+        self.blocks_needed = blocks_needed
         self.waiting: Deque[GatewayRequest] = deque()
         self.running: List[GatewayRequest] = []
         self._free_lanes: List[int] = list(range(num_lanes))
         self._rr = 0
+        self._chunk_rr = 0
         self._group_cursor: Dict[Hashable, int] = {}
         self._start_seq = 0
+        self._last_prefill = False
 
     # ----------------------------------------------------------- bookkeeping
     def submit(self, req: GatewayRequest) -> None:
@@ -298,11 +327,13 @@ class Scheduler:
     def free_lanes(self) -> int:
         return len(self._free_lanes)
 
-    def start(self, req: GatewayRequest) -> int:
-        """Move a request to RUNNING, assigning it a lane."""
+    def start(self, req: GatewayRequest, *, prefilling: bool = False) -> int:
+        """Move a request to RUNNING (or PREFILLING, when its prompt will
+        chunk through over several steps), assigning it a lane."""
         lane = self._free_lanes.pop()
         req.lane = lane
-        req.state = RequestState.RUNNING
+        req.state = (RequestState.PREFILLING if prefilling
+                     else RequestState.RUNNING)
         req.start_seq = self._start_seq
         self._start_seq += 1
         self.running.append(req)
@@ -330,6 +361,7 @@ class Scheduler:
             self._free_lanes.append(req.lane)
         req.lane = None
         req.pos = 0
+        req.cursor = 0
         req.prefix_tokens = 0
         req.out_tokens.clear()
         if req.logits_rows is not None:
@@ -388,55 +420,130 @@ class Scheduler:
         return room
 
     def next_action(self) -> Optional[ScheduledAction]:
-        room = self._prefill_room()
-        if room and self.waiting:
-            # aging: serve the group whose oldest member arrived first;
-            # deque position breaks ties (plain FIFO when ages are equal)
-            oldest: Dict[Tuple, Tuple[float, int]] = {}
-            for i, r in enumerate(self.waiting):
-                cand = (r.submit_t, i)
-                if r.group_key not in oldest or cand < oldest[r.group_key]:
-                    oldest[r.group_key] = cand
-            key = min(oldest, key=lambda k: oldest[k])
-            bucket: Optional[int] = None
-            probed: Dict[int, int] = {}          # id(req) -> bucket, one
-                                                 # probe per request per pass
-            if self.suffix_bucket is not None:
+        if self.chunked:
+            return self._next_action_chunked()
+        act = self._admission_batch()
+        if act is not None:
+            return act
+        return self._decode_action()
 
-                def _bucket(r: GatewayRequest) -> int:
-                    got = probed.get(id(r))
-                    if got is None:
-                        got = probed[id(r)] = self.suffix_bucket(r)
-                    return got
-
-                # the oldest member defines the batch's suffix width;
-                # same-key requests with a different cached-suffix bucket
-                # wait for their own batch rather than padding this one
-                bucket = _bucket(self.waiting[oldest[key][1]])
-            batch: List[GatewayRequest] = []
-            remaining: Deque[GatewayRequest] = deque()
-            for r in self.waiting:               # one pass: select + requeue
-                if len(batch) < room and r.group_key == key and (
-                        bucket is None or _bucket(r) == bucket):
-                    batch.append(r)
-                else:
-                    remaining.append(r)
-            self.waiting = remaining
-            return ScheduledAction("prefill", key[0], key[1], batch,
-                                   suffix_bucket=bucket)
-
-        if self.running:
-            groups: Dict[Hashable, List[GatewayRequest]] = {}
-            for r in self.running:
-                groups.setdefault(r.group_key, []).append(r)
-            keys = sorted(groups, key=str)
-            key = keys[self._rr % len(keys)]
-            self._rr += 1
-            members = groups[key]
-            if len(members) > self.max_batch:
-                cur = self._group_cursor.get(key, 0) % len(members)
-                members = (members + members)[cur:cur + self.max_batch]
-                self._group_cursor[key] = cur + self.max_batch
-            return ScheduledAction("decode", key[0], key[1], list(members))
-
+    def _next_action_chunked(self) -> Optional[ScheduledAction]:
+        """Chunked-prefill policy: strict alternation between prefill
+        chunks (continuing PREFILLING requests first, admitting new ones
+        otherwise) and decode steps, so no decode step ever waits longer
+        than one chunk and no prefill starves behind a decode stream."""
+        chunking = [r for r in self.running
+                    if r.state is RequestState.PREFILLING]
+        decoding = [r for r in self.running
+                    if r.state is RequestState.RUNNING]
+        if self._last_prefill and decoding:
+            self._last_prefill = False
+            return self._decode_action()
+        act = (self._chunk_action(chunking) if chunking
+               else self._admission_batch())
+        if act is not None:
+            self._last_prefill = True
+            return act
+        if decoding:
+            self._last_prefill = False
+            return self._decode_action()
         return None
+
+    def _chunk_action(self, chunking: List[GatewayRequest]) -> ScheduledAction:
+        """Continue mid-prefill requests: round-robin over their (tier,
+        version) groups, rotating within a group past ``max_batch``."""
+        groups: Dict[Hashable, List[GatewayRequest]] = {}
+        for r in chunking:
+            groups.setdefault(r.group_key, []).append(r)
+        keys = sorted(groups, key=str)
+        key = keys[self._chunk_rr % len(keys)]
+        self._chunk_rr += 1
+        members = groups[key]
+        if len(members) > self.max_batch:
+            cur = self._group_cursor.get(("chunk", key), 0) % len(members)
+            members = (members + members)[cur:cur + self.max_batch]
+            self._group_cursor[("chunk", key)] = cur + self.max_batch
+        return ScheduledAction("prefill", key[0], key[1], list(members))
+
+    def _admission_batch(self) -> Optional[ScheduledAction]:
+        room = self._prefill_room()
+        if not (room and self.waiting):
+            return None
+        # aging: serve the group whose oldest member arrived first;
+        # deque position breaks ties (plain FIFO when ages are equal)
+        oldest: Dict[Tuple, Tuple[float, int]] = {}
+        for i, r in enumerate(self.waiting):
+            cand = (r.submit_t, i)
+            if r.group_key not in oldest or cand < oldest[r.group_key]:
+                oldest[r.group_key] = cand
+        key = min(oldest, key=lambda k: oldest[k])
+        bucket: Optional[int] = None
+        anchor: Optional[GatewayRequest] = None
+        probed: Dict[int, int] = {}          # id(req) -> bucket, one
+                                             # probe per request per pass
+        if self.suffix_bucket is not None:
+
+            def _bucket(r: GatewayRequest) -> int:
+                got = probed.get(id(r))
+                if got is None:
+                    got = probed[id(r)] = self.suffix_bucket(r)
+                return got
+
+            # the oldest member defines the batch's suffix width;
+            # same-key requests with a different cached-suffix bucket
+            # wait for their own batch rather than padding this one.
+            # The anchor's probe is taken fresh when a revalidator is
+            # wired: a stale cached bucket must not define the batch.
+            anchor = self.waiting[oldest[key][1]]
+            if self.suffix_revalidate is not None:
+                bucket = probed[id(anchor)] = self.suffix_revalidate(anchor)
+            else:
+                bucket = _bucket(anchor)
+        budget: Optional[int] = None
+        if self.allocator is not None and self.blocks_needed is not None:
+            budget = self.allocator.num_free - self.watermark_blocks
+            if self.reclaimable is not None:
+                budget += self.reclaimable()
+        batch: List[GatewayRequest] = []
+        remaining: Deque[GatewayRequest] = deque()
+        for r in self.waiting:               # one pass: select + requeue
+            take = (len(batch) < room and r.group_key == key and
+                    (bucket is None or _bucket(r) == bucket))
+            if (take and bucket is not None and r is not anchor
+                    and self.suffix_revalidate is not None):
+                # re-validate at formation: the cached probe may predate
+                # an eviction that shrank this request's cached prefix
+                fresh = probed[id(r)] = self.suffix_revalidate(r)
+                take = fresh == bucket
+            if take and budget is not None:
+                need = self.blocks_needed(r)
+                take = need <= budget
+                if take:
+                    budget -= need
+            if take:
+                batch.append(r)
+            else:
+                remaining.append(r)
+        if not batch:
+            self.waiting = remaining
+            return None
+        self.waiting = remaining
+        return ScheduledAction("prefill", key[0], key[1], batch,
+                               suffix_bucket=bucket)
+
+    def _decode_action(self) -> Optional[ScheduledAction]:
+        pool = [r for r in self.running if r.state is RequestState.RUNNING]
+        if not pool:
+            return None
+        groups: Dict[Hashable, List[GatewayRequest]] = {}
+        for r in pool:
+            groups.setdefault(r.group_key, []).append(r)
+        keys = sorted(groups, key=str)
+        key = keys[self._rr % len(keys)]
+        self._rr += 1
+        members = groups[key]
+        if len(members) > self.max_batch:
+            cur = self._group_cursor.get(key, 0) % len(members)
+            members = (members + members)[cur:cur + self.max_batch]
+            self._group_cursor[key] = cur + self.max_batch
+        return ScheduledAction("decode", key[0], key[1], list(members))

@@ -1,0 +1,403 @@
+"""Left-aligned chunked prefill: the differential equivalence harness.
+
+Chunked prefill (``engine.prefill_chunk_step`` / the gateway's
+PREFILLING state) must be *invisible* in the logits: feeding a prompt in
+W-token chunks against a resident cache has to reproduce the one-shot
+prefill within 1e-5 — for every cache layout the serving stack supports.
+Property tests drive prompt lengths x chunk sizes x tier mixes through
+both the engine-level step and full gateway streams; fixed tests pin the
+``attend_cache`` corners (chunk landing exactly on a block boundary,
+single-token final chunk, ring/window snapshot path, int8 KV
+requantization) and the preempt-mid-prefill recompute restart.
+
+Reference notes (why not every config compares against ``prefill_step``):
+  * fp linear / MLA / plain ring: one-shot ``prefill_step`` IS the
+    reference — the chunked path must match it.
+  * int8 KV: ``prefill_step`` attends the *raw* fp K/V of the chunk
+    being written, while ``attend_cache`` attends what the cache will
+    actually hold — the dequantized int8 round trip.  The faithful
+    reference is a single whole-prompt ``attend_cache`` chunk (identical
+    per-token quantization, so multi-chunk must match it exactly);
+    against raw-fp prefill only a loose quantization-noise bound holds.
+  * ring + int8 composes both, so the reference is the single-chunk
+    ``attend_cache`` run as well.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                           # keep the module collectable
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config, smoke_variant
+from repro.core.licensing import LicenseTier
+from repro.models import init_params
+from repro.models import model as model_lib
+from repro.serving import LicensedGateway, RequestState
+from repro.serving.engine import (prefill_chunk_step, prefill_step,
+                                  stack_lane_caches)
+
+CAP = 16
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def mla():
+    cfg = smoke_variant(get_config("deepseek-v2-lite-16b"))
+    return cfg, init_params(jax.random.PRNGKey(1), cfg)
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = smoke_variant(get_config("recurrentgemma-2b"))
+    assert cfg.window > 0                     # the ring/window path
+    return cfg, init_params(jax.random.PRNGKey(2), cfg)
+
+
+TIERS = {
+    "free": LicenseTier(name="free", masks={"*": ((0.0, 0.004),)}),
+    "pro": LicenseTier(name="pro", masks={"*": ((0.0, 0.002),)}),
+}
+
+
+def _prompt(seed, n):
+    return np.random.default_rng(seed).integers(0, 500, n, dtype=np.int32)
+
+
+def _chunked_lane(params, cfg, prompt, chunk, capacity=CAP):
+    """Prefill one lane in left-aligned ``chunk``-token pieces; returns
+    the last real token's logits (what decode would condition on)."""
+    caches = stack_lane_caches(cfg, 1, capacity)
+    cur, n, last = 0, len(prompt), None
+    while cur < n:
+        v = min(chunk, n - cur)
+        row = np.full((1, chunk), int(prompt[-1]), np.int32)
+        row[0, :v] = prompt[cur:cur + v]
+        logits, caches = prefill_chunk_step(
+            params, cfg, jnp.asarray(row), caches,
+            jnp.asarray([cur], np.int32),
+            chunk_valid=jnp.asarray([v], np.int32))
+        last = np.asarray(logits)[0, v - 1]
+        cur += v
+    return last
+
+
+def _one_shot(params, cfg, prompt, capacity=CAP):
+    cache = model_lib.init_cache(cfg, 1, capacity)
+    logits, _ = prefill_step(params, cfg, jnp.asarray(prompt)[None], cache)
+    return np.asarray(logits)[0]
+
+
+# ----------------------------------------------------- engine differential
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 12), chunk=st.sampled_from([1, 2, 3, 4, 5, 8]))
+def test_chunked_matches_one_shot_prefill(qwen, n, chunk):
+    """Property: any (prompt length, chunk size) reproduces the one-shot
+    last-token logits on the linear GQA cache."""
+    cfg, params = qwen
+    p = _prompt(31 * n + chunk, n)
+    got = _chunked_lane(params, cfg, p, chunk)
+    want = _one_shot(params, cfg, p)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("n,chunk", [
+    (12, 4),   # final chunk lands exactly on a chunk/block boundary
+    (9, 4),    # single-token final chunk
+    (4, 4),    # whole prompt in one chunk (degenerate == one-shot)
+    (7, 16),   # chunk wider than the prompt (gateway clamp case)
+])
+def test_attend_cache_boundary_edges(qwen, n, chunk):
+    """The ``attend_cache`` write-offset edges: exact-boundary chunks,
+    a 1-token tail, and a chunk wider than the remaining prompt."""
+    cfg, params = qwen
+    p = _prompt(100 + n, n)
+    got = _chunked_lane(params, cfg, p, chunk)
+    want = _one_shot(params, cfg, p)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("n,chunk", [(12, 4), (9, 4), (11, 5)])
+def test_chunked_matches_one_shot_mla(mla, n, chunk):
+    """MLA's compressed c_kv/k_rope cache chunk-prefills to the same
+    logits as its one-shot prefill."""
+    cfg, params = mla
+    p = _prompt(200 + n, n)
+    got = _chunked_lane(params, cfg, p, chunk)
+    want = _one_shot(params, cfg, p)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("n,chunk", [(40, 8), (40, 7), (33, 32), (34, 5)])
+def test_chunked_matches_one_shot_window(gemma, n, chunk):
+    """Ring (sliding-window) caches: chunked prefill past the window
+    wraps the ring via the snapshot-attend path and must still match the
+    legacy whole-sequence windowed prefill."""
+    cfg, params = gemma
+    assert n > cfg.window                     # the ring actually wraps
+    p = _prompt(300 + n + chunk, n)
+    got = _chunked_lane(params, cfg, p, chunk, capacity=48)
+    want = _one_shot(params, cfg, p, capacity=48)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
+
+
+@pytest.mark.parametrize("n,chunk", [(12, 4), (9, 4), (11, 5)])
+def test_chunked_int8_kv_matches_one_shot_attend(qwen, n, chunk):
+    """int8 KV: chunk boundaries must not change what gets quantized —
+    multi-chunk equals the single-chunk ``attend_cache`` run exactly
+    (same per-token scales), and sits within quantization noise of the
+    raw-fp one-shot."""
+    cfg, params = qwen
+    cfg = cfg.replace(kv_cache_int8=True)
+    p = _prompt(400 + n, n)
+    got = _chunked_lane(params, cfg, p, chunk)
+    want = _chunked_lane(params, cfg, p, len(p))   # one-shot attend_cache
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=0)
+    raw = _one_shot(params, cfg, p)
+    scale = max(1e-3, float(np.abs(raw).max()))
+    assert float(np.abs(got - raw).max()) / scale < 0.2
+
+
+def test_chunked_window_int8_self_consistent(gemma):
+    """ring + int8 composed: no raw-fp one-shot reference exists (the
+    legacy path quantizes only the retained window), so pin cross-chunk-
+    size self-consistency instead."""
+    cfg, params = gemma
+    cfg = cfg.replace(kv_cache_int8=True)
+    p = _prompt(500, 40)
+    a = _chunked_lane(params, cfg, p, 5, capacity=48)
+    b = _chunked_lane(params, cfg, p, 9, capacity=48)
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=0)
+
+
+def test_multilane_mixed_lengths_vmapped(qwen):
+    """One ``prefill_chunk_step`` batch with per-lane cursors: lanes of
+    different lengths advance together (finished lanes harmlessly refeed
+    their final token, as the gateway's pad rows do) and each lane's
+    completion logits match its own one-shot prefill."""
+    cfg, params = qwen
+    lens, chunk, b = [5, 9, 12], 4, 3
+    prompts = [_prompt(600 + i, n) for i, n in enumerate(lens)]
+    caches = stack_lane_caches(cfg, b, CAP)
+    cursors = [0] * b
+    final = [None] * b
+    while any(c < n for c, n in zip(cursors, lens)):
+        rows = np.zeros((b, chunk), np.int32)
+        poss = np.zeros(b, np.int32)
+        valid = np.zeros(b, np.int32)
+        for i in range(b):
+            if cursors[i] < lens[i]:
+                start, v = cursors[i], min(chunk, lens[i] - cursors[i])
+            else:                             # done: rewrite the last token
+                start, v = lens[i] - 1, 1
+            valid[i] = v
+            rows[i, :] = int(prompts[i][-1])
+            rows[i, :v] = prompts[i][start:start + v]
+            poss[i] = start
+        logits, caches = prefill_chunk_step(
+            params, cfg, jnp.asarray(rows), caches,
+            jnp.asarray(poss), chunk_valid=jnp.asarray(valid))
+        logits = np.asarray(logits)
+        for i in range(b):
+            if cursors[i] < lens[i]:
+                cursors[i] += int(valid[i])
+                if cursors[i] == lens[i]:
+                    final[i] = logits[i, valid[i] - 1]
+    for i in range(b):
+        want = _one_shot(params, cfg, prompts[i])
+        np.testing.assert_allclose(final[i], want, atol=1e-5, rtol=0)
+
+
+# ---------------------------------------------------- gateway differential
+def _gateway(setup, **kw):
+    cfg, params = setup
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_prompt", 12)
+    kw.setdefault("max_new_cap", 6)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("record_logits", True)
+    return LicensedGateway(cfg, params, tiers=TIERS, **kw)
+
+
+def _drain(gw, work, max_new=3):
+    reqs = [gw.submit(p, license=t, max_new_tokens=max_new) for p, t in work]
+    gw.run()
+    assert all(r.state == RequestState.DONE for r in reqs), \
+        [r.error for r in reqs]
+    return reqs
+
+
+def _truth_stream(gw, prompt, tier, max_new):
+    """Greedy ground truth: full re-forward of the TRUE prompt (+ the
+    tokens generated so far) through the request's licensed view."""
+    view, li = gw.views.get(tier, gw.version)
+    toks, out, rows = list(int(t) for t in prompt), [], []
+    for _ in range(max_new):
+        logits, _, _ = model_lib.forward(
+            view, gw.cfg, jnp.asarray(toks, jnp.int32)[None, :],
+            license_intervals=li)
+        row = np.asarray(logits[0, -1])
+        rows.append(row)
+        out.append(int(row.argmax()))
+        toks.append(out[-1])
+    return out, rows
+
+
+@settings(max_examples=6, deadline=None)
+@given(spec=st.lists(st.tuples(st.integers(2, 12),
+                               st.sampled_from(["free", "pro", "full"])),
+                     min_size=2, max_size=5),
+       chunk=st.sampled_from([1, 3, 4, 8]),
+       seed=st.integers(0, 10_000))
+def test_gateway_chunked_matches_true_prompt_stream(qwen, spec, chunk, seed):
+    """Property: a mixed-length, mixed-tier stream served by the chunked
+    gateway produces the TRUE prompt's greedy tokens and per-step logits
+    within 1e-5 — for every prompt length, not just full-width ones.
+
+    (The legacy bucket path is NOT the reference here: it serves the
+    prompt right-padded to ``max_prompt``, so for short prompts its
+    logits are conditioned on junk pad tokens.  Chunked prefill serving
+    the true tokens is the fix, verified against a from-scratch forward.)
+    """
+    work = [(_prompt(seed + i, n), t) for i, (n, t) in enumerate(spec)]
+    gw = _gateway(qwen, chunk_size=chunk)
+    reqs = _drain(gw, work)
+    for (p, tier), r in zip(work, reqs):
+        toks, rows = _truth_stream(gw, p, tier, len(r.out_tokens))
+        assert r.out_tokens == toks
+        for la, lb in zip(r.logits_rows, rows):
+            np.testing.assert_allclose(la, lb, atol=1e-5, rtol=0)
+
+
+def test_gateway_chunked_matches_legacy_at_full_width(qwen):
+    """At full ``max_prompt`` width the legacy bucket path serves the
+    true tokens too, so chunked and legacy streams must coincide — and
+    both must equal the ground-truth greedy stream (runs without
+    hypothesis, so the gateway differential is always exercised)."""
+    work = [(_prompt(40 + i, 12), t)
+            for i, t in enumerate(["free", "pro", "free"])]
+    for chunk in (1, 4, 8):
+        gw = _gateway(qwen, chunk_size=chunk)
+        a = _drain(gw, work)
+        b = _drain(_gateway(qwen, chunk_size=0), work)
+        for (p, tier), ra, rb in zip(work, a, b):
+            assert ra.out_tokens == rb.out_tokens
+            toks, rows = _truth_stream(gw, p, tier, len(ra.out_tokens))
+            assert ra.out_tokens == toks
+            for la, lb, lt in zip(ra.logits_rows, rb.logits_rows, rows):
+                np.testing.assert_allclose(la, lb, atol=1e-5, rtol=0)
+                np.testing.assert_allclose(la, lt, atol=1e-5, rtol=0)
+
+
+def test_preempt_mid_prefill_restarts_equivalently(qwen):
+    """A request preempted with its prompt half-chunked restarts from
+    cursor 0 on re-admission and reproduces the uncontended tokens."""
+    p = _prompt(7, 12)
+    want = _drain(_gateway(qwen, chunk_size=4), [(p, "free")])[0]
+
+    gw = _gateway(qwen, chunk_size=4)
+    r = gw.submit(p, license="free", max_new_tokens=3)
+    for _ in range(100):
+        if r.state is RequestState.PREFILLING and 0 < r.cursor < len(p):
+            break
+        gw.step()
+    assert r.state is RequestState.PREFILLING and 0 < r.cursor < len(p)
+    gw._preempt(r)
+    assert r.state is RequestState.QUEUED and r.cursor == 0
+    assert gw.stats["preempted"] == 1
+    gw.run()
+    assert r.state == RequestState.DONE and r.preemptions == 1
+    assert r.out_tokens == want.out_tokens
+    for la, lb in zip(r.logits_rows, want.logits_rows):
+        np.testing.assert_allclose(la, lb, atol=1e-5, rtol=0)
+    assert gw.pool.allocator.num_held == 0 or gw.prefix is not None
+
+
+# ------------------------------------------------ length-independent reuse
+def test_prefix_reuse_across_prompt_lengths(qwen):
+    """The radix cache keys on TRUE token ids: a second request sharing
+    the system prompt but with a different-length user suffix hits the
+    same chain — across what the legacy right-aligned keys treated as
+    incompatible pad layouts — and block-aligned tails adopt with zero
+    copy-on-write."""
+    head = _prompt(800, 8)                    # 2 full blocks of 4
+    a = np.concatenate([head, _prompt(801, 4)])    # len 12, aligned tail
+    b = np.concatenate([head, _prompt(802, 8)])    # len 16 — other length
+
+    gw = _gateway(qwen, max_prompt=16)
+    assert gw.chunked and gw.chunk_size == 4
+    _drain(gw, [(a, "free")], max_new=2)
+    ra, = _drain(gw, [(b, "free")], max_new=2)
+    assert ra.prefix_tokens == len(head)
+    pm = gw.metrics()["prefix_cache"]
+    assert pm["hits"] >= 1
+    assert pm["prefix_tokens_reused"] >= len(head)
+    assert pm["cow_copies"] == 0              # aligned tails: no CoW ever
+    cm = gw.metrics()["chunked_prefill"]
+    assert cm["enabled"] and cm["chunks"] >= 3 + 2
+
+    # contrast: legacy right-aligned keys cannot match across lengths
+    gw0 = _gateway(qwen, max_prompt=16, chunk_size=0)
+    _drain(gw0, [(a, "free")], max_new=2)
+    _drain(gw0, [(b, "free")], max_new=2)
+    assert gw0.metrics()["prefix_cache"]["prefix_tokens_reused"] == 0
+
+
+# --------------------------------------------------------- config gating
+def test_chunk_size_gating(qwen, gemma):
+    """Explicit ``chunk_size`` on unsupported layouts must refuse loudly;
+    the window model silently falls back to legacy one-shot prefill."""
+    cfg, params = qwen
+    with pytest.raises(ValueError, match="paged"):
+        LicensedGateway(cfg, params, tiers=TIERS, max_batch=2, max_prompt=8,
+                        max_new_cap=4, paged=False, chunk_size=4)
+    wcfg, wparams = gemma
+    gw = LicensedGateway(wcfg, wparams, tiers=TIERS, max_batch=2,
+                         max_prompt=8, max_new_cap=4, block_size=4)
+    assert not gw.chunked
+    assert gw.metrics()["chunked_prefill"]["enabled"] is False
+    with pytest.raises(ValueError, match="chunk"):
+        LicensedGateway(wcfg, wparams, tiers=TIERS, max_batch=2,
+                        max_prompt=8, max_new_cap=4, block_size=4,
+                        chunk_size=4)
+
+
+# ------------------------------------------------------------ long context
+@pytest.mark.long_context
+@pytest.mark.slow
+def test_long_prompt_chunks_interleave_with_decode(qwen):
+    """A 4k-token prompt chunks through while short requests keep
+    decoding: between consecutive chunk steps of the long prefill the
+    scheduler always runs a decode step when decodes are runnable — the
+    bounded-stall guarantee the SLO knob buys."""
+    cfg, params = qwen
+    n = 4096
+    gw = LicensedGateway(cfg, params, tiers=TIERS, max_batch=2,
+                         max_prompt=n, max_new_cap=64, block_size=64,
+                         chunk_size=256, num_blocks=80, max_lanes=4)
+    short = [gw.submit(_prompt(i, 32), license="free", max_new_tokens=48)
+             for i in range(2)]
+    gw.step()                                  # admit + first short chunk
+    long = gw.submit(_prompt(99, n), license="free", max_new_tokens=2)
+    kinds = []
+    while gw.scheduler.running or gw.scheduler.waiting:
+        act = gw.step()
+        if act is None:
+            break
+        decodes_live = any(r.state is RequestState.RUNNING
+                           for r in gw.scheduler.running)
+        kinds.append((act.kind, decodes_live))
+    assert long.state == RequestState.DONE
+    assert all(r.state == RequestState.DONE for r in short)
+    # no two consecutive prefill chunks while a decode lane was runnable
+    for (k1, live1), (k2, _) in zip(kinds, kinds[1:]):
+        assert not (k1 == "prefill" and k2 == "prefill" and live1), kinds
+    assert gw.stats["prefill_chunks"] >= n // 256

@@ -139,7 +139,9 @@ def test_resident_preemption_roundtrip(setup):
     want = [r.out_tokens for r in _drain(
         _gateway(setup, prefix_cache=False),
         [_prompt(i) for i in range(5)], max_new_tokens=5)]
-    gw = _gateway(setup, prefix_cache=False, max_lanes=4, num_blocks=9)
+    # num_blocks=8, not 9: chunked admission reserves prompt blocks per
+    # request, so the looser pool now drains preemption-free
+    gw = _gateway(setup, prefix_cache=False, max_lanes=4, num_blocks=8)
     assert gw.kernel_decode
     reqs = _drain(gw, [_prompt(i) for i in range(5)], max_new_tokens=5)
     assert gw.stats["preempted"] > 0

@@ -248,9 +248,12 @@ def test_preemption_requeue_roundtrip(setup):
     gw.run()
     assert gw.stats["preempted"] == 0          # fully provisioned
 
+    # 28 tokens for 4 lanes of 16: chunked admission budgets blocks per
+    # request up front, so the pool must be this tight before decode
+    # growth outruns what admission reserved and preemption fires
     gw2 = _gateway(setup, max_batch=2, paged=True, block_size=4,
                    prefix_cache=False,
-                   max_lanes=4, num_blocks=9)  # 36 tokens for 4 lanes of 16
+                   max_lanes=4, num_blocks=7)
     reqs = [gw2.submit(_prompt(i), license="free", max_new_tokens=3 + 2 * (i % 2))
             for i in range(5)]
     gw2.run()

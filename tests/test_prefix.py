@@ -255,8 +255,11 @@ def test_preempted_shared_holder_restarts_equivalently(setup):
     reproduce the tokens of an uncontended run."""
     prompts = _shared_prompts(5, 5)
     ref = _drain(_gateway(setup, prefix_cache=True), prompts, max_new=5)
+    # legacy one-shot prefill: chunked admission budgets blocks per
+    # request up front and this geometry never oversubscribes (chunked
+    # preempt/restart equivalence lives in test_chunked_prefill.py)
     gw = _gateway(setup, prefix_cache=True, max_batch=2, max_lanes=4,
-                  num_blocks=7)                  # oversubscribed: 28 tokens
+                  num_blocks=7, chunk_size=0)    # oversubscribed: 28 tokens
     reqs = _drain(gw, prompts, max_new=5)
     assert gw.stats["preempted"] > 0
     preempted = [r for r in reqs if r.preemptions]
@@ -405,8 +408,9 @@ def test_peek_is_side_effect_free():
 def test_full_match_lane_gets_its_own_narrow_batch(setup):
     """A full-match request must not pad to a cold request's suffix
     width: the scheduler groups prefills by cached-suffix bucket, so the
-    hit prefills 1 lane-token while the cold one prefills max_prompt."""
-    gw = _gateway(setup)
+    hit prefills 1 lane-token while the cold one prefills max_prompt.
+    (Suffix-width grouping is the legacy bucket path: pin chunk_size=0.)"""
+    gw = _gateway(setup, chunk_size=0)
     a = _shared_prompts(40, 1)[0]
     _drain(gw, [a.copy()], max_new=2)              # wave 1: populate
     lane_tokens0 = gw.stats["prefill_lane_tokens"]
@@ -417,6 +421,30 @@ def test_full_match_lane_gets_its_own_narrow_batch(setup):
     assert gw.stats["prefill_lane_tokens"] == lane_tokens0 + 1 + MAX_PROMPT
     m = gw.metrics()["admission_grouping"]
     assert m["enabled"] is True
+    assert m["batches_by_suffix_width"] == {MAX_PROMPT: 2, 1: 1}
+    assert gw.stats["prefill_batches"] == 3
+
+
+def test_stale_suffix_probe_revalidated_at_formation(setup):
+    """A cached suffix-bucket probe is a scheduling hint that can go
+    stale between probe and admission (eviction, epoch desync).  Batch
+    formation must re-probe every selected member fresh: a forged stale
+    probe claiming the full-match bucket must NOT drag a cold prompt
+    into the W=1 batch — it gets requeued into its own wide batch."""
+    gw = _gateway(setup, chunk_size=0)
+    a = _shared_prompts(60, 1)[0]
+    _drain(gw, [a.copy()], max_new=2)              # populate: a full-matches
+    r1 = gw.submit(a.copy(), license="free", max_new_tokens=2)
+    r2 = gw.submit(_shared_prompts(61, 1, shared=0)[0], license="free",
+                   max_new_tokens=2)
+    # forge a stale-but-current-epoch probe on the cold request claiming
+    # the anchor's full-match bucket (suffix width 1)
+    r2._suffix_probe = (gw.prefix.epoch, 1)
+    gw.run()
+    assert r1.state == RequestState.DONE and r2.state == RequestState.DONE
+    m = gw.metrics()["admission_grouping"]
+    # populate wave (W=8) + full-match batch (W=1) + the re-validated
+    # cold request's own wide batch (W=8) — never a cold prompt at W=1
     assert m["batches_by_suffix_width"] == {MAX_PROMPT: 2, 1: 1}
     assert gw.stats["prefill_batches"] == 3
 
