@@ -25,7 +25,7 @@ import traceback
 
 SUITES = ("storage", "update-wire", "licensing", "kernels", "serving",
           "gateway", "paging", "prefix", "decode", "update", "prefill",
-          "roofline")
+          "fleet", "roofline")
 
 
 def main(argv=None) -> None:
@@ -45,10 +45,11 @@ def main(argv=None) -> None:
         json_dir = pathlib.Path(args.json)
         json_dir.mkdir(parents=True, exist_ok=True)
 
-    from benchmarks import (decode_bench, gateway_bench, kernel_bench,
-                            licensing_ladder, paging_bench, prefill_bench,
-                            prefix_bench, roofline_table, serving_bench,
-                            storage_cost, update_bench, update_latency)
+    from benchmarks import (decode_bench, fleet_bench, gateway_bench,
+                            kernel_bench, licensing_ladder, paging_bench,
+                            prefill_bench, prefix_bench, roofline_table,
+                            serving_bench, storage_cost, update_bench,
+                            update_latency)
 
     modules = {
         "storage": storage_cost,        # paper Table 1
@@ -62,6 +63,7 @@ def main(argv=None) -> None:
         "decode": decode_bench,         # kernel-resident vs gather/scatter
         "update": update_bench,         # staged sync vs blocking decode stall
         "prefill": prefill_bench,       # chunked prefill decode-stall SLO
+        "fleet": fleet_bench,           # multi-model fleet vs isolated
         "roofline": roofline_table,     # deliverable (g)
     }
 

@@ -10,11 +10,15 @@ gateway serves from by default lives in paging.py, the
 that lets same-prefix prompts skip redundant prefill lives in
 prefix.py, and the staged weight-sync state machine (``UpdateStager``)
 that flips license-server version bumps in without stalling a decode
-step lives in updates.py.
+step lives in updates.py.  Fleet serving (fleet.py) composes N
+per-model ``ModelSlot``\\ s behind one ``FleetGateway`` loop under a
+global cache-byte budget, with per-tenant entitlements/quotas/rate
+limits enforced by a ``TenantRegistry``.
 """
 from repro.serving.engine import (Request, ServingEngine, prefill_chunk_step,
                                   prefill_step, prefill_suffix_step, sample,
                                   sample_lane, serve_step, stack_lane_caches)
+from repro.serving.fleet import FleetGateway, ModelSlot, TenantRegistry
 from repro.serving.gateway import LicensedGateway
 from repro.serving.paging import BlockAllocator, PagedCachePool
 from repro.serving.prefix import PrefixCache
@@ -29,4 +33,5 @@ __all__ = [
     "GatewayRequest", "RequestState", "ScheduledAction", "Scheduler",
     "CachePool", "PagedCachePool", "BlockAllocator", "PrefixCache",
     "TierViewCache", "UpdateStager",
+    "FleetGateway", "ModelSlot", "TenantRegistry",
 ]

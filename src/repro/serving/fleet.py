@@ -1,0 +1,826 @@
+"""Multi-model, multi-tenant fleet serving.
+
+The paper's "one deployment, many licensed variants" story, pushed to a
+*fleet*: one serving binary hosting several heterogeneous models at
+once, each with its own licensing ladder, sharing device cache memory
+under one global budget, with per-tenant entitlements and quotas
+enforced at the door.  Three layers:
+
+* :class:`ModelSlot` — everything one served model owns: config, weight
+  versions, the tier view cache, the paged (or contiguous) cache pool,
+  the prefix cache, the scheduler, the staged-update hook points, and
+  the serving stats.  This is the state that used to live flat on
+  ``LicensedGateway``; the gateway now *wraps* a slot (attribute
+  delegation), so every single-model behavior is unchanged while a
+  fleet can compose N slots.
+* :class:`TenantRegistry` — per-tenant (model, tier) entitlements,
+  concurrent-request quotas, and token-bucket rate limits.  Checked
+  twice: at ``submit`` (entitlement + concurrency + rate) and again at
+  batch formation (entitlement only — a tenant revoked while its
+  request queued must not reach a lane; a request already *decoding*
+  completes, consistent with the gateway's never-re-masked-mid-
+  generation rule for tier redefinitions).
+* :class:`FleetGateway` — N slots behind one submit/step/run loop.
+  Each scheduler iteration runs ONE slot's micro-batch (round-robin
+  over slots with work) and advances at most ONE slot's active update
+  stager, so weight syncs ride along without ever stacking N stager
+  steps onto a single serving iteration.
+
+Global cache budget
+-------------------
+Heterogeneous models disagree about what a "block" costs — a 3B GQA
+transformer's 16-token block is orders of magnitude bigger than a
+130M hybrid's — so the fleet budget is denominated in **bytes**
+(``PagedCachePool.block_bytes`` is the per-slot exchange rate).  The
+budget gates, it does not partition: any slot may use any fraction of
+it, but admission takes ``min(local pool budget, global headroom)``
+(wired through ``Scheduler.global_budget``) so one hot model cannot
+admit past what the fleet has left.  Retained prefix chains anywhere
+in the fleet count as *reclaimable* headroom — allocation evicts them
+(the requesting slot's own chains first, then other slots', LRU within
+each) before giving up.  When decode growth finds no headroom even
+after reclaiming, the slot falls back to its own youngest-preemption;
+preemption never crosses slots — evicting another model's requests to
+grow your own would *be* the cross-model starvation the budget exists
+to prevent.  Pure-recurrent models fall back to the contiguous
+``CachePool`` whose memory is fixed at construction; they sit outside
+the block budget (nothing to admit or reclaim block-wise).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.licensing import FULL_TIER, LicenseTier, apply_license
+from repro.models import model as model_lib
+from repro.serving.engine import right_align
+from repro.serving.paging import NoPagedLeavesError, PagedCachePool, cdiv
+from repro.serving.prefix import PrefixCache
+from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
+                                     Scheduler, TierViewCache)
+
+
+class ModelSlot:
+    """Per-model serving state: one config's pool + views + scheduler.
+
+    Owns everything :class:`~repro.serving.gateway.LicensedGateway` used
+    to keep flat on itself — the gateway delegates attribute access
+    here, so ``gw.pool``, ``gw.stats``, ``gw.scheduler`` … all resolve
+    to the slot.  A :class:`FleetGateway` composes many slots; a
+    standalone gateway owns exactly one.  Constructor parameters are
+    documented on ``LicensedGateway`` (they are the same knobs).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        tiers: Optional[Dict[str, LicenseTier]] = None,
+        quantized: bool = False,
+        already_quantized: bool = False,
+        materialize_int8_views: bool = False,
+        max_batch: int = 8,
+        max_prompt: int = 32,
+        max_new_cap: int = 64,
+        paged: bool = True,
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
+        max_lanes: Optional[int] = None,
+        watermark_blocks: int = 0,
+        prefix_cache: bool = True,
+        chunk_size: Optional[int] = None,
+        kernel_decode: Optional[bool] = None,
+        decode_pallas: Optional[str] = None,
+        fuse_sampling: bool = True,
+        record_logits: bool = False,
+        view_capacity: int = 8,
+        version: int = 1,
+        server: Any = None,
+        model: str = "model",
+        history: int = 10_000,
+    ):
+        self.cfg = cfg
+        self.quantized = quantized or already_quantized
+        self.materialize_int8_views = materialize_int8_views
+        if self.quantized and not already_quantized:
+            from repro.serving.quantized import quantize_serving_params
+
+            params = quantize_serving_params(params)
+        self.max_batch = int(max_batch)
+        self.max_prompt = int(max_prompt)
+        self.max_new_cap = int(max_new_cap)
+        self.capacity = self.max_prompt + self.max_new_cap
+
+        self.version = int(version)
+        self._weights: Dict[int, Any] = {self.version: params}
+        self.tiers: Dict[str, LicenseTier] = dict(tiers or {})
+        self.tiers.setdefault("full", FULL_TIER)
+        self.views = TierViewCache(self._materialize, capacity=view_capacity)
+
+        self.record_logits = bool(record_logits)
+        self.fuse_sampling = bool(fuse_sampling) and not self.record_logits
+        self.paged = bool(paged)
+        if self.paged:
+            self.max_lanes = int(max_lanes or self.max_batch)
+            bpl = cdiv(self.capacity, int(block_size))
+            try:
+                self.pool = PagedCachePool(
+                    cfg, self.max_lanes, self.capacity, int(block_size),
+                    int(num_blocks) if num_blocks is not None
+                    else self.max_lanes * bpl)
+            except NoPagedLeavesError:
+                # no per-token cache leaves (pure-recurrent model, or a
+                # sliding window below the pool capacity caps every
+                # attention cache): per-lane state is constant-size, so
+                # paging has nothing to page — fall back to the slab
+                self.paged = False
+        # kernel-resident decode: supported whenever every attention
+        # cache is paged — a sliding window below the pool capacity turns
+        # attention caches into per-lane ring state the batched step
+        # cannot address by block, so those models keep gather/scatter
+        supported = self.paged and cfg.window == 0
+        self.kernel_decode = (supported if kernel_decode is None
+                              else bool(kernel_decode) and supported)
+        if decode_pallas is None:
+            decode_pallas = ("pallas" if jax.default_backend() == "tpu"
+                             else "off")
+        if decode_pallas not in ("off", "pallas", "interpret"):
+            raise ValueError(f"decode_pallas={decode_pallas!r} not in "
+                             f"('off', 'pallas', 'interpret')")
+        self.decode_pallas = decode_pallas
+        if self.paged:
+            self._prefill_blocks = max(
+                1, cdiv(self.max_prompt, self.pool.block_size))
+            if (self.pool.num_blocks - int(watermark_blocks)
+                    < self._prefill_blocks):
+                raise ValueError(
+                    f"watermark_blocks={watermark_blocks} leaves no room to "
+                    f"admit a prefill ({self._prefill_blocks} blocks of "
+                    f"{self.pool.num_blocks}) — the gateway would accept "
+                    f"requests and never schedule them")
+            # prompt-prefix reuse needs every non-paged leaf reconstructible
+            # (position counters); float per-lane state can't be block-seeded
+            self.prefix = (
+                PrefixCache(self.pool.allocator, self.pool.block_size)
+                if prefix_cache and self.pool.prefix_cacheable else None)
+            # left-aligned chunked prefill: prompts advance chunk_size
+            # tokens per prefill action, strictly interleaved with decode
+            # steps.  It needs every per-lane non-paged cache leaf to be
+            # a reconstructible position counter — the same condition as
+            # prefix caching — so ring/SSM lane state opts the model out.
+            chunk_ok = self.pool.prefix_cacheable
+            if chunk_size is None:
+                self.chunk_size = self.pool.block_size if chunk_ok else 0
+            else:
+                self.chunk_size = int(chunk_size)
+                if self.chunk_size > 0 and not chunk_ok:
+                    raise ValueError(
+                        "chunked prefill needs reconstructible per-lane "
+                        "cache state (the prefix_cache condition); this "
+                        "model keeps ring/SSM lane state — pass "
+                        "chunk_size=0 or leave it None")
+            if self.chunk_size > 0:
+                self.chunk_size = min(self.chunk_size, self.max_prompt)
+            self.chunked = self.chunk_size > 0
+            self.scheduler = Scheduler(
+                self.max_lanes, self.max_batch,
+                allocator=self.pool.allocator,
+                prefill_blocks=(0 if self.chunked
+                                else self._prefill_blocks),
+                watermark_blocks=int(watermark_blocks),
+                reclaimable=(self.prefix.reclaimable
+                             if self.prefix is not None else None),
+                suffix_bucket=(self._suffix_bucket
+                               if self.prefix is not None
+                               and not self.chunked else None),
+                suffix_revalidate=(self._suffix_bucket_fresh
+                                   if self.prefix is not None
+                                   and not self.chunked else None),
+                chunked=self.chunked,
+                blocks_needed=(self._blocks_needed
+                               if self.chunked else None))
+            zero_cap = self.pool.padded_capacity
+        else:
+            if chunk_size:
+                raise ValueError(
+                    "chunked prefill requires the paged pool")
+            self.chunk_size = 0
+            self.chunked = False
+            self.max_lanes = self.max_batch
+            self.pool = CachePool(cfg, self.max_batch, self.capacity)
+            self.scheduler = Scheduler(self.max_batch, self.max_batch)
+            self.prefix = None
+            zero_cap = self.capacity
+        lane0 = model_lib.init_cache(cfg, 1, zero_cap)  # pristine batch-1 cache
+        self._zero_lanes = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (self.max_batch, *x.shape)),
+            lane0,
+        )
+
+        self._server = server
+        self.model = model
+        self._client = None           # EdgeClient when booted from a server
+        self._server_tiers: set = set()  # tier names learned from the server
+        # tier updates deferred while their requests are in flight;
+        # value None = pending revocation
+        self._pending_tiers: Dict[str, Optional[LicenseTier]] = {}
+        # staged weight sync (serving/updates.py): the active stager (one
+        # bounded step interleaved per scheduler step) and the version it
+        # is pre-registering weights/views under before the flip
+        self._stager = None
+        self._staging_version: Optional[int] = None
+
+        # fleet wiring (None when the slot serves standalone): the
+        # wrapping gateway, the composing FleetGateway, and the finish
+        # hook the fleet uses for tenant accounting
+        self.gateway: Any = None
+        self.fleet: Any = None
+        self.on_finish: Optional[Callable[[GatewayRequest], None]] = None
+
+        self._next_rid = 0
+        # bounded: a long-lived gateway must not grow host memory with
+        # every request served; metrics percentiles cover this window
+        self.completed: "deque[GatewayRequest]" = deque(maxlen=history)
+        self.trace: "deque[Tuple[str, str, Optional[int], int]]" = \
+            deque(maxlen=history)
+        self._drain_sink: Optional[List[GatewayRequest]] = None
+        self.stats: Dict[str, int] = {
+            "admitted": 0, "rejected": 0, "completed": 0,
+            "prefill_batches": 0, "decode_steps": 0,
+            "resident_decode_steps": 0, "tokens_generated": 0,
+            "preempted": 0, "max_running": 0, "max_blocks_in_use": 0,
+            # prefix-cache accounting: lane-tokens actually run through the
+            # prefill step (the FLOPs axis the bench compares), prompt
+            # tokens served from retained blocks, and copy-on-write copies
+            "prefill_lane_tokens": 0, "prefix_tokens_reused": 0,
+            "cow_copies": 0,
+            # chunked prefill: prefill actions executed (one chunk each)
+            "prefill_chunks": 0,
+            # tenant enforcement: requests bounced by entitlement /
+            # concurrency / rate-limit checks (submit OR admission)
+            "quota_rejections": 0,
+        }
+        # prefix-aware admission: prefill batches served per suffix-width
+        # bucket (the grouping decision, exported via metrics())
+        self.bucket_batches: Dict[int, int] = {}
+
+        # build the jit pair for the common case (all-greedy when fused);
+        # _steps() dispatches per micro-batch, sharing the lru entries
+        # across gateway instances over the same config
+        from repro.serving.gateway import _compiled_steps
+
+        if self.fuse_sampling:
+            _compiled_steps(cfg, True, False, False)
+        else:
+            _compiled_steps(cfg, False)
+
+    # ------------------------------------------------------------ weight views
+    def _resolve_tier(self, name: str) -> LicenseTier:
+        tier = self.tiers.get(name)
+        if tier is None and self._server is not None:
+            try:
+                tier = self._server.tier(self.model, name)
+                self.tiers[name] = tier
+                self._server_tiers.add(name)
+            except KeyError:
+                tier = None
+        if tier is None:
+            raise KeyError(f"unknown license tier {name!r}")
+        return tier
+
+    def _materialize(self, tier_name: str, version: Optional[int]):
+        """Build the (params, intervals) view served to one (tier, version)."""
+        tier = self._resolve_tier(tier_name)
+        base = self._weights[version]
+        if not self.quantized:
+            return apply_license(base, tier), None
+        if self.materialize_int8_views:
+            from repro.serving.quantized import materialize_licensed_view
+
+            return materialize_licensed_view(base, tier, self.cfg.dtype), None
+        from repro.serving.quantized import tier_intervals
+
+        return base, tier_intervals(tier)
+
+    # ------------------------------------------------------ scheduler callbacks
+    def _suffix_bucket(self, req: GatewayRequest, fresh: bool = False) -> int:
+        """Prefix-aware admission probe: the uncached suffix width this
+        request would prefill at — ``max_prompt`` when cold, down to 1
+        for a full match (the last position always recomputes).  Uses
+        the side-effect-free :meth:`PrefixCache.peek` so scheduling
+        probes never touch LRU order or reference counts, and caches the
+        answer on the request keyed by the cache's mutation epoch — a
+        deep backlog re-probes only after an insert/evict/drop actually
+        changed what a prompt could match.
+
+        The cached probe is a scheduling *hint*, not a fact: an eviction
+        between the probe and batch formation (or anything else that
+        desynchronizes the stored epoch from the tree) would let a stale
+        bucket mis-group the batch.  ``fresh=True`` bypasses the cache —
+        the scheduler re-validates every selected member through
+        :meth:`_suffix_bucket_fresh` at formation time."""
+        cached = None if fresh else getattr(req, "_suffix_probe", None)
+        if cached is not None and cached[0] == self.prefix.epoch:
+            return cached[1]
+        toks = right_align([req.prompt], self.max_prompt, 1)[0]
+        matched = self.prefix.peek((req.license, req.version), toks)
+        bucket = self.max_prompt - min(matched, self.max_prompt - 1)
+        req._suffix_probe = (self.prefix.epoch, bucket)
+        return bucket
+
+    def _suffix_bucket_fresh(self, req: GatewayRequest) -> int:
+        """Cache-bypassing probe for batch-formation re-validation."""
+        return self._suffix_bucket(req, fresh=True)
+
+    def _blocks_needed(self, req: GatewayRequest) -> int:
+        """Chunked-admission block budget: blocks covering the TRUE
+        prompt length — conservative, since adopted prefix blocks only
+        reduce the fresh allocation."""
+        return max(1, cdiv(len(req.prompt), self.pool.block_size))
+
+
+# --------------------------------------------------------------------- tenants
+def _pattern_match(pattern: str, value: str) -> bool:
+    return pattern == "*" or pattern == value
+
+
+class _Tenant:
+    """One tenant's entitlements, limits, bucket state, and counters."""
+
+    __slots__ = ("name", "entitlements", "max_concurrent", "rate", "burst",
+                 "bucket", "last_refill", "inflight", "submitted", "admitted",
+                 "completed", "tokens_generated", "quota_rejections")
+
+    def __init__(self, name: str,
+                 entitlements: Iterable,
+                 max_concurrent: Optional[int],
+                 rate: Optional[float], burst: Optional[float]):
+        self.name = name
+        self.entitlements: set = set()
+        for ent in entitlements:
+            self.entitlements.add(_parse_entitlement(ent))
+        self.max_concurrent = (None if max_concurrent is None
+                               else int(max_concurrent))
+        self.rate = None if rate is None else float(rate)
+        self.burst = (float(burst) if burst is not None
+                      else (self.rate if self.rate is not None else 0.0))
+        if self.rate is not None and self.burst < 1.0:
+            raise ValueError(
+                f"burst={self.burst} < 1: tenant {name!r} could never "
+                f"pass the rate limit")
+        self.bucket = self.burst          # start full: a burst is allowed
+        self.last_refill: Optional[float] = None
+        self.inflight = 0
+        self.submitted = 0
+        self.admitted = 0
+        self.completed = 0
+        self.tokens_generated = 0
+        self.quota_rejections = 0
+
+
+def _parse_entitlement(ent) -> Tuple[str, str]:
+    """Accept ``(model, tier)`` tuples or ``"model:tier"`` strings;
+    ``"*"`` wildcards either side."""
+    if isinstance(ent, str):
+        model, _, tier = ent.partition(":")
+        return (model or "*", tier or "*")
+    model, tier = ent
+    return (str(model), str(tier))
+
+
+class TenantRegistry:
+    """Per-tenant licensing enforcement: entitlements, quotas, rates.
+
+    * **Entitlements** are (model, tier) patterns (``"*"`` wildcards
+      either side): which licensed variants a tenant may request at all.
+    * **Concurrency** (``max_concurrent``): live requests (queued or
+      running, fleet-wide) per tenant.  ``0`` is a valid zero-quota
+      tenant — entitled on paper, admitted never.  ``None`` = unlimited.
+    * **Rate** (``rate`` requests/s refilled into a bucket of capacity
+      ``burst``): a standard token bucket, charged one token per
+      accepted submit.  ``clock`` is injectable so tests drive time
+      deterministically.
+
+    :meth:`acquire` runs all three checks and charges on success;
+    :meth:`cancel` refunds a charge whose request the gateway then
+    bounced for non-tenant reasons (bad prompt, unknown tier);
+    :meth:`drop_queued` settles a request rejected at batch formation
+    (entitlement revoked while queued — the rate token is *not*
+    refunded, the submit was served); :meth:`finish` settles a
+    completed request.
+    """
+
+    def __init__(self, *, clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
+        self._tenants: Dict[str, _Tenant] = {}
+
+    # ------------------------------------------------------------- definition
+    def register(self, name: str, *,
+                 entitlements: Iterable = ("*:*",),
+                 max_concurrent: Optional[int] = None,
+                 rate: Optional[float] = None,
+                 burst: Optional[float] = None) -> None:
+        """Define (or redefine) a tenant.  Redefinition keeps live
+        inflight/usage counters so re-provisioning a tenant mid-flight
+        cannot leak or double-count its running requests."""
+        fresh = _Tenant(name, entitlements, max_concurrent, rate, burst)
+        old = self._tenants.get(name)
+        if old is not None:
+            for k in ("inflight", "submitted", "admitted", "completed",
+                      "tokens_generated", "quota_rejections"):
+                setattr(fresh, k, getattr(old, k))
+        self._tenants[name] = fresh
+
+    def grant(self, name: str, model: str = "*", tier: str = "*") -> None:
+        self._tenants[name].entitlements.add((model, tier))
+
+    def revoke(self, name: str, model: str = "*", tier: str = "*") -> None:
+        """Remove every entitlement pattern that would entitle
+        (model, tier) — including broader wildcard patterns, so after
+        ``revoke(t, m, x)`` the tenant is guaranteed not entitled to
+        (m, x); ``"*"`` arguments match any pattern component.  Queued
+        requests of the tenant are rejected at the next batch
+        formation; already decoding ones complete (never cancelled
+        mid-generation)."""
+        t = self._tenants[name]
+        t.entitlements = {
+            (pm, pt) for (pm, pt) in t.entitlements
+            if not ((model == "*" or _pattern_match(pm, model))
+                    and (tier == "*" or _pattern_match(pt, tier)))}
+
+    def known(self, name: str) -> bool:
+        return name in self._tenants
+
+    def entitled(self, name: str, model: str, tier: str) -> bool:
+        t = self._tenants.get(name)
+        if t is None:
+            return False
+        return any(_pattern_match(pm, model) and _pattern_match(pt, tier)
+                   for (pm, pt) in t.entitlements)
+
+    # ------------------------------------------------------------ enforcement
+    def _refill(self, t: _Tenant) -> None:
+        if t.rate is None:
+            return
+        now = self._clock()
+        if t.last_refill is not None:
+            t.bucket = min(t.burst, t.bucket + (now - t.last_refill) * t.rate)
+        t.last_refill = now
+
+    def acquire(self, name: str, model: str, tier: str) -> Optional[str]:
+        """All submit-time checks; charges (inflight + one bucket token)
+        and returns None on success, else the rejection reason."""
+        t = self._tenants.get(name)
+        if t is None:
+            return f"unknown tenant {name!r}"
+        t.submitted += 1
+        if not self.entitled(name, model, tier):
+            t.quota_rejections += 1
+            return (f"tenant {name!r} is not entitled to "
+                    f"({model!r}, {tier!r})")
+        if t.max_concurrent is not None and t.inflight >= t.max_concurrent:
+            t.quota_rejections += 1
+            return (f"tenant {name!r} at its concurrent-request quota "
+                    f"({t.max_concurrent})")
+        if t.rate is not None:
+            self._refill(t)
+            if t.bucket < 1.0:
+                t.quota_rejections += 1
+                return (f"tenant {name!r} rate-limited "
+                        f"({t.rate:g} req/s, burst {t.burst:g})")
+            t.bucket -= 1.0
+        t.inflight += 1
+        t.admitted += 1
+        return None
+
+    def cancel(self, name: str) -> None:
+        """Refund an :meth:`acquire` whose request the gateway bounced
+        for non-tenant reasons — no service was rendered, so the rate
+        token comes back too."""
+        t = self._tenants[name]
+        t.inflight -= 1
+        t.admitted -= 1
+        if t.rate is not None:
+            t.bucket = min(t.burst, t.bucket + 1.0)
+
+    def drop_queued(self, name: str) -> None:
+        """Settle a request rejected at batch formation (entitlement
+        revoked while it queued).  Counts as a quota rejection; the rate
+        token stays spent."""
+        t = self._tenants[name]
+        t.inflight -= 1
+        t.quota_rejections += 1
+
+    def finish(self, name: str, tokens: int) -> None:
+        t = self._tenants.get(name)
+        if t is None:                      # tenant deleted mid-flight
+            return
+        t.inflight -= 1
+        t.completed += 1
+        t.tokens_generated += int(tokens)
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, Dict[str, Any]]:
+        out: Dict[str, Dict[str, Any]] = {}
+        for name, t in self._tenants.items():
+            self._refill(t)
+            out[name] = {
+                "inflight": t.inflight, "submitted": t.submitted,
+                "admitted": t.admitted, "completed": t.completed,
+                "tokens_generated": t.tokens_generated,
+                "quota_rejections": t.quota_rejections,
+                "max_concurrent": t.max_concurrent,
+                "rate": t.rate,
+                "rate_tokens_available": (None if t.rate is None
+                                          else t.bucket),
+                "entitlements": sorted(
+                    f"{m}:{ti}" for (m, ti) in t.entitlements),
+            }
+        return out
+
+
+# ----------------------------------------------------------------------- fleet
+class FleetGateway:
+    """N :class:`ModelSlot`\\ s behind one submit/step/run loop.
+
+    ``add_model`` registers a model (constructing its wrapping
+    ``LicensedGateway``); ``attach`` adopts an existing gateway (e.g.
+    one booted via ``LicensedGateway.from_server``).  ``submit`` routes
+    by model name and enforces the :class:`TenantRegistry`; ``step``
+    executes ONE micro-batch — round-robin over slots with work — plus
+    at most ONE slot's active update-stager step; ``run`` drains every
+    slot's queue.
+
+    ``cache_budget_bytes`` caps the *sum* of allocated cache-block bytes
+    across every paged slot (see the module docstring for the
+    byte-denominated budget semantics).  ``None`` = no global cap (each
+    slot is bounded by its own pool alone).
+    """
+
+    def __init__(self, *, cache_budget_bytes: Optional[int] = None,
+                 tenants: Optional[TenantRegistry] = None):
+        self.cache_budget_bytes = (None if cache_budget_bytes is None
+                                   else int(cache_budget_bytes))
+        self.tenants = tenants if tenants is not None else TenantRegistry()
+        self.gateways: Dict[str, Any] = {}
+        self._rr = 0                       # slot round-robin cursor
+        self._stager_rr = 0                # stager round-robin cursor
+        self._steps = 0
+        self._t0: Optional[float] = None   # first-step timestamp (tokens/s)
+
+    # ------------------------------------------------------------ registration
+    def add_model(self, name: str, cfg: ModelConfig, params: Any,
+                  **kw) -> Any:
+        """Construct and register one model's gateway.  ``kw`` are
+        ``LicensedGateway`` knobs (tiers, pool geometry, …)."""
+        from repro.serving.gateway import LicensedGateway
+
+        kw.pop("model", None)
+        gw = LicensedGateway(cfg, params, model=name, **kw)
+        return self.attach(gw)
+
+    def attach(self, gw: Any) -> Any:
+        """Adopt an existing ``LicensedGateway`` as one slot (keyed by
+        its ``model`` name) and wire the fleet hooks into its slot and
+        scheduler."""
+        name = gw.model
+        if name in self.gateways:
+            raise ValueError(f"model {name!r} already registered")
+        if gw.slot.fleet is not None:
+            raise ValueError(f"gateway {name!r} already belongs to a fleet")
+        if self.cache_budget_bytes is not None and gw.paged:
+            # every paged slot must be able to run one full-capacity
+            # request to completion even when every OTHER slot holds one
+            # too — otherwise a budget-bound fleet can admit requests
+            # that no amount of reclaim or (within-slot) preemption can
+            # ever finish
+            need = sum(cdiv(g.capacity, g.pool.block_size)
+                       * g.pool.block_bytes
+                       for g in list(self.gateways.values()) + [gw]
+                       if g.paged)
+            if need > self.cache_budget_bytes:
+                raise ValueError(
+                    f"cache_budget_bytes={self.cache_budget_bytes} cannot "
+                    f"hold one full request per paged slot ({need} bytes "
+                    f"across {len(self.gateways) + 1} models)")
+        gw.slot.fleet = self
+        gw.slot.on_finish = self._on_finish
+        if gw.paged:
+            gw.scheduler.global_budget = \
+                lambda g=gw: self._slot_headroom(g)
+        gw.scheduler.admission_filter = \
+            lambda r, g=gw: self._admission_ok(g, r)
+        self.gateways[name] = gw
+        return gw
+
+    def _paged(self) -> List[Any]:
+        return [g for g in self.gateways.values() if g.paged]
+
+    # ---------------------------------------------------------- global budget
+    def used_cache_bytes(self) -> int:
+        """Bytes of cache blocks currently allocated fleet-wide (running
+        requests' chains AND retained prefix chains)."""
+        return sum(g.pool.block_bytes * g.pool.allocator.num_held
+                   for g in self._paged())
+
+    def reclaimable_cache_bytes(self) -> int:
+        """Bytes held only by prefix-cache retained chains — freeable on
+        demand, so they count as admission headroom."""
+        return sum(g.pool.block_bytes * g.prefix.reclaimable()
+                   for g in self._paged() if g.prefix is not None)
+
+    def _slot_headroom(self, gw: Any) -> int:
+        """How many MORE of ``gw``'s blocks the fleet budget can cover,
+        counting every slot's reclaimable chains as free — the
+        ``Scheduler.global_budget`` hook."""
+        if self.cache_budget_bytes is None:
+            return gw.pool.num_blocks
+        free = (self.cache_budget_bytes - self.used_cache_bytes()
+                + self.reclaimable_cache_bytes())
+        return max(0, int(free) // gw.pool.block_bytes)
+
+    def _ensure_headroom(self, gw: Any, n: int) -> bool:
+        """Make strict room for ``n`` of ``gw``'s blocks under the
+        budget, evicting retained prefix chains — ``gw``'s own first
+        (freeing them also helps its local allocation), then other
+        slots', LRU within each.  Returns False when the budget still
+        cannot cover it (every remaining byte is pinned by running
+        requests) — the caller falls back to within-slot preemption."""
+        if self.cache_budget_bytes is None:
+            return True
+        need = n * gw.pool.block_bytes
+
+        def free() -> int:
+            return self.cache_budget_bytes - self.used_cache_bytes()
+
+        if free() >= need:
+            return True
+        for g in [gw] + [g for g in self._paged() if g is not gw]:
+            if g.prefix is None:
+                continue
+            while free() < need and g.prefix.reclaimable() > 0:
+                want = cdiv(need - free(), g.pool.block_bytes)
+                if g.prefix.evict(want) == 0:
+                    break
+        return free() >= need
+
+    # -------------------------------------------------------------- admission
+    def _admission_ok(self, gw: Any, req: GatewayRequest) -> bool:
+        """Batch-formation entitlement re-check (``admission_filter``):
+        a tenant revoked since submit must not reach a lane.  In-flight
+        requests are never revisited — a revocation drains, it never
+        cancels."""
+        if req.tenant is None:
+            return True
+        if self.tenants.entitled(req.tenant, gw.model, req.license):
+            return True
+        req.state = RequestState.REJECTED
+        req.error = (f"tenant {req.tenant!r} entitlement to "
+                     f"({gw.model!r}, {req.license!r}) revoked while queued")
+        self.tenants.drop_queued(req.tenant)
+        gw.stats["quota_rejections"] += 1
+        gw.stats["rejected"] += 1
+        return False
+
+    def submit(self, model: str, prompt, *, tenant: Optional[str] = None,
+               license: str = "full", **kw) -> GatewayRequest:
+        """Route one request to its model slot, enforcing the tenant's
+        entitlements, concurrency quota, and rate limit first.  A
+        rejection (tenant or gateway) returns a REJECTED request with
+        ``error`` set, exactly like single-gateway admission."""
+        gw = self.gateways.get(model)
+        if gw is None:
+            req = GatewayRequest(
+                prompt=np.asarray(prompt, np.int32).reshape(-1),
+                license=license, model=model, tenant=tenant)
+            req.state = RequestState.REJECTED
+            req.error = f"unknown model {model!r}"
+            return req
+        if tenant is not None:
+            reason = self.tenants.acquire(tenant, model, license)
+            if reason is not None:
+                req = GatewayRequest(
+                    prompt=np.asarray(prompt, np.int32).reshape(-1),
+                    license=license, model=model, tenant=tenant)
+                req.state = RequestState.REJECTED
+                req.error = reason
+                gw.stats["quota_rejections"] += 1
+                gw.stats["rejected"] += 1
+                return req
+        req = gw.submit(prompt, license=license, tenant=tenant, **kw)
+        if tenant is not None and req.state is RequestState.REJECTED:
+            # bounced after the quota charge for a non-tenant reason
+            # (bad prompt length, unknown tier, bad seed): refund
+            self.tenants.cancel(tenant)
+        return req
+
+    # -------------------------------------------------------------- execution
+    def step(self) -> Optional[Any]:
+        """ONE fleet iteration: the next slot (round-robin) with work
+        runs one micro-batch, and at most ONE slot's active update
+        stager advances one bounded step.  Returns the executed
+        ``ScheduledAction`` (its ``model`` field names the slot), or
+        None when no slot has work."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        self._steps += 1
+        order = list(self.gateways.values())
+        act = None
+        n = len(order)
+        for i in range(n):
+            gw = order[(self._rr + i) % n]
+            act = gw.step(drive_stager=False)
+            if act is not None:
+                self._rr = (self._rr + i + 1) % n
+                break
+        else:
+            self._rr = (self._rr + 1) % n if n else 0
+        syncing = [g for g in order if g.sync_active]
+        if syncing:
+            syncing[self._stager_rr % len(syncing)].sync_step()
+            self._stager_rr += 1
+        return act
+
+    def run(self, max_steps: int = 1_000_000) -> List[GatewayRequest]:
+        """Drain every slot's queue; returns requests completed during
+        this call (all models interleaved, in completion order).  Active
+        staged syncs keep stepping after the queues empty, so returning
+        implies any begun version flip landed."""
+        drained: List[GatewayRequest] = []
+        for gw in self.gateways.values():
+            gw._drain_sink = drained
+        try:
+            for _ in range(max_steps):
+                if self.step() is None and not any(
+                        g.sync_active for g in self.gateways.values()):
+                    break
+        finally:
+            for gw in self.gateways.values():
+                gw._drain_sink = None
+        return drained
+
+    def _on_finish(self, req: GatewayRequest) -> None:
+        if req.tenant is not None:
+            self.tenants.finish(req.tenant, len(req.out_tokens))
+
+    # ----------------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, Any]:
+        """Three sections: ``fleet`` (budget + totals), ``models`` (one
+        per slot: tokens/s, queue waits, quota rejections, blocks held,
+        plus the slot's full single-gateway metrics under ``detail``),
+        and ``tenants`` (registry counters + live blocks held + oldest
+        queue wait, per tenant)."""
+        now = time.perf_counter()
+        elapsed = (now - self._t0) if self._t0 is not None else 0.0
+        models: Dict[str, Any] = {}
+        for name, gw in self.gateways.items():
+            toks = gw.stats["tokens_generated"]
+            models[name] = {
+                "tokens_generated": toks,
+                "tokens_per_s": (toks / elapsed if elapsed > 0 else 0.0),
+                "completed": gw.stats["completed"],
+                "quota_rejections": gw.stats["quota_rejections"],
+                "oldest_wait_s": gw.scheduler.oldest_wait_s(now),
+                "queue_wait_by_tier": gw.scheduler.queue_wait_by_tier(now),
+                "blocks_held": (gw.pool.allocator.num_held
+                                if gw.paged else None),
+                "block_bytes": gw.pool.block_bytes if gw.paged else None,
+                "detail": gw.metrics(),
+            }
+        tenants = self.tenants.stats()
+        for t in tenants.values():
+            t["blocks_held"] = 0
+            t["oldest_wait_s"] = 0.0
+            t["tokens_per_s"] = (t["tokens_generated"] / elapsed
+                                 if elapsed > 0 else 0.0)
+        for gw in self.gateways.values():
+            for r in gw.scheduler.running:
+                if r.tenant in tenants:
+                    tenants[r.tenant]["blocks_held"] += len(r.blocks)
+            for r in gw.scheduler.waiting:
+                if r.tenant in tenants:
+                    t = tenants[r.tenant]
+                    t["oldest_wait_s"] = max(t["oldest_wait_s"],
+                                             now - r.submit_t)
+        fleet = {
+            "models": len(self.gateways),
+            "steps": self._steps,
+            "cache_budget_bytes": self.cache_budget_bytes,
+            "cache_used_bytes": self.used_cache_bytes(),
+            "cache_reclaimable_bytes": self.reclaimable_cache_bytes(),
+            "tokens_generated": sum(m["tokens_generated"]
+                                    for m in models.values()),
+            "completed": sum(m["completed"] for m in models.values()),
+            "quota_rejections": sum(m["quota_rejections"]
+                                    for m in models.values()),
+            "oldest_wait_s": max(
+                [m["oldest_wait_s"] for m in models.values()] or [0.0]),
+        }
+        return {"fleet": fleet, "models": models, "tenants": tenants}

@@ -107,15 +107,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.licensing import FULL_TIER, LicenseTier, apply_license
-from repro.models import model as model_lib
 from repro.serving.engine import (prefill_step, prefill_suffix_step,
                                   right_align, sample, sample_lane,
                                   serve_step, serve_step_paged)
-from repro.serving.paging import NoPagedLeavesError, PagedCachePool, cdiv
-from repro.serving.prefix import PrefixCache
-from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
-                                     ScheduledAction, Scheduler, TierViewCache)
+from repro.serving.fleet import ModelSlot
+from repro.serving.paging import cdiv
+from repro.serving.scheduler import (GatewayRequest, RequestState,
+                                     ScheduledAction)
 
 
 def _pow2(n: int) -> int:
@@ -325,197 +323,29 @@ class LicensedGateway:
         ``fuse_sampling=False``.
     """
 
-    def __init__(
-        self,
-        cfg: ModelConfig,
-        params: Any,
-        *,
-        tiers: Optional[Dict[str, LicenseTier]] = None,
-        quantized: bool = False,
-        already_quantized: bool = False,
-        materialize_int8_views: bool = False,
-        max_batch: int = 8,
-        max_prompt: int = 32,
-        max_new_cap: int = 64,
-        paged: bool = True,
-        block_size: int = 16,
-        num_blocks: Optional[int] = None,
-        max_lanes: Optional[int] = None,
-        watermark_blocks: int = 0,
-        prefix_cache: bool = True,
-        chunk_size: Optional[int] = None,
-        kernel_decode: Optional[bool] = None,
-        decode_pallas: Optional[str] = None,
-        fuse_sampling: bool = True,
-        record_logits: bool = False,
-        view_capacity: int = 8,
-        version: int = 1,
-        server: Any = None,
-        model: str = "model",
-        history: int = 10_000,
-    ):
-        self.cfg = cfg
-        self.quantized = quantized or already_quantized
-        self.materialize_int8_views = materialize_int8_views
-        if self.quantized and not already_quantized:
-            from repro.serving.quantized import quantize_serving_params
+    def __init__(self, cfg: ModelConfig, params: Any, **kw):
+        # all serving state lives on a ModelSlot (serving/fleet.py) so a
+        # FleetGateway can compose many models behind one loop; the
+        # __getattr__/__setattr__ pair below forwards every slot
+        # attribute, keeping this class's execution methods (and its
+        # whole public surface) unchanged for single-model callers
+        self.slot = ModelSlot(cfg, params, **kw)
+        self.slot.gateway = self
 
-            params = quantize_serving_params(params)
-        self.max_batch = int(max_batch)
-        self.max_prompt = int(max_prompt)
-        self.max_new_cap = int(max_new_cap)
-        self.capacity = self.max_prompt + self.max_new_cap
+    def __getattr__(self, name: str):
+        # reached only when normal lookup fails: slot state (pool,
+        # scheduler, views, stats, cfg, version, ...) resolves here
+        slot = object.__getattribute__(self, "__dict__").get("slot")
+        if slot is None:
+            raise AttributeError(name)
+        return getattr(slot, name)
 
-        self.version = int(version)
-        self._weights: Dict[int, Any] = {self.version: params}
-        self.tiers: Dict[str, LicenseTier] = dict(tiers or {})
-        self.tiers.setdefault("full", FULL_TIER)
-        self.views = TierViewCache(self._materialize, capacity=view_capacity)
-
-        self.record_logits = bool(record_logits)
-        self.fuse_sampling = bool(fuse_sampling) and not self.record_logits
-        self.paged = bool(paged)
-        if self.paged:
-            self.max_lanes = int(max_lanes or self.max_batch)
-            bpl = cdiv(self.capacity, int(block_size))
-            try:
-                self.pool = PagedCachePool(
-                    cfg, self.max_lanes, self.capacity, int(block_size),
-                    int(num_blocks) if num_blocks is not None
-                    else self.max_lanes * bpl)
-            except NoPagedLeavesError:
-                # no per-token cache leaves (pure-recurrent model, or a
-                # sliding window below the pool capacity caps every
-                # attention cache): per-lane state is constant-size, so
-                # paging has nothing to page — fall back to the slab
-                self.paged = False
-        # kernel-resident decode: supported whenever every attention
-        # cache is paged — a sliding window below the pool capacity turns
-        # attention caches into per-lane ring state the batched step
-        # cannot address by block, so those models keep gather/scatter
-        supported = self.paged and cfg.window == 0
-        self.kernel_decode = (supported if kernel_decode is None
-                              else bool(kernel_decode) and supported)
-        if decode_pallas is None:
-            decode_pallas = ("pallas" if jax.default_backend() == "tpu"
-                             else "off")
-        if decode_pallas not in ("off", "pallas", "interpret"):
-            raise ValueError(f"decode_pallas={decode_pallas!r} not in "
-                             f"('off', 'pallas', 'interpret')")
-        self.decode_pallas = decode_pallas
-        if self.paged:
-            self._prefill_blocks = max(
-                1, cdiv(self.max_prompt, self.pool.block_size))
-            if (self.pool.num_blocks - int(watermark_blocks)
-                    < self._prefill_blocks):
-                raise ValueError(
-                    f"watermark_blocks={watermark_blocks} leaves no room to "
-                    f"admit a prefill ({self._prefill_blocks} blocks of "
-                    f"{self.pool.num_blocks}) — the gateway would accept "
-                    f"requests and never schedule them")
-            # prompt-prefix reuse needs every non-paged leaf reconstructible
-            # (position counters); float per-lane state can't be block-seeded
-            self.prefix = (
-                PrefixCache(self.pool.allocator, self.pool.block_size)
-                if prefix_cache and self.pool.prefix_cacheable else None)
-            # left-aligned chunked prefill: prompts advance chunk_size
-            # tokens per prefill action, strictly interleaved with decode
-            # steps.  It needs every per-lane non-paged cache leaf to be
-            # a reconstructible position counter — the same condition as
-            # prefix caching — so ring/SSM lane state opts the model out.
-            chunk_ok = self.pool.prefix_cacheable
-            if chunk_size is None:
-                self.chunk_size = self.pool.block_size if chunk_ok else 0
-            else:
-                self.chunk_size = int(chunk_size)
-                if self.chunk_size > 0 and not chunk_ok:
-                    raise ValueError(
-                        "chunked prefill needs reconstructible per-lane "
-                        "cache state (the prefix_cache condition); this "
-                        "model keeps ring/SSM lane state — pass "
-                        "chunk_size=0 or leave it None")
-            if self.chunk_size > 0:
-                self.chunk_size = min(self.chunk_size, self.max_prompt)
-            self.chunked = self.chunk_size > 0
-            self.scheduler = Scheduler(
-                self.max_lanes, self.max_batch,
-                allocator=self.pool.allocator,
-                prefill_blocks=(0 if self.chunked
-                                else self._prefill_blocks),
-                watermark_blocks=int(watermark_blocks),
-                reclaimable=(self.prefix.reclaimable
-                             if self.prefix is not None else None),
-                suffix_bucket=(self._suffix_bucket
-                               if self.prefix is not None
-                               and not self.chunked else None),
-                suffix_revalidate=(self._suffix_bucket_fresh
-                                   if self.prefix is not None
-                                   and not self.chunked else None),
-                chunked=self.chunked,
-                blocks_needed=(self._blocks_needed
-                               if self.chunked else None))
-            zero_cap = self.pool.padded_capacity
+    def __setattr__(self, name: str, value: Any) -> None:
+        slot = self.__dict__.get("slot")
+        if slot is not None and hasattr(slot, name):
+            setattr(slot, name, value)
         else:
-            if chunk_size:
-                raise ValueError(
-                    "chunked prefill requires the paged pool")
-            self.chunk_size = 0
-            self.chunked = False
-            self.max_lanes = self.max_batch
-            self.pool = CachePool(cfg, self.max_batch, self.capacity)
-            self.scheduler = Scheduler(self.max_batch, self.max_batch)
-            self.prefix = None
-            zero_cap = self.capacity
-        lane0 = model_lib.init_cache(cfg, 1, zero_cap)  # pristine batch-1 cache
-        self._zero_lanes = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x[None], (self.max_batch, *x.shape)),
-            lane0,
-        )
-
-        self._server = server
-        self.model = model
-        self._client = None           # EdgeClient when booted from a server
-        self._server_tiers: set = set()  # tier names learned from the server
-        # tier updates deferred while their requests are in flight;
-        # value None = pending revocation
-        self._pending_tiers: Dict[str, Optional[LicenseTier]] = {}
-        # staged weight sync (serving/updates.py): the active stager (one
-        # bounded step interleaved per scheduler step) and the version it
-        # is pre-registering weights/views under before the flip
-        self._stager = None
-        self._staging_version: Optional[int] = None
-
-        self._next_rid = 0
-        # bounded: a long-lived gateway must not grow host memory with
-        # every request served; metrics percentiles cover this window
-        self.completed: "deque[GatewayRequest]" = deque(maxlen=history)
-        self.trace: "deque[Tuple[str, str, Optional[int], int]]" = \
-            deque(maxlen=history)
-        self._drain_sink: Optional[List[GatewayRequest]] = None
-        self.stats: Dict[str, int] = {
-            "admitted": 0, "rejected": 0, "completed": 0,
-            "prefill_batches": 0, "decode_steps": 0,
-            "resident_decode_steps": 0, "tokens_generated": 0,
-            "preempted": 0, "max_running": 0, "max_blocks_in_use": 0,
-            # prefix-cache accounting: lane-tokens actually run through the
-            # prefill step (the FLOPs axis the bench compares), prompt
-            # tokens served from retained blocks, and copy-on-write copies
-            "prefill_lane_tokens": 0, "prefix_tokens_reused": 0,
-            "cow_copies": 0,
-            # chunked prefill: prefill actions executed (one chunk each)
-            "prefill_chunks": 0,
-        }
-        # prefix-aware admission: prefill batches served per suffix-width
-        # bucket (the grouping decision, exported via metrics())
-        self.bucket_batches: Dict[int, int] = {}
-
-        # build the jit pair for the common case (all-greedy when fused);
-        # _steps() dispatches per micro-batch, sharing the lru entries
-        # across gateway instances over the same config
-        if self.fuse_sampling:
-            _compiled_steps(cfg, True, False, False)
-        else:
-            _compiled_steps(cfg, False)
+            object.__setattr__(self, name, value)
 
     def _steps(self, reqs: List[GatewayRequest]):
         """(prefill, decode) jitted pair specialized to this micro-batch's
@@ -546,19 +376,10 @@ class LicensedGateway:
                                       kernel=self.decode_pallas)
 
     # ------------------------------------------------------------ weight views
-    def _resolve_tier(self, name: str) -> LicenseTier:
-        tier = self.tiers.get(name)
-        if tier is None and self._server is not None:
-            try:
-                tier = self._server.tier(self.model, name)
-                self.tiers[name] = tier
-                self._server_tiers.add(name)
-            except KeyError:
-                tier = None
-        if tier is None:
-            raise KeyError(f"unknown license tier {name!r}")
-        return tier
-
+    # (_resolve_tier / _materialize and the scheduler callbacks
+    # _suffix_bucket / _suffix_bucket_fresh / _blocks_needed live on
+    # ModelSlot — they are pure slot-state functions the slot wires into
+    # its own TierViewCache and Scheduler at construction)
     def _refresh_server_tiers(self) -> None:
         """Re-pull tiers learned from the server.
 
@@ -601,68 +422,22 @@ class LicensedGateway:
                 self.prefix.drop_scope(tier=name)
             del self._pending_tiers[name]
 
-    def _materialize(self, tier_name: str, version: Optional[int]):
-        """Build the (params, intervals) view served to one (tier, version)."""
-        tier = self._resolve_tier(tier_name)
-        base = self._weights[version]
-        if not self.quantized:
-            return apply_license(base, tier), None
-        if self.materialize_int8_views:
-            from repro.serving.quantized import materialize_licensed_view
-
-            return materialize_licensed_view(base, tier, self.cfg.dtype), None
-        from repro.serving.quantized import tier_intervals
-
-        return base, tier_intervals(tier)
-
     def view_for(self, tier: str, version: Optional[int] = None):
         """Licensed weight view for (tier, version) — cached."""
         return self.views.get(tier, self.version if version is None else version)
 
-    def _suffix_bucket(self, req: GatewayRequest, fresh: bool = False) -> int:
-        """Prefix-aware admission probe: the uncached suffix width this
-        request would prefill at — ``max_prompt`` when cold, down to 1
-        for a full match (the last position always recomputes).  Uses
-        the side-effect-free :meth:`PrefixCache.peek` so scheduling
-        probes never touch LRU order or reference counts, and caches the
-        answer on the request keyed by the cache's mutation epoch — a
-        deep backlog re-probes only after an insert/evict/drop actually
-        changed what a prompt could match.
-
-        The cached probe is a scheduling *hint*, not a fact: an eviction
-        between the probe and batch formation (or anything else that
-        desynchronizes the stored epoch from the tree) would let a stale
-        bucket mis-group the batch.  ``fresh=True`` bypasses the cache —
-        the scheduler re-validates every selected member through
-        :meth:`_suffix_bucket_fresh` at formation time."""
-        cached = None if fresh else getattr(req, "_suffix_probe", None)
-        if cached is not None and cached[0] == self.prefix.epoch:
-            return cached[1]
-        toks = right_align([req.prompt], self.max_prompt, 1)[0]
-        matched = self.prefix.peek((req.license, req.version), toks)
-        bucket = self.max_prompt - min(matched, self.max_prompt - 1)
-        req._suffix_probe = (self.prefix.epoch, bucket)
-        return bucket
-
-    def _suffix_bucket_fresh(self, req: GatewayRequest) -> int:
-        """Cache-bypassing probe for batch-formation re-validation."""
-        return self._suffix_bucket(req, fresh=True)
-
-    def _blocks_needed(self, req: GatewayRequest) -> int:
-        """Chunked-admission block budget: blocks covering the TRUE
-        prompt length — conservative, since adopted prefix blocks only
-        reduce the fresh allocation."""
-        return max(1, cdiv(len(req.prompt), self.pool.block_size))
-
     # -------------------------------------------------------------- admission
     def submit(self, prompt, *, license: str = "full", max_new_tokens: int = 16,
                temperature: float = 0.0, top_k: int = 0,
-               seed: int = 0) -> GatewayRequest:
-        """Admit one request: validate the tier, pin the weight version."""
+               seed: int = 0, tenant: Optional[str] = None) -> GatewayRequest:
+        """Admit one request: validate the tier, pin the weight version.
+        ``tenant`` is carried for fleet accounting — quota enforcement
+        itself lives in ``FleetGateway.submit`` (a standalone gateway
+        records but never polices it)."""
         req = GatewayRequest(
             prompt=np.asarray(prompt, np.int32).reshape(-1),
             max_new_tokens=min(int(max_new_tokens), self.max_new_cap),
-            license=license,
+            license=license, model=self.model, tenant=tenant,
             # snap sub-epsilon temperatures to greedy: the fused sampler
             # clamps its divisor at 1e-6, so only the t <= 0 branch keeps
             # the fused and host paths token-identical down there
@@ -719,13 +494,16 @@ class LicensedGateway:
         return req
 
     # ------------------------------------------------------------- scheduling
-    def step(self) -> Optional[ScheduledAction]:
+    def step(self, *, drive_stager: bool = True) -> Optional[ScheduledAction]:
         """Run ONE scheduler iteration (one prefill or decode micro-batch),
         plus — when a staged weight sync is active — ONE bounded stager
         step, so a version bump's work rides along with serving instead of
-        ever stalling it."""
+        ever stalling it.  A ``FleetGateway`` passes
+        ``drive_stager=False`` and advances at most one slot's stager
+        per fleet iteration itself."""
         act = self.scheduler.next_action()
         if act is not None:
+            act.model = self.model
             if act.kind == "prefill":
                 if self.chunked:
                     self._run_chunked_prefill(act)
@@ -733,7 +511,7 @@ class LicensedGateway:
                     self._run_prefill(act)
             else:
                 self._run_decode(act)
-        if self._stager is not None and self._stager.active:
+        if drive_stager and self._stager is not None and self._stager.active:
             self._stager.step()
         if act is None:
             return None
@@ -780,7 +558,12 @@ class LicensedGateway:
         """Allocate ``n`` blocks, reclaiming retained prefix chains (LRU)
         if the free list alone can't cover it.  The scheduler's admission
         budget counts reclaimable blocks, so this must succeed for any
-        admitted prefill."""
+        admitted prefill.  Under a fleet the global byte budget is
+        settled first: admission counted fleet-wide reclaimable bytes,
+        so cross-slot eviction must be able to make strict room."""
+        if self.fleet is not None:
+            assert self.fleet._ensure_headroom(self, n), \
+                "scheduler admitted past the fleet cache budget"
         got = self.pool.allocator.alloc(n)
         if got is None and self.prefix is not None:
             self.prefix.evict(n - self.pool.allocator.num_free)
@@ -1085,7 +868,15 @@ class LicensedGateway:
 
     def _try_alloc_one(self) -> Optional[int]:
         """One block from the free list, reclaiming retained prefix chains
-        if needed — never preempts.  None when the pool is truly full."""
+        if needed — never preempts.  None when the pool is truly full.
+        Under a fleet, the global byte budget gates first: when no
+        retained chain anywhere can be reclaimed to cover one more of
+        this slot's blocks, report exhaustion — the caller's
+        within-slot youngest-preemption frees this slot's own bytes
+        (never another model's)."""
+        if (self.fleet is not None
+                and not self.fleet._ensure_headroom(self, 1)):
+            return None
         got = self.pool.allocator.alloc(1)
         if got is None and self.prefix is not None and self.prefix.evict(1):
             got = self.pool.allocator.alloc(1)
@@ -1284,6 +1075,9 @@ class LicensedGateway:
             if self._drain_sink is not None:
                 self._drain_sink.append(req)
             self.stats["completed"] += 1
+            if self.on_finish is not None:
+                # fleet tenant accounting (inflight release + usage)
+                self.on_finish(req)
             self._gc_versions()
 
     # ---------------------------------------------------------- weight updates
@@ -1434,12 +1228,49 @@ class LicensedGateway:
         return True
 
     # ---------------------------------------------------------------- metrics
+    def _tenant_breakdown(self) -> Dict[str, Dict[str, int]]:
+        """Per-tenant usage on THIS slot: live requests (queued/running),
+        tokens generated, cache blocks held, completions in the history
+        window.  Tenant-less requests are not listed."""
+        out: Dict[str, Dict[str, int]] = {}
+
+        def _d(t: str) -> Dict[str, int]:
+            return out.setdefault(t, {
+                "inflight": 0, "queued": 0, "completed": 0,
+                "tokens_generated": 0, "blocks_held": 0})
+
+        for r in self.scheduler.running:
+            if r.tenant is None:
+                continue
+            d = _d(r.tenant)
+            d["inflight"] += 1
+            d["blocks_held"] += len(r.blocks)
+            d["tokens_generated"] += len(r.out_tokens)
+        for r in self.scheduler.waiting:
+            if r.tenant is None:
+                continue
+            d = _d(r.tenant)
+            d["inflight"] += 1
+            d["queued"] += 1
+        for r in self.completed:
+            if r.tenant is None:
+                continue
+            d = _d(r.tenant)
+            d["completed"] += 1
+            d["tokens_generated"] += len(r.out_tokens)
+        return out
+
     def metrics(self) -> Dict[str, Any]:
-        """Counters, queue-wait ages, pool occupancy, latency percentiles."""
+        """Counters, queue-wait ages, pool occupancy, latency percentiles.
+        ``oldest_wait_s``/``queue_wait_by_tier`` come from this slot's
+        OWN scheduler queue — under a fleet each slot reports its own
+        fairness ages, never another model's backlog."""
         out: Dict[str, Any] = dict(self.stats)
+        out["model"] = self.model
         out["view_cache"] = self.views.stats()
         out["oldest_wait_s"] = self.scheduler.oldest_wait_s()
         out["queue_wait_by_tier"] = self.scheduler.queue_wait_by_tier()
+        out["tenants"] = self._tenant_breakdown()
         out["cache_pool"] = {"paged": self.paged, **self.pool.stats()}
         out["decode_path"] = {"kernel_resident": self.kernel_decode,
                               "pallas": self.decode_pallas}

@@ -289,6 +289,16 @@ class PagedCachePool:
     def nbytes(self) -> int:
         return sum(int(x.nbytes) for x in self._storage)
 
+    @property
+    def block_bytes(self) -> int:
+        """Bytes ONE physical block occupies across every paged leaf —
+        the exchange rate a fleet-wide cache budget (serving/fleet.py)
+        converts between heterogeneous models' blocks with.  Exact: each
+        paged leaf's storage is ``num_blocks + 1`` equal block slabs."""
+        return sum(int(arr.nbytes) // (self.num_blocks + 1)
+                   for arr, (paged, _, _) in zip(self._storage, self._meta)
+                   if paged)
+
     def pad_lanes(self, lanes: Sequence[int], width: int) -> List[int]:
         return pad_lane_ids(lanes, width, self.scratch)
 

@@ -70,6 +70,12 @@ class GatewayRequest:
     top_k: int = 0                           # 0 = no top-k truncation
     seed: int = 0
 
+    # fleet serving (serving/fleet.py): the model slot the request was
+    # submitted to and the tenant it is billed against — together with
+    # (license, version) they complete the fleet's micro-batch key
+    model: Optional[str] = None
+    tenant: Optional[str] = None
+
     # assigned by the gateway
     rid: int = -1
     version: Optional[int] = None            # weight version pinned at admission
@@ -115,13 +121,17 @@ class ScheduledAction:
 
     ``suffix_bucket`` records the prefix-aware admission decision for
     prefills: the uncached-suffix width every member of the batch shares
-    (None when grouping is off or for decode actions)."""
+    (None when grouping is off or for decode actions).  ``model`` is the
+    serving slot's model name — under a ``FleetGateway`` every action is
+    keyed (model, tier, version); a standalone gateway stamps its own
+    (single) model name."""
 
     kind: str                                # "prefill" | "decode"
     tier: str
     version: Optional[int]
     requests: List[GatewayRequest]
     suffix_bucket: Optional[int] = None
+    model: Optional[str] = None
 
 
 class TierViewCache:
@@ -310,6 +320,19 @@ class Scheduler:
         # per-request block need (chunked admission budgets per prompt
         # length instead of the flat worst-case ``prefill_blocks``)
         self.blocks_needed = blocks_needed
+        # fleet hooks, wired post-construction by FleetGateway
+        # (serving/fleet.py).  ``global_budget`` returns how many MORE of
+        # this slot's blocks the fleet-wide cache budget can cover
+        # (counting every slot's reclaimable chains); admission takes the
+        # min of the local and global budgets, so one hot model cannot
+        # admit past the fleet's shared memory even with a free local
+        # pool.  ``admission_filter`` re-validates a QUEUED request at
+        # batch formation (tenant entitlement revoked since submit);
+        # returning False drops it from the queue — the callback itself
+        # marks the request rejected.
+        self.global_budget: Optional[Callable[[], int]] = None
+        self.admission_filter: Optional[
+            Callable[[GatewayRequest], bool]] = None
         self.waiting: Deque[GatewayRequest] = deque()
         self.running: List[GatewayRequest] = []
         self._free_lanes: List[int] = list(range(num_lanes))
@@ -416,6 +439,8 @@ class Scheduler:
             budget = self.allocator.num_free - self.watermark_blocks
             if self.reclaimable is not None:
                 budget += self.reclaimable()
+            if self.global_budget is not None:
+                budget = min(budget, self.global_budget())
             room = min(room, max(0, budget // self.prefill_blocks))
         return room
 
@@ -466,6 +491,14 @@ class Scheduler:
         return ScheduledAction("prefill", key[0], key[1], list(members))
 
     def _admission_batch(self) -> Optional[ScheduledAction]:
+        if self.admission_filter is not None and self.waiting:
+            # entitlement re-check at batch formation: a tenant revoked
+            # since submit must not reach a lane.  The filter marks the
+            # request rejected; only survivors stay queued.  In-flight
+            # (PREFILLING/RUNNING) requests are never revisited — like
+            # tier redefinitions, a revocation drains, it never cancels.
+            self.waiting = deque(
+                r for r in self.waiting if self.admission_filter(r))
         room = self._prefill_room()
         if not (room and self.waiting):
             return None
@@ -504,6 +537,8 @@ class Scheduler:
             budget = self.allocator.num_free - self.watermark_blocks
             if self.reclaimable is not None:
                 budget += self.reclaimable()
+            if self.global_budget is not None:
+                budget = min(budget, self.global_budget())
         batch: List[GatewayRequest] = []
         remaining: Deque[GatewayRequest] = deque()
         for r in self.waiting:               # one pass: select + requeue

@@ -95,11 +95,24 @@ class UpdateStager:
 
     def __init__(self, gateway: Any, server: Any, *,
                  max_step_bytes: int = 256 << 10,
-                 requant_layers_per_step: int = 2):
+                 requant_layers_per_step: int = 2,
+                 background_fetch: bool = True,
+                 fetch_depth: int = 2):
         self.gw = gateway
         self.server = server
         self.max_step_bytes = int(max_step_bytes)
         self.requant_layers_per_step = int(requant_layers_per_step)
+        # true background fetch: the wire transfer (server.fetch_update
+        # — pure in-memory cursor slicing + masking, no sqlite) runs on
+        # a worker thread so wire time overlaps compute; the APPLY stays
+        # on the serving thread, the flip stays at a step boundary.  The
+        # worker stays at most ``fetch_depth`` parts-batches ahead
+        # (bounded queue), so staging memory stays bounded too.
+        self.background_fetch = bool(background_fetch)
+        self.fetch_depth = max(1, int(fetch_depth))
+        self._fetch_thread = None
+        self._fetch_queue = None
+        self._fetch_stop = None
         self.phase = "idle"
         self.to_version: Optional[int] = None
         self._cursor = None
@@ -125,6 +138,7 @@ class UpdateStager:
         out["to_version"] = self.to_version
         out["layers_touched"] = len(self._touched)
         out["max_step_bytes_bound"] = self.max_step_bytes
+        out["background_fetch"] = self.background_fetch
         return out
 
     # ------------------------------------------------------------------ begin
@@ -170,7 +184,72 @@ class UpdateStager:
                               if gw.quantized and gw.version == client.version
                               else None)
         self.phase = "stage"
+        if self.background_fetch:
+            self._start_fetch_worker()
         return True
+
+    # ------------------------------------------------------- background fetch
+    def _start_fetch_worker(self) -> None:
+        """Spawn the wire-transfer worker: it loops ``fetch_update``
+        against the (private, in-memory) cursor and hands each bounded
+        parts batch through a depth-limited queue.  Only the *transfer*
+        is off-thread — the delta APPLY consumes the queue on the
+        serving thread inside :meth:`_step_stage`, so device state is
+        still touched by exactly one thread."""
+        import queue
+        import threading
+
+        q: "queue.Queue" = queue.Queue(maxsize=self.fetch_depth)
+        stop = threading.Event()
+        cursor, server, cap = self._cursor, self.server, self.max_step_bytes
+
+        def _loop() -> None:
+            try:
+                while not stop.is_set():
+                    parts = server.fetch_update(cursor, cap)
+                    done = cursor.done
+                    while not stop.is_set():
+                        try:
+                            q.put(("parts", parts, done), timeout=0.05)
+                            break
+                        except queue.Full:
+                            continue
+                    if done:
+                        return
+            except BaseException as exc:  # noqa: BLE001 — relayed to step()
+                # surface the failure on the serving thread: _step_stage
+                # re-raises it, step() aborts the session (the standard
+                # teardown), and the exception propagates to the caller
+                while not stop.is_set():
+                    try:
+                        q.put(("error", exc, True), timeout=0.05)
+                        return
+                    except queue.Full:
+                        continue
+
+        self._fetch_queue = q
+        self._fetch_stop = stop
+        self._fetch_thread = threading.Thread(
+            target=_loop, name="update-stager-fetch", daemon=True)
+        self._fetch_thread.start()
+
+    def _stop_fetch_worker(self) -> None:
+        """Tear the worker down (idempotent): signal stop, unblock any
+        pending put by draining, join."""
+        if self._fetch_thread is None:
+            return
+        import queue
+
+        self._fetch_stop.set()
+        try:
+            while True:
+                self._fetch_queue.get_nowait()
+        except queue.Empty:
+            pass
+        self._fetch_thread.join(timeout=5.0)
+        self._fetch_thread = None
+        self._fetch_queue = None
+        self._fetch_stop = None
 
     # ------------------------------------------------------------------- step
     def step(self) -> Optional[str]:
@@ -210,6 +289,7 @@ class UpdateStager:
         yank the now-live weights)."""
         if not self.active:
             return
+        self._stop_fetch_worker()
         gw = self.gw
         if self.to_version is not None \
                 and gw._staging_version == self.to_version:
@@ -263,7 +343,17 @@ class UpdateStager:
         self._pending_buf = None
 
     def _step_stage(self) -> None:
-        parts = self.server.fetch_update(self._cursor, self.max_step_bytes)
+        if self._fetch_thread is not None:
+            # the wire transfer already happened (or is happening) on the
+            # worker; a blocking get here is never slower than the
+            # synchronous fetch it replaces, and is usually a no-wait hit
+            kind, payload, done = self._fetch_queue.get()
+            if kind == "error":
+                raise payload
+            parts = payload
+        else:
+            parts = self.server.fetch_update(self._cursor, self.max_step_bytes)
+            done = self._cursor.done
         if parts:
             for part in parts:
                 self._apply_part(part)
@@ -273,7 +363,12 @@ class UpdateStager:
             self.stats_["max_step_bytes_applied"] = max(
                 self.stats_["max_step_bytes_applied"], got)
             self._touched.update(p.layer for p in parts)
-        if self._cursor.done:
+        if done:
+            # worker (if any) has exited on its own: ``done`` rode the
+            # queue with the final batch, so cursor fields read from the
+            # serving thread from here on (fetched_bytes at the flip)
+            # are past the last worker write
+            self._stop_fetch_worker()
             if self._pending_layer is not None:
                 self._finalize_layer()
             # assemble the staged tree: touched layers are the patched

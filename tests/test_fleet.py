@@ -1,0 +1,424 @@
+"""Fleet serving: ModelSlot composition, global cache budget, tenant
+licensing quotas.
+
+The tentpole invariants under test:
+
+* A :class:`FleetGateway` serving N heterogeneous configs produces
+  BIT-IDENTICAL tokens per model to N isolated ``LicensedGateway``\\ s —
+  the fleet loop only interleaves slots, it never changes what a slot
+  computes.
+* Every executed micro-batch belongs to exactly one (model, tier,
+  version): actions carry their slot's model name.
+* The global byte-denominated cache budget gates admission fleet-wide
+  while per-slot pools stay untouched: contention on one model never
+  starves another that has headroom, and the budget is never exceeded.
+* :class:`TenantRegistry` enforcement happens at submit (entitlement +
+  concurrency + rate) AND at batch formation (revocation while queued),
+  while already-decoding requests always drain to completion.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.licensing import LicenseTier
+from repro.models import init_params
+from repro.serving import (FleetGateway, LicensedGateway, RequestState,
+                           TenantRegistry)
+
+MAX_PROMPT = 8
+MAX_NEW = 4
+
+TIERS = {"free": LicenseTier(name="free", masks={"*": ((0.0, 0.004),)})}
+
+TRIO_NAMES = ("qwen2.5-3b", "mamba2-130m", "recurrentgemma-2b")
+
+
+@pytest.fixture(scope="module")
+def trio():
+    """Three heterogeneous smoke configs: GQA transformer (paged +
+    chunked prefill), pure SSM (contiguous slab fallback), and a
+    sliding-window/recurrent hybrid (paged, unchunked)."""
+    out = {}
+    for i, name in enumerate(TRIO_NAMES):
+        cfg = smoke_variant(get_config(name))
+        out[name] = (cfg, init_params(jax.random.PRNGKey(i), cfg))
+    return out
+
+
+def _prompt(seed, n=MAX_PROMPT):
+    return np.random.default_rng(seed).integers(0, 500, n, dtype=np.int32)
+
+
+def _slot_kw(**kw):
+    kw.setdefault("tiers", dict(TIERS))
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_prompt", MAX_PROMPT)
+    kw.setdefault("max_new_cap", MAX_NEW)
+    return kw
+
+
+def _fleet(trio, **fleet_kw):
+    fleet = FleetGateway(**fleet_kw)
+    for name, (cfg, params) in trio.items():
+        fleet.add_model(name, cfg, params, **_slot_kw())
+    return fleet
+
+
+# ------------------------------------------------------------ differential
+def test_fleet_matches_isolated_gateways(trio):
+    """Acceptance criterion: three heterogeneous configs served by one
+    FleetGateway produce bit-identical tokens per model versus three
+    isolated gateways fed the same per-model request streams."""
+    jobs = []  # (model, seed, license, max_new_tokens)
+    for i, name in enumerate(TRIO_NAMES):
+        for j in range(3):
+            jobs.append((name, 10 * i + j,
+                         "free" if (i + j) % 2 else "full", 2 + j % 3))
+
+    fleet = _fleet(trio)
+    fleet_reqs = [fleet.submit(m, _prompt(s), license=lic,
+                               max_new_tokens=mn, seed=s)
+                  for (m, s, lic, mn) in jobs]
+    fleet.run()
+    assert all(r.state == RequestState.DONE for r in fleet_reqs)
+    assert all(len(r.out_tokens) == mn
+               for r, (_, _, _, mn) in zip(fleet_reqs, jobs))
+
+    for name, (cfg, params) in trio.items():
+        gw = LicensedGateway(cfg, params, model=name, **_slot_kw())
+        for (m, s, lic, mn), fr in zip(jobs, fleet_reqs):
+            if m != name:
+                continue
+            r = gw.submit(_prompt(s), license=lic,
+                          max_new_tokens=mn, seed=s)
+            gw.run()
+            assert r.state == RequestState.DONE
+            assert r.out_tokens == fr.out_tokens, \
+                f"{name}: fleet tokens diverge from isolated gateway"
+
+
+def test_fleet_actions_are_model_tagged_and_interleaved(trio):
+    """Every executed action names exactly one slot, every slot runs,
+    and the round-robin interleaves rather than draining one model
+    first."""
+    fleet = _fleet(trio)
+    for i, name in enumerate(TRIO_NAMES):
+        fleet.submit(name, _prompt(i), license="full", max_new_tokens=3)
+    acts = []
+    while True:
+        act = fleet.step()
+        if act is None:
+            break
+        acts.append(act)
+    assert {a.model for a in acts} == set(TRIO_NAMES)
+    # with one ready prompt per slot, the first three actions hit three
+    # distinct slots — round-robin, not drain-one-model-first
+    assert len({a.model for a in acts[:3]}) == 3
+    # micro-batches stay (model, tier, version)-homogeneous: each slot's
+    # own trace never mixes tiers within an action (single-tier feed
+    # here, so every trace row carries that one tier)
+    for gw in fleet.gateways.values():
+        for kind, tier, version, n in gw.trace:
+            assert tier == "full" and n >= 1
+
+
+# ---------------------------------------------------------- global budget
+def test_global_budget_contention_spares_other_model(trio):
+    """Two tenants contend for the last admissible blocks of model "a"
+    while model "b" has headroom: the budget is never exceeded, "a"'s
+    overflow request waits (no cross-slot preemption), "b" is never
+    starved, and everyone eventually completes."""
+    cfg, params = trio["qwen2.5-3b"]
+    params_b = init_params(jax.random.PRNGKey(9), cfg)
+    tenants = TenantRegistry()
+    tenants.register("t1", entitlements=("a:*",))
+    tenants.register("t2", entitlements=("a:*",))
+    tenants.register("t3", entitlements=("b:*",))
+
+    # per-request need is one block (capacity 12 < block_size 16), so a
+    # two-block budget holds exactly one live request per slot
+    probe = LicensedGateway(cfg, params, model="probe",
+                            **_slot_kw(max_batch=1, prefix_cache=False))
+    budget = 2 * probe.pool.block_bytes
+
+    fleet = FleetGateway(cache_budget_bytes=budget, tenants=tenants)
+    gw_a = fleet.add_model("a", cfg, params,
+                           **_slot_kw(max_batch=1, prefix_cache=False))
+    fleet.add_model("b", cfg, params_b,
+                    **_slot_kw(max_batch=1, prefix_cache=False))
+
+    r1 = fleet.submit("a", _prompt(0), tenant="t1", license="full",
+                      max_new_tokens=MAX_NEW)
+    r2 = fleet.submit("a", _prompt(1), tenant="t2", license="full",
+                      max_new_tokens=MAX_NEW)
+    r3 = fleet.submit("b", _prompt(2), tenant="t3", license="full",
+                      max_new_tokens=MAX_NEW)
+    assert all(r.state != RequestState.REJECTED for r in (r1, r2, r3))
+
+    saw_contention = False
+    for _ in range(10_000):
+        act = fleet.step()
+        used = fleet.used_cache_bytes()
+        assert used <= budget, "global cache budget exceeded"
+        if used == budget and len(gw_a.scheduler.waiting) == 1:
+            saw_contention = True            # r2 gated while budget full
+        if act is None:
+            break
+    assert saw_contention
+    assert all(r.state == RequestState.DONE for r in (r1, r2, r3))
+    stats = tenants.stats()
+    assert all(stats[t]["completed"] == 1 and stats[t]["inflight"] == 0
+               for t in ("t1", "t2", "t3"))
+
+
+def test_budget_must_hold_one_request_per_paged_slot(trio):
+    """A budget that cannot cover one full-capacity request per paged
+    slot would admit requests nothing can ever finish — attach refuses
+    it up front."""
+    cfg, params = trio["qwen2.5-3b"]
+    fleet = FleetGateway(cache_budget_bytes=1)
+    with pytest.raises(ValueError, match="cannot hold"):
+        fleet.add_model("a", cfg, params, **_slot_kw())
+
+
+# ------------------------------------------------------- tenant enforcement
+def test_unknown_model_and_unknown_tenant_rejected(trio):
+    fleet = _fleet(trio)
+    r = fleet.submit("no-such-model", _prompt(0))
+    assert r.state == RequestState.REJECTED
+    assert "unknown model" in r.error
+    r2 = fleet.submit("qwen2.5-3b", _prompt(0), tenant="ghost")
+    assert r2.state == RequestState.REJECTED
+    assert "unknown tenant" in r2.error
+
+
+def test_zero_quota_tenant_never_admitted(trio):
+    """max_concurrent=0: entitled on paper, admitted never — and the
+    rejection is visible in tenant, model, and fleet metrics."""
+    cfg, params = trio["qwen2.5-3b"]
+    tenants = TenantRegistry()
+    tenants.register("broke", max_concurrent=0)
+    fleet = FleetGateway(tenants=tenants)
+    fleet.add_model("lm", cfg, params, **_slot_kw())
+
+    r = fleet.submit("lm", _prompt(0), tenant="broke", license="free")
+    assert r.state == RequestState.REJECTED
+    assert "quota" in r.error
+    s = tenants.stats()["broke"]
+    assert (s["submitted"], s["admitted"], s["quota_rejections"]) == (1, 0, 1)
+    m = fleet.metrics()
+    assert m["models"]["lm"]["quota_rejections"] == 1
+    assert m["fleet"]["quota_rejections"] == 1
+    assert m["fleet"]["completed"] == 0
+
+
+def test_entitlement_not_held_rejected_at_submit(trio):
+    cfg, params = trio["qwen2.5-3b"]
+    tenants = TenantRegistry()
+    tenants.register("narrow", entitlements=("lm:free",))
+    fleet = FleetGateway(tenants=tenants)
+    fleet.add_model("lm", cfg, params, **_slot_kw())
+
+    ok = fleet.submit("lm", _prompt(0), tenant="narrow", license="free",
+                      max_new_tokens=2)
+    bad = fleet.submit("lm", _prompt(1), tenant="narrow", license="full",
+                       max_new_tokens=2)
+    assert ok.state != RequestState.REJECTED
+    assert bad.state == RequestState.REJECTED
+    assert "not entitled" in bad.error
+    fleet.run()
+    assert ok.state == RequestState.DONE
+
+
+def test_revocation_while_queued_drains_inflight(trio):
+    """Mid-flight entitlement revocation: the decoding request always
+    completes (never cancelled mid-generation); the queued one is
+    rejected at the next batch formation."""
+    cfg, params = trio["qwen2.5-3b"]
+    tenants = TenantRegistry()
+    tenants.register("acme", entitlements=("lm:free",))
+    fleet = FleetGateway(tenants=tenants)
+    fleet.add_model("lm", cfg, params, **_slot_kw(max_batch=1))
+
+    r1 = fleet.submit("lm", _prompt(0), tenant="acme", license="free",
+                      max_new_tokens=MAX_NEW)
+    r2 = fleet.submit("lm", _prompt(1), tenant="acme", license="free",
+                      max_new_tokens=MAX_NEW)
+    # step until r1 holds a lane and decodes while r2 still queues
+    for _ in range(10_000):
+        fleet.step()
+        if r1.state == RequestState.RUNNING:
+            break
+    assert r1.state == RequestState.RUNNING
+    assert r2.state == RequestState.QUEUED
+
+    tenants.revoke("acme", "lm", "free")
+    fleet.run()
+    assert r1.state == RequestState.DONE          # drained, not cancelled
+    assert len(r1.out_tokens) == MAX_NEW
+    assert r2.state == RequestState.REJECTED
+    assert "revoked while queued" in r2.error
+    s = tenants.stats()["acme"]
+    assert (s["completed"], s["quota_rejections"], s["inflight"]) == (1, 1, 0)
+    # revoke removed the covering pattern: nothing left to submit under
+    assert not tenants.entitled("acme", "lm", "free")
+    r3 = fleet.submit("lm", _prompt(2), tenant="acme", license="free")
+    assert r3.state == RequestState.REJECTED
+
+
+def test_token_bucket_burst_then_drain():
+    """rate=1/s with burst 2 under an injected clock: the burst spends,
+    the bucket refills at the advertised rate, and caps at burst."""
+    now = {"t": 0.0}
+    reg = TenantRegistry(clock=lambda: now["t"])
+    reg.register("u", rate=1.0, burst=2.0)
+
+    assert reg.acquire("u", "m", "full") is None       # burst token 1
+    assert reg.acquire("u", "m", "full") is None       # burst token 2
+    denied = reg.acquire("u", "m", "full")
+    assert denied is not None and "rate-limited" in denied
+
+    now["t"] += 1.0                                    # refills one token
+    assert reg.acquire("u", "m", "full") is None
+    assert "rate-limited" in reg.acquire("u", "m", "full")
+
+    now["t"] += 30.0                                   # caps at burst=2
+    assert reg.acquire("u", "m", "full") is None
+    assert reg.acquire("u", "m", "full") is None
+    assert "rate-limited" in reg.acquire("u", "m", "full")
+
+    s = reg.stats()["u"]
+    assert s["quota_rejections"] == 3
+    assert s["rate_tokens_available"] < 1.0
+
+
+def test_rate_limit_enforced_at_fleet_submit(trio):
+    cfg, params = trio["qwen2.5-3b"]
+    now = {"t": 0.0}
+    tenants = TenantRegistry(clock=lambda: now["t"])
+    tenants.register("slow", rate=0.5, burst=1.0)
+    fleet = FleetGateway(tenants=tenants)
+    fleet.add_model("lm", cfg, params, **_slot_kw())
+
+    a = fleet.submit("lm", _prompt(0), tenant="slow", license="free",
+                     max_new_tokens=2)
+    b = fleet.submit("lm", _prompt(1), tenant="slow", license="free",
+                     max_new_tokens=2)
+    assert a.state != RequestState.REJECTED
+    assert b.state == RequestState.REJECTED and "rate-limited" in b.error
+    now["t"] += 2.0                                    # one token back
+    c = fleet.submit("lm", _prompt(2), tenant="slow", license="free",
+                     max_new_tokens=2)
+    assert c.state != RequestState.REJECTED
+    fleet.run()
+    assert a.state == RequestState.DONE
+    assert c.state == RequestState.DONE
+
+
+# ----------------------------------------------------------------- metrics
+def test_fleet_metrics_schema(trio):
+    """Satellite: the three-section metrics schema — fleet totals,
+    per-model breakdown (with full single-gateway detail), per-tenant
+    usage — asserted key by key."""
+    tenants = TenantRegistry()
+    tenants.register("acme")
+    fleet = _fleet(trio, tenants=tenants)
+    reqs = [fleet.submit(name, _prompt(i), tenant="acme", license="free",
+                         max_new_tokens=2)
+            for i, name in enumerate(TRIO_NAMES)]
+    reqs.append(fleet.submit("qwen2.5-3b", _prompt(7), license="full",
+                             max_new_tokens=2))       # tenant-less
+    fleet.run()
+    assert all(r.state == RequestState.DONE for r in reqs)
+
+    m = fleet.metrics()
+    assert set(m) == {"fleet", "models", "tenants"}
+    for key in ("models", "steps", "cache_budget_bytes", "cache_used_bytes",
+                "cache_reclaimable_bytes", "tokens_generated", "completed",
+                "quota_rejections", "oldest_wait_s"):
+        assert key in m["fleet"], f"fleet section missing {key}"
+    assert m["fleet"]["models"] == len(TRIO_NAMES)
+    assert m["fleet"]["completed"] == 4
+
+    assert set(m["models"]) == set(TRIO_NAMES)
+    for name, mm in m["models"].items():
+        for key in ("tokens_generated", "tokens_per_s", "completed",
+                    "quota_rejections", "oldest_wait_s",
+                    "queue_wait_by_tier", "blocks_held", "block_bytes",
+                    "detail"):
+            assert key in mm, f"models[{name}] missing {key}"
+        assert mm["detail"]["model"] == name
+        assert "tenants" in mm["detail"]
+    assert m["fleet"]["tokens_generated"] == sum(
+        mm["tokens_generated"] for mm in m["models"].values())
+
+    assert set(m["tenants"]) == {"acme"}
+    t = m["tenants"]["acme"]
+    for key in ("inflight", "submitted", "admitted", "completed",
+                "tokens_generated", "quota_rejections", "max_concurrent",
+                "rate", "rate_tokens_available", "entitlements",
+                "blocks_held", "oldest_wait_s", "tokens_per_s"):
+        assert key in t, f"tenants[acme] missing {key}"
+    assert t["completed"] == 3 and t["inflight"] == 0
+    assert t["tokens_generated"] == 6
+    # the tenant-less request is absent from tenant accounting but
+    # present in the per-model tenant breakdown only under its tenants
+    assert m["models"]["qwen2.5-3b"]["detail"]["tenants"].get(
+        "acme", {}).get("completed") == 1
+
+
+def test_queue_waits_are_per_slot(trio):
+    """Satellite fix: oldest_wait_s / queue_wait_by_tier come from each
+    slot's OWN queue — load on one model never shows up as wait on an
+    idle one."""
+    fleet = _fleet(trio)
+    fleet.submit("qwen2.5-3b", _prompt(0), license="free",
+                 max_new_tokens=2)
+    time.sleep(0.02)
+    m = fleet.metrics()
+    assert m["models"]["qwen2.5-3b"]["oldest_wait_s"] > 0.0
+    assert m["models"]["mamba2-130m"]["oldest_wait_s"] == 0.0
+    assert m["models"]["recurrentgemma-2b"]["oldest_wait_s"] == 0.0
+    assert "free" in m["models"]["qwen2.5-3b"]["queue_wait_by_tier"]
+    assert m["models"]["mamba2-130m"]["queue_wait_by_tier"] == {}
+    assert m["fleet"]["oldest_wait_s"] == \
+        m["models"]["qwen2.5-3b"]["oldest_wait_s"]
+    fleet.run()
+
+
+# ------------------------------------------------------ stager interleaving
+class _FakeStager:
+    """Stand-in with the two members the fleet loop touches (``active``,
+    ``step``) — counts how many bounded steps it was given."""
+
+    def __init__(self, n):
+        self.left = n
+
+    @property
+    def active(self):
+        return self.left > 0
+
+    def step(self):
+        assert self.left > 0
+        self.left -= 1
+        return "stage"
+
+
+def test_at_most_one_stager_step_per_fleet_iteration(trio):
+    """Per-slot staged-sync interleaving: each fleet iteration advances
+    AT MOST one slot's stager, round-robin, so concurrent version flips
+    on different models never stack their bounded work into one step."""
+    fleet = _fleet(trio)
+    gws = list(fleet.gateways.values())[:2]
+    fakes = [_FakeStager(3), _FakeStager(3)]
+    gws[0]._stager = fakes[0]
+    gws[1]._stager = fakes[1]
+    for i in range(6):
+        fleet.step()
+        done = sum(3 - f.left for f in fakes)
+        assert done == i + 1, "more than one stager stepped this iteration"
+    assert fakes[0].left == 0 and fakes[1].left == 0
+    assert not any(g.sync_active for g in fleet.gateways.values())

@@ -4,7 +4,9 @@ Covers the staged-update subsystem (``serving/updates.py``): bounded
 stager steps, mid-stream token equivalence across a staged ``sync()``,
 prewarmed views, the atomic weights+tiers flip — and the two
 ``_mask_packet`` wire-format regressions (chunk dtype, explicit
-compression flags)."""
+compression flags) — plus the background-fetch worker (wire transfer
+off-thread, apply on the serving thread)."""
+import threading
 import zlib
 
 import jax
@@ -432,6 +434,106 @@ def test_failed_staging_aborts_clean(setup):
     assert gw.begin_sync() is True           # fresh cursor, same failure
     with pytest.raises(KeyError):
         gw.sync_step()
+
+
+def test_background_fetch_runs_on_worker_thread(setup):
+    """The wire transfer (fetch_update) happens on the stager's worker
+    thread, never the serving thread; the flip still lands and the
+    result is identical to a fresh boot from the server."""
+    cfg, params = setup
+    server = _server_with(params)
+    gw = _boot(cfg, server, params)
+    warm = gw.submit(_prompt(0), license="free", max_new_tokens=1)
+    gw.run()
+    assert warm.state == RequestState.DONE
+    newp = jax.tree_util.tree_map(lambda x: np.asarray(x) * 1.01, params)
+    server.publish("lm", newp, tag="v2")
+
+    fetch_threads = []
+    orig = server.fetch_update
+
+    def spy(cursor, max_bytes):
+        fetch_threads.append(threading.current_thread().name)
+        return orig(cursor, max_bytes)
+
+    server.fetch_update = spy
+    assert gw.begin_sync(max_step_bytes=16 << 10) is True
+    assert gw.metrics()["staged_update"]["background_fetch"] is True
+    while gw.sync_active:
+        gw.sync_step()
+    del server.fetch_update
+    assert len(fetch_threads) > 1                # genuinely incremental
+    assert all(t == "update-stager-fetch" for t in fetch_threads)
+    assert gw.version == gw._client.version != 1
+
+    fresh = _boot(cfg, server, params)
+    want = fresh.submit(_prompt(7), license="free", max_new_tokens=4)
+    fresh.run()
+    got = gw.submit(_prompt(7), license="free", max_new_tokens=4)
+    gw.run()
+    assert got.out_tokens == want.out_tokens
+
+
+def test_background_fetch_off_equivalence(setup):
+    """``background_fetch=False`` (synchronous wire transfer) stages the
+    exact same bytes and lands the exact same weights."""
+    cfg, params = setup
+
+    def _synced(background_fetch):
+        server = _server_with(params)
+        gw = _boot(cfg, server, params)
+        newp = jax.tree_util.tree_map(lambda x: np.asarray(x) * 1.01,
+                                      params)
+        server.publish("lm", newp, tag="v2")
+        assert gw.begin_sync(max_step_bytes=16 << 10,
+                             background_fetch=background_fetch) is True
+        while gw.sync_active:
+            gw.sync_step()
+        return gw
+
+    a = _synced(True)
+    b = _synced(False)
+    sa, sb = a.metrics()["staged_update"], b.metrics()["staged_update"]
+    assert sa["bytes_applied"] == sb["bytes_applied"] > 0
+    assert sa["parts_applied"] == sb["parts_applied"]
+    assert (sa["background_fetch"], sb["background_fetch"]) == (True, False)
+    for x, y in zip(jax.tree_util.tree_leaves(a._client.params),
+                    jax.tree_util.tree_leaves(b._client.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_background_fetch_worker_exception_aborts(setup):
+    """A wire failure on the WORKER thread surfaces on the serving
+    thread and runs the standard abort teardown: session failed, staging
+    version unregistered, gateway still serving, fresh sync possible."""
+    cfg, params = setup
+    server = _server_with(params)
+    gw = _boot(cfg, server, params)
+    newp = jax.tree_util.tree_map(lambda x: np.asarray(x) * 1.01, params)
+    server.publish("lm", newp, tag="v2")
+
+    orig = server.fetch_update
+
+    def broken(cursor, max_bytes):
+        raise ConnectionError("wire dropped")
+
+    server.fetch_update = broken
+    assert gw.begin_sync(max_step_bytes=16 << 10) is True
+    with pytest.raises(ConnectionError, match="wire dropped"):
+        while gw.sync_active:
+            gw.sync_step()
+    assert not gw.sync_active
+    assert gw.version == 1 and gw._staging_version is None
+    assert gw.metrics()["staged_update"]["phase"] == "failed"
+    assert gw._stager._fetch_thread is None      # worker joined
+
+    # wire restored: serving never stopped, and a fresh sync lands
+    server.fetch_update = orig
+    r = gw.submit(_prompt(2), license="free", max_new_tokens=2)
+    gw.run()
+    assert r.state == RequestState.DONE and r.version == 1
+    assert gw.sync() is True
+    assert gw.version == gw._client.version != 1
 
 
 def test_sync_already_current_refreshes_tiers_only(setup):
