@@ -25,7 +25,7 @@ import traceback
 
 SUITES = ("storage", "update-wire", "licensing", "kernels", "serving",
           "gateway", "paging", "prefix", "decode", "update", "prefill",
-          "fleet", "roofline")
+          "fleet", "telemetry", "roofline")
 
 
 def main(argv=None) -> None:
@@ -48,8 +48,8 @@ def main(argv=None) -> None:
     from benchmarks import (decode_bench, fleet_bench, gateway_bench,
                             kernel_bench, licensing_ladder, paging_bench,
                             prefill_bench, prefix_bench, roofline_table,
-                            serving_bench, storage_cost, update_bench,
-                            update_latency)
+                            serving_bench, storage_cost, telemetry_bench,
+                            update_bench, update_latency)
 
     modules = {
         "storage": storage_cost,        # paper Table 1
@@ -64,6 +64,7 @@ def main(argv=None) -> None:
         "update": update_bench,         # staged sync vs blocking decode stall
         "prefill": prefill_bench,       # chunked prefill decode-stall SLO
         "fleet": fleet_bench,           # multi-model fleet vs isolated
+        "telemetry": telemetry_bench,   # observability <3% overhead gate
         "roofline": roofline_table,     # deliverable (g)
     }
 

@@ -1,0 +1,123 @@
+"""Observability overhead gate: decode tokens/s, telemetry on vs off.
+
+The observability layer (serving/telemetry.py + tracing.py) is designed
+to be ALWAYS ON in production: pull-model counters/gauges read existing
+``stats`` dicts only at export time, histogram observes are one bisect +
+one counter bump, trace events are O(1) tuple appends onto a bounded
+deque.  This bench measures the end-to-end price on the hot path — a
+decode-heavy workload drained through two otherwise identical gateways,
+``telemetry=False`` (the do-nothing baseline: no spans, no observes)
+vs ``telemetry=True`` (full tracing + histograms + audit) — and
+ASSERTS the instrumented gateway sustains >= ``MIN_RATIO`` (0.97x,
+i.e. <3% overhead) of the baseline's decode tokens/s.
+
+Each side is warmed first (jit + view materialization excluded), then
+measured as INTERLEAVED off/on trial pairs; the gate takes the best
+per-pair ratio.  Pairing + best-of damps the two noise sources that
+would otherwise dominate a 3% gate on a shared box: per-drain
+scheduler/allocator jitter, and machine-wide drift between the off and
+on measurement windows.
+
+Set ``TELEMETRY_TRACE_OUT=/path/trace.json`` to also dump the
+instrumented run's whole-gateway Chrome trace (Perfetto-loadable; CI
+uploads it as an artifact).  The tape is validated either way.
+
+Rows: ``telemetry/decode_off`` and ``telemetry/decode_on`` (us per
+generated token + tokens/s), ``telemetry/overhead`` (the ratio the gate
+asserts, plus trace/audit volumes for scale).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.licensing import LicenseTier
+from repro.models import init_params
+from repro.serving import LicensedGateway, validate_chrome_trace
+
+ARCH = "qwen2.5-3b"
+PROMPT_LEN = 8
+MIN_RATIO = 0.97                 # the <3% decode-overhead gate
+
+
+def _gateway(cfg, params, tiers, telemetry, max_new):
+    return LicensedGateway(cfg, params, tiers=tiers, max_batch=8,
+                           max_prompt=PROMPT_LEN, max_new_cap=max_new,
+                           telemetry=telemetry)
+
+
+def _drain(gw, n_reqs, max_new, rng):
+    """Submit a decode-heavy wave and drain it; returns tokens/s."""
+    reqs = [gw.submit(rng.integers(0, 500, PROMPT_LEN, dtype=np.int32),
+                      license="free" if i % 2 else "full",
+                      max_new_tokens=max_new, seed=i)
+            for i in range(n_reqs)]
+    t0 = time.perf_counter()
+    gw.run()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out_tokens) for r in reqs)
+    assert tokens == n_reqs * max_new
+    return tokens / dt
+
+
+def run(smoke: bool = False) -> list:
+    # drains must be long enough that one scheduler hiccup cannot move a
+    # 3% gate: ~0.5s+ of decode per drain even at smoke scale
+    n_reqs, max_new, trials = (16, 24, 3) if smoke else (24, 48, 4)
+    cfg = smoke_variant(get_config(ARCH))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tiers = {"free": LicenseTier(name="free",
+                                 masks={"*": ((0.0, 0.004),)})}
+    rng = np.random.default_rng(0)
+
+    gw_off = _gateway(cfg, params, tiers, telemetry=False, max_new=max_new)
+    gw_on = _gateway(cfg, params, tiers, telemetry=True, max_new=max_new)
+    # warm with the MEASURED workload shape: a different wave size would
+    # leave batch-shape compilations to land inside the first trial
+    _drain(gw_off, n_reqs, max_new, rng)
+    _drain(gw_on, n_reqs, max_new, rng)
+
+    pairs = [(_drain(gw_off, n_reqs, max_new, rng),
+              _drain(gw_on, n_reqs, max_new, rng))
+             for _ in range(trials)]
+    best_off = max(off for off, _ in pairs)
+    best_on = max(on for _, on in pairs)
+    ratio = max(on / off for off, on in pairs)
+
+    # the tape produced under load is a well-formed Chrome trace
+    trace = gw_on.chrome_trace()
+    events = validate_chrome_trace(trace)
+    out = os.environ.get("TELEMETRY_TRACE_OUT")
+    if out:
+        with open(out, "w") as f:
+            f.write(trace)
+
+    assert ratio >= MIN_RATIO, (
+        f"telemetry overhead gate: instrumented decode ran at "
+        f"{ratio:.4f}x of baseline tokens/s (gate {MIN_RATIO}x) — "
+        f"{best_on:.0f} vs {best_off:.0f} tok/s")
+
+    return [
+        {"name": "telemetry/decode_off", "us_per_call": 1e6 / best_off,
+         "tokens_per_s": round(best_off, 1), "trials": trials},
+        {"name": "telemetry/decode_on", "us_per_call": 1e6 / best_on,
+         "tokens_per_s": round(best_on, 1), "trials": trials},
+        {"name": "telemetry/overhead", "us_per_call":
+         1e6 / best_on - 1e6 / best_off,
+         "on_over_off_ratio": round(ratio, 4), "gate": MIN_RATIO,
+         "trace_events": len(events),
+         "histogram_observes": gw_on.h_ttft.count + gw_on.h_gap.count
+         + gw_on.h_queue.count + gw_on.h_prefill.count
+         + gw_on.h_decode.count,
+         "audit_events": len(gw_on.audit_events()),
+         "trace_dumped": bool(out)},
+    ]
+
+
+if __name__ == "__main__":
+    for row in run(smoke=True):
+        print(row)

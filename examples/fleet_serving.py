@@ -108,8 +108,11 @@ def main():
           f"models in {f['steps']} steps; cache "
           f"{f['cache_used_bytes']}/{f['cache_budget_bytes']} bytes used")
     for name, mm in m["models"].items():
+        # 'held' is block-pool geometry: the contiguous-fallback (SSM)
+        # slot's cache_pool has lane occupancy instead
         print(f"    {name:18s} {mm['tokens_generated']:3d} tokens, "
-              f"{mm['completed']} done, blocks held: {mm['blocks_held']}")
+              f"{mm['completed']} done, blocks held: "
+              f"{mm['cache_pool'].get('held', 0)}")
     for name, t in m["tenants"].items():
         print(f"    tenant {name:6s} {t['admitted']}/{t['submitted']} "
               f"admitted, {t['completed']} done, "

@@ -53,6 +53,17 @@ class LicenseTier:
     def as_json(self) -> Dict[str, list]:
         return {k: [list(iv) for iv in v] for k, v in self.masks.items()}
 
+    def fingerprint(self) -> str:
+        """Stable short hash of (name, masks) — the audit stream's proof
+        of *which* mask definition a tier name meant at event time, so a
+        redefined tier is distinguishable from its earlier self."""
+        import hashlib
+        import json as _json
+
+        payload = _json.dumps({"name": self.name, "masks": self.as_json()},
+                              sort_keys=True)
+        return hashlib.sha256(payload.encode()).hexdigest()[:12]
+
     @staticmethod
     def from_json(name: str, masks: Dict[str, Sequence[Sequence[float]]],
                   accuracy: Optional[float] = None) -> "LicenseTier":

@@ -13,7 +13,11 @@ that flips license-server version bumps in without stalling a decode
 step lives in updates.py.  Fleet serving (fleet.py) composes N
 per-model ``ModelSlot``\\ s behind one ``FleetGateway`` loop under a
 global cache-byte budget, with per-tenant entitlements/quotas/rate
-limits enforced by a ``TenantRegistry``.
+limits enforced by a ``TenantRegistry``.  Observability (telemetry.py
++ tracing.py): a ``Telemetry`` metrics registry (Prometheus text
+exposition), a ``TraceRecorder`` request-lifecycle tape (Chrome
+trace_event export), and an ``AuditLog`` licensing ledger — see
+docs/OBSERVABILITY.md.
 """
 from repro.serving.engine import (Request, ServingEngine, prefill_chunk_step,
                                   prefill_step, prefill_suffix_step, sample,
@@ -24,6 +28,11 @@ from repro.serving.paging import BlockAllocator, PagedCachePool
 from repro.serving.prefix import PrefixCache
 from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
                                      ScheduledAction, Scheduler, TierViewCache)
+from repro.serving.telemetry import (Counter, Gauge, Histogram, Telemetry,
+                                     validate_fleet_metrics,
+                                     validate_gateway_metrics)
+from repro.serving.tracing import (AuditLog, TraceRecorder,
+                                   merge_chrome_traces, validate_chrome_trace)
 from repro.serving.updates import UpdateStager
 
 __all__ = [
@@ -34,4 +43,8 @@ __all__ = [
     "CachePool", "PagedCachePool", "BlockAllocator", "PrefixCache",
     "TierViewCache", "UpdateStager",
     "FleetGateway", "ModelSlot", "TenantRegistry",
+    "Counter", "Gauge", "Histogram", "Telemetry",
+    "TraceRecorder", "AuditLog", "merge_chrome_traces",
+    "validate_chrome_trace", "validate_gateway_metrics",
+    "validate_fleet_metrics",
 ]

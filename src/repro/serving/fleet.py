@@ -64,6 +64,9 @@ from repro.serving.paging import NoPagedLeavesError, PagedCachePool, cdiv
 from repro.serving.prefix import PrefixCache
 from repro.serving.scheduler import (CachePool, GatewayRequest, RequestState,
                                      Scheduler, TierViewCache)
+from repro.serving.telemetry import (FLEET_METRICS_KEYS,
+                                     GATEWAY_METRICS_KEYS, Telemetry)
+from repro.serving.tracing import AuditLog, TraceRecorder, merge_chrome_traces
 
 
 class ModelSlot:
@@ -105,8 +108,24 @@ class ModelSlot:
         server: Any = None,
         model: str = "model",
         history: int = 10_000,
+        telemetry: Any = True,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.cfg = cfg
+        # observability substrate first: the scheduler takes the clock,
+        # and every layer below records through these.  ``telemetry``
+        # accepts True (own registry), False (everything off — the
+        # benchmark's baseline arm), or a shared Telemetry (a fleet
+        # passes its own so all slots export one scrape page).
+        self.clock = clock if clock is not None else time.perf_counter
+        if isinstance(telemetry, Telemetry):
+            self.telemetry = telemetry
+        else:
+            self.telemetry = Telemetry(clock=self.clock,
+                                       enabled=bool(telemetry))
+        self.obs = self.telemetry.enabled
+        self.tracer = TraceRecorder(clock=self.clock, enabled=self.obs)
+        self.audit = AuditLog(clock=self.clock, enabled=self.obs)
         self.quantized = quantized or already_quantized
         self.materialize_int8_views = materialize_int8_views
         if self.quantized and not already_quantized:
@@ -205,7 +224,8 @@ class ModelSlot:
                                    and not self.chunked else None),
                 chunked=self.chunked,
                 blocks_needed=(self._blocks_needed
-                               if self.chunked else None))
+                               if self.chunked else None),
+                clock=self.clock)
             zero_cap = self.pool.padded_capacity
         else:
             if chunk_size:
@@ -215,7 +235,8 @@ class ModelSlot:
             self.chunked = False
             self.max_lanes = self.max_batch
             self.pool = CachePool(cfg, self.max_batch, self.capacity)
-            self.scheduler = Scheduler(self.max_batch, self.max_batch)
+            self.scheduler = Scheduler(self.max_batch, self.max_batch,
+                                       clock=self.clock)
             self.prefix = None
             zero_cap = self.capacity
         lane0 = model_lib.init_cache(cfg, 1, zero_cap)  # pristine batch-1 cache
@@ -281,6 +302,94 @@ class ModelSlot:
         else:
             _compiled_steps(cfg, False)
 
+        self._register_telemetry()
+        # seed the audit ledger: the tiers this slot can serve from birth
+        for name in self.tiers:
+            self.audit.record("tier_grant", model=self.model, tier=name,
+                              version=self.version, source="config")
+
+    # ---------------------------------------------------------- observability
+    def _register_telemetry(self) -> None:
+        """Register this slot's instruments (all labeled by model name).
+
+        Counters and gauges are *pull*-backed: they read the ``stats``
+        dict / scheduler / pool at export time, so the serving hot path
+        pays nothing for them.  Only the latency histograms are push
+        instruments — a bisect + bincount bump each, the cost the
+        telemetry benchmark bounds."""
+        t, lb = self.telemetry, {"model": self.model}
+        stats = self.stats
+
+        def _stat(key: str):
+            return lambda: stats[key]
+
+        for key, name, help_ in (
+            ("admitted", "serving_requests_admitted_total",
+             "Requests past admission"),
+            ("rejected", "serving_requests_rejected_total",
+             "Requests bounced at admission"),
+            ("completed", "serving_requests_completed_total",
+             "Requests that produced max_new_tokens"),
+            ("tokens_generated", "serving_tokens_generated_total",
+             "Tokens delivered across all requests"),
+            ("prefill_batches", "serving_prefill_batches_total",
+             "Prefill micro-batches executed"),
+            ("prefill_chunks", "serving_prefill_chunks_total",
+             "Chunked-prefill actions executed"),
+            ("decode_steps", "serving_decode_steps_total",
+             "Decode micro-batch steps executed"),
+            ("preempted", "serving_preemptions_total",
+             "Requests preempted on pool exhaustion"),
+            ("quota_rejections", "serving_quota_rejections_total",
+             "Tenant quota/rate/entitlement rejections"),
+            ("prefix_tokens_reused", "serving_prefix_tokens_reused_total",
+             "Prompt tokens served from the prefix cache"),
+            ("cow_copies", "serving_cow_copies_total",
+             "Copy-on-write block copies before shared-block writes"),
+        ):
+            t.counter(name, labels=lb, help=help_, fn=_stat(key))
+        t.gauge("serving_queue_depth", labels=lb,
+                help="Requests waiting for admission",
+                fn=lambda: len(self.scheduler.waiting))
+        t.gauge("serving_running_requests", labels=lb,
+                help="Requests holding a lane (prefilling or decoding)",
+                fn=lambda: len(self.scheduler.running))
+        t.gauge("serving_oldest_queue_wait_seconds", labels=lb,
+                help="Age of the oldest queued request",
+                fn=self.scheduler.oldest_wait_s)
+        t.gauge("serving_weight_version", labels=lb,
+                help="Weight version new admissions pin",
+                fn=lambda: self.version)
+        t.gauge("serving_view_cache_entries", labels=lb,
+                help="Materialized (tier, version) weight views",
+                fn=lambda: len(self.views))
+        if self.paged:
+            t.gauge("serving_cache_blocks_held", labels=lb,
+                    help="Physical cache blocks allocated",
+                    fn=lambda: self.pool.allocator.num_held)
+            t.gauge("serving_cache_blocks_free", labels=lb,
+                    help="Physical cache blocks on the free list",
+                    fn=lambda: self.pool.allocator.num_free)
+        if self.prefix is not None:
+            t.gauge("serving_prefix_reclaimable_blocks", labels=lb,
+                    help="Retained prefix blocks evictable on demand",
+                    fn=self.prefix.reclaimable)
+        h = t.histogram
+        self.h_ttft = h("serving_ttft_seconds", labels=lb,
+                        help="Submit to first token")
+        self.h_gap = h("serving_inter_token_seconds", labels=lb,
+                       help="Gap between consecutive tokens of one request")
+        self.h_queue = h("serving_queue_wait_seconds", labels=lb,
+                         help="Submit to lane assignment")
+        self.h_prefill = h("serving_prefill_step_seconds", labels=lb,
+                           help="Wall time of one prefill action")
+        self.h_decode = h("serving_decode_step_seconds", labels=lb,
+                          help="Wall time of one decode step")
+        self.h_stager = h("serving_stager_step_seconds", labels=lb,
+                          help="Wall time of one staged-update step "
+                               "(the decode-stall bound)")
+        t.declare(*GATEWAY_METRICS_KEYS)
+
     # ------------------------------------------------------------ weight views
     def _resolve_tier(self, name: str) -> LicenseTier:
         tier = self.tiers.get(name)
@@ -289,6 +398,8 @@ class ModelSlot:
                 tier = self._server.tier(self.model, name)
                 self.tiers[name] = tier
                 self._server_tiers.add(name)
+                self.audit.record("tier_grant", model=self.model, tier=name,
+                                  version=self.version, source="server")
             except KeyError:
                 tier = None
         if tier is None:
@@ -298,6 +409,9 @@ class ModelSlot:
     def _materialize(self, tier_name: str, version: Optional[int]):
         """Build the (params, intervals) view served to one (tier, version)."""
         tier = self._resolve_tier(tier_name)
+        self.audit.record("view_materialize", model=self.model,
+                          tier=tier_name, version=version,
+                          fingerprint=tier.fingerprint())
         base = self._weights[version]
         if not self.quantized:
             return apply_license(base, tier), None
@@ -420,6 +534,9 @@ class TenantRegistry:
     def __init__(self, *, clock: Callable[[], float] = time.monotonic):
         self._clock = clock
         self._tenants: Dict[str, _Tenant] = {}
+        # licensing ledger (tracing.AuditLog), wired by FleetGateway so
+        # tenant definition changes land in the fleet's audit stream
+        self.audit: Any = None
 
     # ------------------------------------------------------------- definition
     def register(self, name: str, *,
@@ -437,9 +554,17 @@ class TenantRegistry:
                       "tokens_generated", "quota_rejections"):
                 setattr(fresh, k, getattr(old, k))
         self._tenants[name] = fresh
+        if self.audit is not None:
+            self.audit.record(
+                "tenant_register", tenant=name,
+                entitlements=sorted(f"{m}:{t}" for m, t in fresh.entitlements),
+                max_concurrent=fresh.max_concurrent, rate=fresh.rate)
 
     def grant(self, name: str, model: str = "*", tier: str = "*") -> None:
         self._tenants[name].entitlements.add((model, tier))
+        if self.audit is not None:
+            self.audit.record("entitlement_grant", tenant=name, model=model,
+                              tier=tier)
 
     def revoke(self, name: str, model: str = "*", tier: str = "*") -> None:
         """Remove every entitlement pattern that would entitle
@@ -565,15 +690,88 @@ class FleetGateway:
     """
 
     def __init__(self, *, cache_budget_bytes: Optional[int] = None,
-                 tenants: Optional[TenantRegistry] = None):
+                 tenants: Optional[TenantRegistry] = None,
+                 telemetry: Any = True,
+                 clock: Optional[Callable[[], float]] = None):
         self.cache_budget_bytes = (None if cache_budget_bytes is None
                                    else int(cache_budget_bytes))
-        self.tenants = tenants if tenants is not None else TenantRegistry()
+        # one shared registry for the whole fleet: ``add_model`` passes
+        # it to every slot (distinct {"model": name} labels keep their
+        # instruments apart), ``attach`` adopts a standalone gateway's
+        self.clock = clock if clock is not None else time.perf_counter
+        if isinstance(telemetry, Telemetry):
+            self.telemetry = telemetry
+        else:
+            self.telemetry = Telemetry(clock=self.clock,
+                                       enabled=bool(telemetry))
+        self.obs = self.telemetry.enabled
+        self.audit = AuditLog(clock=self.clock, enabled=self.obs)
+        self.tenants = (tenants if tenants is not None
+                        else TenantRegistry(clock=self.clock))
+        self.tenants.audit = self.audit
         self.gateways: Dict[str, Any] = {}
         self._rr = 0                       # slot round-robin cursor
         self._stager_rr = 0                # stager round-robin cursor
         self._steps = 0
         self._t0: Optional[float] = None   # first-step timestamp (tokens/s)
+        self._register_telemetry()
+
+    # ---------------------------------------------------------- observability
+    def _register_telemetry(self) -> None:
+        """Fleet-level instruments: budget occupancy gauges plus a
+        dynamic per-tenant collector (tenants register at any time, so
+        their instruments are enumerated at scrape time rather than
+        pre-registered)."""
+        t = self.telemetry
+        t.gauge("fleet_models", help="Registered model slots",
+                fn=lambda: len(self.gateways))
+        t.counter("fleet_steps_total", help="Fleet scheduler iterations",
+                  fn=lambda: self._steps)
+        t.gauge("fleet_cache_budget_bytes",
+                help="Global cache byte budget (0 = uncapped)",
+                fn=lambda: self.cache_budget_bytes or 0)
+        t.gauge("fleet_cache_used_bytes",
+                help="Cache block bytes allocated fleet-wide",
+                fn=self.used_cache_bytes)
+        t.gauge("fleet_cache_reclaimable_bytes",
+                help="Bytes held only by retained prefix chains",
+                fn=self.reclaimable_cache_bytes)
+        t.register_collector(self._tenant_collector)
+        t.declare(*FLEET_METRICS_KEYS)
+
+    def _tenant_collector(self):
+        for name, s in self.tenants.stats().items():
+            lb = {"tenant": name}
+            yield ("tenant_inflight", "gauge",
+                   "Live (queued or running) requests", lb, s["inflight"])
+            yield ("tenant_submitted_total", "counter",
+                   "Requests submitted", lb, s["submitted"])
+            yield ("tenant_completed_total", "counter",
+                   "Requests completed", lb, s["completed"])
+            yield ("tenant_tokens_generated_total", "counter",
+                   "Tokens delivered", lb, s["tokens_generated"])
+            yield ("tenant_quota_rejections_total", "counter",
+                   "Entitlement/concurrency/rate rejections", lb,
+                   s["quota_rejections"])
+
+    def render_prometheus(self) -> str:
+        """One scrape page covering every slot plus the fleet gauges."""
+        return self.telemetry.render_prometheus()
+
+    def chrome_trace(self) -> str:
+        """Whole-fleet Chrome trace: one pid per model, one timebase."""
+        return merge_chrome_traces(
+            (name, gw.tracer) for name, gw in self.gateways.items())
+
+    def audit_events(self, event: Optional[str] = None) -> List[Dict[str, Any]]:
+        """Fleet-wide licensing ledger: the fleet's own records (tenant
+        definitions, quota rejections) merged with every slot's, ordered
+        by (ts, seq)."""
+        logs = [self.audit] + [gw.audit for gw in self.gateways.values()]
+        merged = AuditLog.merge(logs)
+        if event is not None:
+            merged = [e for e in merged if e["event"] == event]
+        return merged
 
     # ------------------------------------------------------------ registration
     def add_model(self, name: str, cfg: ModelConfig, params: Any,
@@ -583,6 +781,8 @@ class FleetGateway:
         from repro.serving.gateway import LicensedGateway
 
         kw.pop("model", None)
+        kw.setdefault("telemetry", self.telemetry)
+        kw.setdefault("clock", self.clock)
         gw = LicensedGateway(cfg, params, model=name, **kw)
         return self.attach(gw)
 
@@ -617,6 +817,10 @@ class FleetGateway:
                 lambda g=gw: self._slot_headroom(g)
         gw.scheduler.admission_filter = \
             lambda r, g=gw: self._admission_ok(g, r)
+        # a standalone gateway brings its own registry: fold its
+        # instruments into the fleet's scrape page (adopt() is a no-op
+        # for add_model slots, which already share self.telemetry)
+        self.telemetry.adopt(gw.telemetry)
         self.gateways[name] = gw
         return gw
 
@@ -687,6 +891,9 @@ class FleetGateway:
         self.tenants.drop_queued(req.tenant)
         gw.stats["quota_rejections"] += 1
         gw.stats["rejected"] += 1
+        self.audit.record("tenant_reject", tenant=req.tenant,
+                          model=gw.model, tier=req.license,
+                          reason="entitlement revoked while queued")
         return False
 
     def submit(self, model: str, prompt, *, tenant: Optional[str] = None,
@@ -713,6 +920,8 @@ class FleetGateway:
                 req.error = reason
                 gw.stats["quota_rejections"] += 1
                 gw.stats["rejected"] += 1
+                self.audit.record("quota_reject", tenant=tenant,
+                                  model=model, tier=license, reason=reason)
                 return req
         req = gw.submit(prompt, license=license, tenant=tenant, **kw)
         if tenant is not None and req.state is RequestState.REJECTED:
@@ -729,7 +938,7 @@ class FleetGateway:
         ``ScheduledAction`` (its ``model`` field names the slot), or
         None when no slot has work."""
         if self._t0 is None:
-            self._t0 = time.perf_counter()
+            self._t0 = self.clock()
         self._steps += 1
         order = list(self.gateways.values())
         act = None
@@ -773,26 +982,20 @@ class FleetGateway:
     # ----------------------------------------------------------------- metrics
     def metrics(self) -> Dict[str, Any]:
         """Three sections: ``fleet`` (budget + totals), ``models`` (one
-        per slot: tokens/s, queue waits, quota rejections, blocks held,
-        plus the slot's full single-gateway metrics under ``detail``),
-        and ``tenants`` (registry counters + live blocks held + oldest
-        queue wait, per tenant)."""
-        now = time.perf_counter()
+        per slot: the EXACT single-gateway ``LicensedGateway.metrics()``
+        schema, plus a fleet-computed ``tokens_per_s``), and ``tenants``
+        (registry counters + live blocks held + oldest queue wait, per
+        tenant).  The per-model schema embedding is load-bearing: one
+        dashboard/parser serves both deployments, and
+        ``telemetry.validate_fleet_metrics`` asserts it."""
+        now = self.clock()
         elapsed = (now - self._t0) if self._t0 is not None else 0.0
         models: Dict[str, Any] = {}
         for name, gw in self.gateways.items():
             toks = gw.stats["tokens_generated"]
             models[name] = {
-                "tokens_generated": toks,
+                **gw.metrics(),
                 "tokens_per_s": (toks / elapsed if elapsed > 0 else 0.0),
-                "completed": gw.stats["completed"],
-                "quota_rejections": gw.stats["quota_rejections"],
-                "oldest_wait_s": gw.scheduler.oldest_wait_s(now),
-                "queue_wait_by_tier": gw.scheduler.queue_wait_by_tier(now),
-                "blocks_held": (gw.pool.allocator.num_held
-                                if gw.paged else None),
-                "block_bytes": gw.pool.block_bytes if gw.paged else None,
-                "detail": gw.metrics(),
             }
         tenants = self.tenants.stats()
         for t in tenants.values():
@@ -801,6 +1004,7 @@ class FleetGateway:
             t["tokens_per_s"] = (t["tokens_generated"] / elapsed
                                  if elapsed > 0 else 0.0)
         for gw in self.gateways.values():
+            slot_now = gw.clock()          # slot timestamps, slot clock
             for r in gw.scheduler.running:
                 if r.tenant in tenants:
                     tenants[r.tenant]["blocks_held"] += len(r.blocks)
@@ -808,7 +1012,7 @@ class FleetGateway:
                 if r.tenant in tenants:
                     t = tenants[r.tenant]
                     t["oldest_wait_s"] = max(t["oldest_wait_s"],
-                                             now - r.submit_t)
+                                             slot_now - r.submit_t)
         fleet = {
             "models": len(self.gateways),
             "steps": self._steps,

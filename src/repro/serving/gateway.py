@@ -98,7 +98,6 @@ Licensing integration
 from __future__ import annotations
 
 import functools
-import time
 from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -414,8 +413,15 @@ class LicensedGateway:
             if fresh is None:
                 self.tiers.pop(name, None)
                 self._server_tiers.discard(name)
+                if self.obs:
+                    self.audit.record("tier_revoke", model=self.model,
+                                      tier=name)
             else:
                 self.tiers[name] = fresh
+                if self.obs:
+                    self.audit.record("tier_redefine", model=self.model,
+                                      tier=name,
+                                      fingerprint=fresh.fingerprint())
             self.views.invalidate(tier=name)
             if self.prefix is not None:
                 # cached blocks encode the old mask's activations
@@ -426,7 +432,73 @@ class LicensedGateway:
         """Licensed weight view for (tier, version) — cached."""
         return self.views.get(tier, self.version if version is None else version)
 
+    # ------------------------------------------------------------ telemetry
+    def _span(self, req: GatewayRequest, name: Optional[str],
+              attrs: Optional[Dict[str, Any]] = None) -> None:
+        """Close the request's open lifecycle span and begin ``name``
+        (None = just close).  Per-request lifecycle phases (queue ->
+        prefill -> decode) are sequential, never nested, so one slot per
+        request suffices and every B gets its E."""
+        if req._open_span is not None:
+            self.tracer.end(req._open_span, req.rid)
+        req._open_span = name
+        if name is not None:
+            self.tracer.begin(name, req.rid, attrs)
+
+    def _note_admission(self, req: GatewayRequest) -> None:
+        """Record a request leaving the queue for a lane: queue-wait
+        histogram (first admission only — a restart's wait is preemption
+        recovery, not admission wait), admit/restart instant, and the
+        prefill lifecycle span."""
+        if not self.obs:
+            return
+        now = self.clock()
+        if req.preemptions == 0:
+            self.h_queue.observe(now - req.submit_t)
+            name = "admit"
+        else:
+            name = "restart"
+        self.tracer.instant(name, req.rid,
+                            {"tier": req.license, "version": req.version,
+                             "lane": req.lane})
+        self._span(req, "prefill", {"tier": req.license,
+                                    "version": req.version})
+
+    def _note_first_token(self, req: GatewayRequest, now: float) -> None:
+        """First token of a (possibly restarted) prefill: TTFT is counted
+        ONCE per request — a preemption clears ``first_token_t`` but not
+        ``_ttft_done``, so the restart's re-emission never double-counts."""
+        req.first_token_t = now
+        if not self.obs:
+            return
+        if not req._ttft_done:
+            req._ttft_done = True
+            self.h_ttft.observe(now - req.submit_t)
+        self._span(req, "decode")
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition of every registered instrument."""
+        return self.telemetry.render_prometheus()
+
+    def chrome_trace(self) -> str:
+        """This gateway's event tape as Chrome trace_event JSON."""
+        return self.tracer.chrome_trace(
+            process_name=self.model or "gateway")
+
+    def audit_events(self, event: Optional[str] = None) -> List[Dict[str, Any]]:
+        """The licensing audit stream (optionally filtered by event)."""
+        return self.audit.events(event)
+
     # -------------------------------------------------------------- admission
+    def _reject(self, req: GatewayRequest, error: str) -> GatewayRequest:
+        req.state = RequestState.REJECTED
+        req.error = error
+        self.stats["rejected"] += 1
+        if self.obs:
+            self.tracer.instant("reject", req.rid,
+                                {"tier": req.license, "reason": error})
+        return req
+
     def submit(self, prompt, *, license: str = "full", max_new_tokens: int = 16,
                temperature: float = 0.0, top_k: int = 0,
                seed: int = 0, tenant: Optional[str] = None) -> GatewayRequest:
@@ -451,7 +523,7 @@ class LicensedGateway:
             req.logits_rows = []
         req.rid = self._next_rid
         self._next_rid += 1
-        req.submit_t = time.perf_counter()
+        req.submit_t = self.clock()
         try:
             if license in self._pending_tiers:
                 # a pending revocation OR redefinition refuses admissions:
@@ -466,31 +538,27 @@ class LicensedGateway:
                 raise KeyError(f"license tier {license!r} is being {verb}")
             self._resolve_tier(license)
         except KeyError as e:
-            req.state = RequestState.REJECTED
-            req.error = str(e)
-            self.stats["rejected"] += 1
-            return req
+            return self._reject(req, str(e))
         if not 1 <= len(req.prompt) <= self.max_prompt:
-            req.state = RequestState.REJECTED
-            req.error = (f"prompt length {len(req.prompt)} outside "
-                         f"[1, {self.max_prompt}]")
-            self.stats["rejected"] += 1
-            return req
+            return self._reject(req, f"prompt length {len(req.prompt)} "
+                                     f"outside [1, {self.max_prompt}]")
         if req.max_new_tokens < 1:
-            req.state = RequestState.REJECTED
-            req.error = "max_new_tokens < 1"
-            self.stats["rejected"] += 1
-            return req
+            return self._reject(req, "max_new_tokens < 1")
         if not -2**31 <= int(seed) < 2**31:
             # seeds ride the fused sampler as an int32 lane array; an
             # out-of-range one must bounce here, not crash the run() loop
-            req.state = RequestState.REJECTED
-            req.error = f"seed {seed} outside int32 range"
-            self.stats["rejected"] += 1
-            return req
+            return self._reject(req, f"seed {seed} outside int32 range")
         req.version = self.version
         self.scheduler.submit(req)
         self.stats["admitted"] += 1
+        if self.obs:
+            self.tracer.instant(
+                "submit", req.rid,
+                {"tier": req.license, "version": req.version,
+                 "model": self.model, "tenant": req.tenant,
+                 "prompt_tokens": len(req.prompt),
+                 "max_new_tokens": req.max_new_tokens})
+            self._span(req, "queue")
         return req
 
     # ------------------------------------------------------------- scheduling
@@ -504,6 +572,7 @@ class LicensedGateway:
         act = self.scheduler.next_action()
         if act is not None:
             act.model = self.model
+            t0 = self.clock() if self.obs else 0.0
             if act.kind == "prefill":
                 if self.chunked:
                     self._run_chunked_prefill(act)
@@ -511,6 +580,24 @@ class LicensedGateway:
                     self._run_prefill(act)
             else:
                 self._run_decode(act)
+            if self.obs:
+                t1 = self.clock()
+                (self.h_prefill if act.kind == "prefill"
+                 else self.h_decode).observe(t1 - t0)
+                attrs: Dict[str, Any] = {"tier": act.tier,
+                                         "version": act.version,
+                                         "batch": len(act.requests)}
+                if act.suffix_bucket is not None:
+                    attrs["suffix_bucket"] = act.suffix_bucket
+                self.tracer.complete("sched:" + act.kind, t0, t1,
+                                     attrs=attrs)
+                self.tracer.counter("queue_depth",
+                                    len(self.scheduler.waiting))
+                self.tracer.counter("running",
+                                    len(self.scheduler.running))
+                if self.paged:
+                    self.tracer.counter("blocks_held",
+                                        self.pool.allocator.num_held)
         if drive_stager and self._stager is not None and self._stager.active:
             self._stager.step()
         if act is None:
@@ -633,6 +720,8 @@ class LicensedGateway:
         hit = any(n > 0 for _, n in matches)
         if hit:
             lanes = [self.scheduler.start(r) for r in reqs]
+            for r in reqs:
+                self._note_admission(r)
             outs = self._run_prefix_prefill(
                 act, toks, matches, lanes, view_params, li,
                 (seeds, nouts, temps, topks))
@@ -642,6 +731,8 @@ class LicensedGateway:
                                         self._zero_lanes, seeds, nouts,
                                         temps, topks, li)
             lanes = [self.scheduler.start(r) for r in reqs]
+            for r in reqs:
+                self._note_admission(r)
             if self.paged:
                 for r in reqs:
                     r.blocks = self._alloc_blocks(self._prefill_blocks)
@@ -663,10 +754,10 @@ class LicensedGateway:
                 self.prefix.insert(scope, toks[i],
                                    r.blocks[: self._prefill_blocks])
         outs = np.asarray(outs)
-        now = time.perf_counter()
+        now = self.clock()
         for i, r in enumerate(reqs):
             r.pos = self.max_prompt
-            r.first_token_t = now
+            self._note_first_token(r, now)
             if self.fuse_sampling:
                 self._emit(r, tok=int(outs[i]))
             else:
@@ -707,6 +798,8 @@ class LicensedGateway:
             r.blocks = list(blocks) + fresh
             r.prefix_tokens = ntok
             self.stats["prefix_tokens_reused"] += ntok
+            if self.obs and ntok:
+                self.tracer.instant("prefix_hit", r.rid, {"tokens": ntok})
         self.stats["prefill_lane_tokens"] += w * len(reqs)
         self._note_block_use()
         lane_ids = self.pool.pad_lanes(lanes, self.max_batch)
@@ -769,6 +862,9 @@ class LicensedGateway:
         bs = self.pool.block_size
         for r, (blocks, capped) in zip(reqs, matches):
             self.scheduler.start(r, prefilling=True)
+            self._note_admission(r)
+            if self.obs and capped:
+                self.tracer.instant("prefix_hit", r.rid, {"tokens": capped})
             # a partial match adopts only FULL blocks (the radix tree
             # matches a partial tail only when it covers the whole
             # prompt), so the uncached suffix starts on a block boundary
@@ -847,15 +943,19 @@ class LicensedGateway:
         self.stats["prefill_lane_tokens"] += w * len(reqs)
         self.stats["prefill_chunks"] += 1
         outs = np.asarray(outs)
-        now = time.perf_counter()
+        now = self.clock()
         scope = (act.tier, act.version)
         for i, r in enumerate(reqs):
             r.cursor += int(valid[i])
+            if self.obs:
+                self.tracer.instant("prefill_chunk", r.rid,
+                                    {"cursor": r.cursor,
+                                     "tokens": int(valid[i])})
             if r.cursor < len(r.prompt):
                 continue
             r.state = RequestState.RUNNING
             r.pos = len(r.prompt)
-            r.first_token_t = now
+            self._note_first_token(r, now)
             if self.prefix is not None:
                 # donate the TRUE-token chain (full blocks + partial
                 # tail) so any future prompt sharing the prefix — at any
@@ -978,7 +1078,15 @@ class LicensedGateway:
         # the restart will re-emit these tokens; keep the counter equal to
         # tokens actually delivered
         self.stats["tokens_generated"] -= len(req.out_tokens)
+        if self.obs:
+            self._span(req, None)
+            self.tracer.instant("preempt", req.rid,
+                                {"tokens_lost": len(req.out_tokens)})
         self.scheduler.preempt(req)
+        if self.obs:
+            # back at the queue head: the lifecycle re-enters its queue
+            # phase until re-admission emits a "restart"
+            self._span(req, "queue")
         self.stats["preempted"] += 1
 
     def _note_block_use(self) -> None:
@@ -1040,6 +1148,8 @@ class LicensedGateway:
         outs = np.asarray(outs)
         for i, r in enumerate(reqs):
             r.pos += 1
+            if self.obs:
+                self.tracer.instant("decode_step", r.rid, {"pos": r.pos})
             if self.fuse_sampling:
                 self._emit(r, tok=int(outs[i]))
             else:
@@ -1065,8 +1175,22 @@ class LicensedGateway:
                                  top_k=req.top_k)[0])
         req.out_tokens.append(tok)
         self.stats["tokens_generated"] += 1
+        if self.obs:
+            # inter-token gap: decode cadence only.  The first token has
+            # no predecessor, and a preemption clears ``_last_tok_t`` —
+            # the restart's recovery pause is not a decode gap.
+            now = self.clock()
+            if req._last_tok_t is not None:
+                self.h_gap.observe(now - req._last_tok_t)
+            req._last_tok_t = now
         if len(req.out_tokens) >= req.max_new_tokens:
             self.scheduler.finish(req)
+            if self.obs:
+                self._span(req, None)
+                self.tracer.instant("finish", req.rid,
+                                    {"tokens": len(req.out_tokens),
+                                     "preemptions": req.preemptions,
+                                     "blocks": len(req.blocks)})
             if self.paged:
                 # release references, don't free: blocks the prefix cache
                 # retains (the prompt chain) survive for future hits
@@ -1103,8 +1227,12 @@ class LicensedGateway:
             self.views.invalidate(version=version)
             if self.prefix is not None:
                 self.prefix.drop_scope(version=version)
+        prev = self.version
         self._weights[version] = params
         self.version = version
+        if self.obs:
+            self.audit.record("version_install", model=self.model,
+                              from_version=prev, to_version=version)
         self._gc_versions()
         return version
 
@@ -1166,8 +1294,15 @@ class LicensedGateway:
         if version < self.version:
             raise ValueError(f"version {version} is older than the current "
                              f"version {self.version}")
+        prev = self.version
         self.version = version
         self._staging_version = None
+        if self.obs:
+            # the ONE choke point every flip funnels through — staged
+            # step()-driven syncs and blocking sync() alike — so the
+            # audit stream shows exactly one version_flip per bump
+            self.audit.record("version_flip", model=self.model,
+                              from_version=prev, to_version=version)
         if self._server is not None:
             # tier redefinitions land with the bump — an admission never
             # sees (new tiers, old version) or (old tiers, new version)
@@ -1296,6 +1431,14 @@ class LicensedGateway:
             out["prefix_cache"]["prefix_tokens_reused"] = \
                 self.stats["prefix_tokens_reused"]
             out["prefix_cache"]["cow_copies"] = self.stats["cow_copies"]
+        out["latency"] = {
+            "ttft_s": self.h_ttft.summary(),
+            "inter_token_s": self.h_gap.summary(),
+            "queue_wait_s": self.h_queue.summary(),
+            "step_prefill_s": self.h_prefill.summary(),
+            "step_decode_s": self.h_decode.summary(),
+            "stager_step_s": self.h_stager.summary(),
+        }
         lats = [r.latency for r in self.completed if r.latency is not None]
         if lats:
             out["latency_p50_ms"] = float(np.percentile(lats, 50) * 1e3)

@@ -469,5 +469,7 @@ class PagedCachePool:
         st = self.allocator.stats()
         st.update(block_size=self.block_size, cache_tokens=self.cache_tokens,
                   blocks_per_lane=self.blocks_per_lane,
-                  num_lanes=self.num_lanes)
+                  num_lanes=self.num_lanes,
+                  # per-block byte cost: the fleet budget's exchange rate
+                  block_bytes=self.block_bytes)
         return st

@@ -96,6 +96,14 @@ class GatewayRequest:
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
 
+    # telemetry bookkeeping (serving/telemetry.py).  ``_ttft_done``
+    # survives preemption — a restarted request re-emits its first token
+    # but its TTFT was already counted once; ``_last_tok_t`` does not
+    # (the inter-token gap across a preemption gap is not a decode gap).
+    _ttft_done: bool = False
+    _last_tok_t: Optional[float] = None
+    _open_span: Optional[str] = None         # current lifecycle B span
+
     @property
     def group_key(self) -> Tuple[str, Optional[int]]:
         return (self.license, self.version)
@@ -291,9 +299,13 @@ class Scheduler:
                      Callable[[GatewayRequest], int]] = None,
                  chunked: bool = False,
                  blocks_needed: Optional[
-                     Callable[[GatewayRequest], int]] = None):
+                     Callable[[GatewayRequest], int]] = None,
+                 clock: Callable[[], float] = time.perf_counter):
         self.num_lanes = int(num_lanes)
         self.max_batch = int(max_batch)
+        # injectable clock: every wait/latency timestamp in the gateway
+        # stack flows through this, so tests can drive virtual time
+        self.clock = clock
         self.allocator = allocator
         self.prefill_blocks = int(prefill_blocks)
         self.watermark_blocks = int(watermark_blocks)
@@ -369,7 +381,7 @@ class Scheduler:
             self._free_lanes.append(req.lane)
         req.lane = None
         req.state = RequestState.DONE
-        req.finish_t = time.perf_counter()
+        req.finish_t = self.clock()
 
     def preempt(self, req: GatewayRequest) -> None:
         """Evict a running request back to the head of the queue.
@@ -390,6 +402,7 @@ class Scheduler:
         if req.logits_rows is not None:
             req.logits_rows.clear()
         req.first_token_t = None
+        req._last_tok_t = None
         req.preemptions += 1
         req.state = RequestState.QUEUED
         self.waiting.appendleft(req)
@@ -420,12 +433,12 @@ class Scheduler:
         """Age of the oldest queued request (0.0 with an empty queue)."""
         if not self.waiting:
             return 0.0
-        now = time.perf_counter() if now is None else now
+        now = self.clock() if now is None else now
         return now - min(r.submit_t for r in self.waiting)
 
     def queue_wait_by_tier(self, now: Optional[float] = None) -> Dict[str, float]:
         """Per-tier age of the oldest queued request."""
-        now = time.perf_counter() if now is None else now
+        now = self.clock() if now is None else now
         out: Dict[str, float] = {}
         for r in self.waiting:
             age = now - r.submit_t

@@ -66,6 +66,7 @@ from typing import Any, Dict, List, Optional, Set
 import numpy as np
 
 from repro.core.pytree_io import flatten_params, unflatten_like
+from repro.serving.tracing import STAGER_TID
 
 
 @functools.cache
@@ -184,6 +185,10 @@ class UpdateStager:
                               if gw.quantized and gw.version == client.version
                               else None)
         self.phase = "stage"
+        if gw.obs:
+            gw.audit.record("sync_begin", model=gw.model,
+                            from_version=client.version,
+                            to_version=cursor.to_version)
         if self.background_fetch:
             self._start_fetch_worker()
         return True
@@ -266,6 +271,8 @@ class UpdateStager:
             return None
         phase = self.phase
         self.stats_["steps"] += 1
+        gw = self.gw
+        t0 = gw.clock() if gw.obs else 0.0
         try:
             if phase == "stage":
                 self._step_stage()
@@ -278,6 +285,11 @@ class UpdateStager:
         except BaseException:
             self.abort()
             raise
+        if gw.obs:
+            t1 = gw.clock()
+            gw.h_stager.observe(t1 - t0)
+            gw.tracer.complete("stager:" + phase, t0, t1, tid=STAGER_TID,
+                               attrs={"to_version": self.to_version})
         return phase
 
     def abort(self) -> None:
@@ -302,6 +314,9 @@ class UpdateStager:
         self._staged = self._staged_q = None
         self._pending_layer = None
         self._pending_buf = None
+        if gw.obs:
+            gw.audit.record("sync_abort", model=gw.model,
+                            phase=self.phase, to_version=self.to_version)
         self.phase = "failed"
 
     def _apply_part(self, part) -> None:

@@ -26,7 +26,8 @@ from repro.configs import get_config, smoke_variant
 from repro.core.licensing import LicenseTier
 from repro.models import init_params
 from repro.serving import (FleetGateway, LicensedGateway, RequestState,
-                           TenantRegistry)
+                           TenantRegistry, validate_fleet_metrics,
+                           validate_gateway_metrics)
 
 MAX_PROMPT = 8
 MAX_NEW = 4
@@ -321,8 +322,11 @@ def test_rate_limit_enforced_at_fleet_submit(trio):
 # ----------------------------------------------------------------- metrics
 def test_fleet_metrics_schema(trio):
     """Satellite: the three-section metrics schema — fleet totals,
-    per-model breakdown (with full single-gateway detail), per-tenant
-    usage — asserted key by key."""
+    per-model breakdown, per-tenant usage — asserted by the SAME shared
+    validator that guards ``LicensedGateway.metrics()``.  Each
+    ``models.<name>`` section embeds the exact single-gateway schema
+    (plus a fleet-computed ``tokens_per_s``), so one dashboard/parser
+    serves both deployments."""
     tenants = TenantRegistry()
     tenants.register("acme")
     fleet = _fleet(trio, tenants=tenants)
@@ -335,23 +339,14 @@ def test_fleet_metrics_schema(trio):
     assert all(r.state == RequestState.DONE for r in reqs)
 
     m = fleet.metrics()
-    assert set(m) == {"fleet", "models", "tenants"}
-    for key in ("models", "steps", "cache_budget_bytes", "cache_used_bytes",
-                "cache_reclaimable_bytes", "tokens_generated", "completed",
-                "quota_rejections", "oldest_wait_s"):
-        assert key in m["fleet"], f"fleet section missing {key}"
+    validate_fleet_metrics(m)
     assert m["fleet"]["models"] == len(TRIO_NAMES)
     assert m["fleet"]["completed"] == 4
 
     assert set(m["models"]) == set(TRIO_NAMES)
     for name, mm in m["models"].items():
-        for key in ("tokens_generated", "tokens_per_s", "completed",
-                    "quota_rejections", "oldest_wait_s",
-                    "queue_wait_by_tier", "blocks_held", "block_bytes",
-                    "detail"):
-            assert key in mm, f"models[{name}] missing {key}"
-        assert mm["detail"]["model"] == name
-        assert "tenants" in mm["detail"]
+        validate_gateway_metrics(mm, extra=("tokens_per_s",))
+        assert mm["model"] == name
     assert m["fleet"]["tokens_generated"] == sum(
         mm["tokens_generated"] for mm in m["models"].values())
 
@@ -366,7 +361,7 @@ def test_fleet_metrics_schema(trio):
     assert t["tokens_generated"] == 6
     # the tenant-less request is absent from tenant accounting but
     # present in the per-model tenant breakdown only under its tenants
-    assert m["models"]["qwen2.5-3b"]["detail"]["tenants"].get(
+    assert m["models"]["qwen2.5-3b"]["tenants"].get(
         "acme", {}).get("completed") == 1
 
 
