@@ -1,0 +1,199 @@
+"""Fault-tolerant staged sync benchmark: decode stall under a seeded
+fault schedule vs. the fault-free staged sync.
+
+ISSUE 9's tentpole claim is that faults on the gateway↔license-server
+wire cost *retries and lease state*, never correctness and never an
+unbounded serving stall.  Method: two gateways serve the identical
+request stream while the server publishes v2 mid-stream and a staged
+sync carries it in; one gateway syncs over a :class:`DirectTransport`,
+the other over a :class:`ChaosTransport` at a ≥20% mixed fault rate
+(timeouts + mid-stream disconnects + corrupted pages + duplicate
+deliveries).  Every scheduler step is individually timed.
+
+Asserted claims (the CI gate behind ``BENCH_chaos.json``):
+  * p99 per-step decode stall under faults ≤ 2× the fault-free staged
+    stall (floor-interpolated; retry/backoff sleeps are injected no-ops
+    so the comparison isolates protocol overhead — reopen, re-fetch,
+    checksum re-verification — not wall-clock sleeping);
+  * emitted tokens are bit-identical between the chaos run and the
+    fault-free run, and both land exactly one version flip;
+  * the fault schedule really fired (wire faults > 0, retries > 0).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.licensing import LicenseTier
+from repro.core.protocol import LicenseServer
+from repro.core.transport import ChaosTransport, RetryPolicy
+from repro.core.weightstore import WeightStore
+from repro.models import init_params
+
+ARCH = "qwen2.5-3b"
+MAX_PROMPT = 8
+MAX_BATCH = 4
+N_REQS = 8
+NEW_TOKENS = 24
+SYNC_AT_STEP = 4                 # publish + begin_sync after this many steps
+MAX_STEP_BYTES = 256 << 10
+CHUNK_ELEMS = 8 << 10            # 32 KiB pages < MAX_STEP_BYTES
+CHAOS_SEED = 7
+FAULT_RATE = 0.25                # ≥20% of wire calls fault
+DUP_RATE = 0.1
+
+
+def _boot(cfg, server, params):
+    from repro.serving import LicensedGateway
+
+    template = jax.tree_util.tree_map(lambda x: np.zeros_like(x), params)
+    return LicensedGateway.from_server(
+        cfg, server, "lm", template, max_batch=MAX_BATCH,
+        max_prompt=MAX_PROMPT, max_new_cap=NEW_TOKENS)
+
+
+def _submit_all(gw, n_reqs):
+    return [gw.submit(np.random.default_rng(i).integers(
+                          0, 500, MAX_PROMPT, dtype=np.int32),
+                      license="free", max_new_tokens=NEW_TOKENS)
+            for i in range(n_reqs)]
+
+
+def _drive(gw, n_reqs, *, publish, sync_kw) -> tuple:
+    """Serve the stream; at SYNC_AT_STEP publish v2 and begin the staged
+    sync.  Returns (per-step seconds, requests)."""
+    reqs = _submit_all(gw, n_reqs)
+    steps: List[float] = []
+    i = 0
+    while gw.scheduler.waiting or gw.scheduler.running or gw.sync_active:
+        begin = False
+        if i == SYNC_AT_STEP:
+            publish()
+            begin = True
+        t0 = time.perf_counter()
+        if begin:
+            assert gw.begin_sync(max_step_bytes=MAX_STEP_BYTES,
+                                 **sync_kw) is True
+        gw.step()
+        steps.append(time.perf_counter() - t0)
+        i += 1
+    return steps, reqs
+
+
+def run(smoke: bool = False) -> list:
+    n_reqs = 4 if smoke else N_REQS
+    cfg = smoke_variant(get_config(ARCH))
+    params = jax.device_get(init_params(jax.random.PRNGKey(0), cfg))
+    tier = LicenseTier(name="free", masks={"*": ((0.0, 0.004),)})
+
+    def fresh_server():
+        store = WeightStore(":memory:", row_limit=2048,
+                            chunk_elems=CHUNK_ELEMS)
+        server = LicenseServer(store)
+        server.publish("lm", params, tag="v1")
+        server.publish_tier("lm", tier)
+        return server
+
+    from repro.core.pytree_io import flatten_params
+
+    flat = flatten_params(params)
+    warmp = {k: (v * 1.001 if i % 3 == 0 else v)
+             for i, (k, v) in enumerate(flat.items())}
+    newp = {k: (v * 1.01 if i % 3 == 0 else v)
+            for i, (k, v) in enumerate(flat.items())}
+
+    def _warm(gw, server):
+        """Warm serving AND the sync path (same batch shape and the same
+        touched layers / page shapes as the measured run) outside timing
+        so JIT compilation never lands in either arm's timed region."""
+        ws = [gw.submit(np.zeros(MAX_PROMPT, np.int32), license="free",
+                        max_new_tokens=NEW_TOKENS) for _ in range(MAX_BATCH)]
+        gw.run()
+        assert all(w.out_tokens for w in ws)
+        server.publish("lm", warmp, tag="v1.1")
+        assert gw.begin_sync(max_step_bytes=MAX_STEP_BYTES) is True
+        while gw.sync_active:
+            gw.sync_step()
+
+    def _arm(sync_kw_fn):
+        server = fresh_server()
+        gw = _boot(cfg, server, params)
+        _warm(gw, server)
+        flips0 = len(gw.audit.events("version_flip"))  # warm's own flip
+        steps, reqs = _drive(
+            gw, n_reqs, sync_kw=sync_kw_fn(server),
+            publish=lambda: server.publish("lm", newp, tag="v2"))
+        assert len(gw.audit.events("version_flip")) - flips0 == 1
+        return gw, steps, reqs
+
+    # retry backoffs are injected no-ops in BOTH arms: the bench compares
+    # protocol overhead (reopen, re-fetch, re-verify), not sleep()
+    no_sleep_retry = RetryPolicy(max_attempts=10, base_delay_s=0.0,
+                                 jitter=0.0, sleep=lambda _s: None)
+
+    # ---- fault-free staged sync (the reference arm)
+    direct, steps_d, reqs_d = _arm(lambda server: {"retry": no_sleep_retry})
+    v_after = direct.version
+
+    # ---- chaos arm: every wire call of the sync may fault
+    chaos_tr = {}
+
+    def chaos_kw(server):
+        chaos_tr["t"] = ChaosTransport(
+            server, seed=CHAOS_SEED, fault_rate=FAULT_RATE,
+            dup_rate=DUP_RATE, sleep=lambda _s: None)
+        return {"transport": chaos_tr["t"], "retry": no_sleep_retry}
+
+    chaos, steps_c, reqs_c = _arm(chaos_kw)
+
+    # ---- claims ---------------------------------------------------------
+    # token equivalence: the fault schedule never touches outputs
+    for r, rr in zip(reqs_c, reqs_d):
+        assert r.out_tokens == rr.out_tokens, "faults changed tokens"
+    assert chaos.version == chaos._client.version == v_after
+    st = chaos.metrics()["staged_update"]
+    wire = st["wire"]
+    assert st["flips"] == 1
+    assert wire["faults"] > 0 and st["retries"] > 0, \
+        "the chaos schedule never fired"
+    # landed weights identical to the fault-free arm's
+    for x, y in zip(jax.tree_util.tree_leaves(chaos._client.params),
+                    jax.tree_util.tree_leaves(direct._client.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    # the gate: p99 decode stall under faults ≤ 2× the fault-free staged
+    # stall (floor interpolation: ~2nd-worst of ~50 steps, so one CI
+    # container hiccup cannot flip the verdict)
+    p99_d = float(np.percentile(steps_d, 99, method="lower"))
+    p99_c = float(np.percentile(steps_c, 99, method="lower"))
+    assert p99_c <= 2.0 * p99_d, (p99_c, p99_d)
+
+    rows = [
+        {"name": "chaos/staged_sync_fault_free",
+         "us_per_call": float(np.sum(steps_d)) * 1e6 / max(len(steps_d), 1),
+         "decode_stall_p99_ms": round(p99_d * 1e3, 2),
+         "decode_stall_max_ms": round(float(np.max(steps_d)) * 1e3, 2),
+         "steps": len(steps_d)},
+        {"name": "chaos/staged_sync_faulted",
+         "us_per_call": float(np.sum(steps_c)) * 1e6 / max(len(steps_c), 1),
+         "decode_stall_p99_ms": round(p99_c * 1e3, 2),
+         "decode_stall_max_ms": round(float(np.max(steps_c)) * 1e3, 2),
+         "stall_vs_fault_free_x": round(p99_c / max(p99_d, 1e-9), 2),
+         "stall_bound_x": 2.0,
+         "steps": len(steps_c),
+         "fault_rate": FAULT_RATE,
+         "wire_calls": wire["calls"],
+         "wire_faults": wire["faults"],
+         "timeouts": wire["timeouts"],
+         "disconnects": wire["disconnects"],
+         "corruptions": wire["corruptions"],
+         "duplicates": wire["duplicates"],
+         "retries": st["retries"],
+         "resumes": st["resumes"],
+         "tokens_equivalent": True},
+    ]
+    return rows

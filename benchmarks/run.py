@@ -25,7 +25,7 @@ import traceback
 
 SUITES = ("storage", "update-wire", "licensing", "kernels", "serving",
           "gateway", "paging", "prefix", "decode", "update", "prefill",
-          "fleet", "telemetry", "roofline")
+          "fleet", "telemetry", "chaos", "roofline")
 
 
 def main(argv=None) -> None:
@@ -45,11 +45,11 @@ def main(argv=None) -> None:
         json_dir = pathlib.Path(args.json)
         json_dir.mkdir(parents=True, exist_ok=True)
 
-    from benchmarks import (decode_bench, fleet_bench, gateway_bench,
-                            kernel_bench, licensing_ladder, paging_bench,
-                            prefill_bench, prefix_bench, roofline_table,
-                            serving_bench, storage_cost, telemetry_bench,
-                            update_bench, update_latency)
+    from benchmarks import (chaos_bench, decode_bench, fleet_bench,
+                            gateway_bench, kernel_bench, licensing_ladder,
+                            paging_bench, prefill_bench, prefix_bench,
+                            roofline_table, serving_bench, storage_cost,
+                            telemetry_bench, update_bench, update_latency)
 
     modules = {
         "storage": storage_cost,        # paper Table 1
@@ -65,6 +65,7 @@ def main(argv=None) -> None:
         "prefill": prefill_bench,       # chunked prefill decode-stall SLO
         "fleet": fleet_bench,           # multi-model fleet vs isolated
         "telemetry": telemetry_bench,   # observability <3% overhead gate
+        "chaos": chaos_bench,           # fault-schedule stall + equivalence
         "roofline": roofline_table,     # deliverable (g)
     }
 

@@ -74,6 +74,30 @@ class UpdateCursor:
     def done(self) -> bool:
         return self._delta_i >= len(self.deltas)
 
+    def tell(self) -> Tuple[int, int]:
+        """The durable read position: (next delta index, entries already
+        taken from it).  A client snapshots this before a fetch so a
+        lost response (mid-stream disconnect after the server advanced
+        the cursor) can resume the session at its last *applied* entry
+        instead of tearing the whole sync down."""
+        return (self._delta_i, self._entry_off)
+
+    def seek(self, pos: Tuple[int, int]) -> None:
+        """Reposition to a :meth:`tell` snapshot — the row-range resume:
+        the next ``_take`` slices from exactly that (delta, entry)."""
+        i, off = int(pos[0]), int(pos[1])
+        if not 0 <= i <= len(self.deltas):
+            raise ValueError(f"resume delta index {i} outside "
+                             f"[0, {len(self.deltas)}]")
+        if i == len(self.deltas):
+            if off != 0:
+                raise ValueError(f"resume offset {off} past the last delta")
+        elif not 0 <= off < max(1, len(self.deltas[i].indices)):
+            raise ValueError(f"resume offset {off} outside delta {i} "
+                             f"({len(self.deltas[i].indices)} entries)")
+        self._delta_i = i
+        self._entry_off = off
+
     @property
     def total_bytes(self) -> int:
         """Pre-mask payload size (masking preserves rows-mode sizes
@@ -163,7 +187,9 @@ class LicenseServer:
         return self.store.production_version(model, missing_ok=True)
 
     def open_update(
-        self, model: str, client_version: Optional[int], license_name: str = "full"
+        self, model: str, client_version: Optional[int],
+        license_name: str = "full",
+        resume: Optional[Tuple[int, int]] = None,
     ) -> UpdateCursor:
         """Chunk-granular variant of :meth:`handle_update`: same query, same
         masking, but the payload stays server-side and the client pulls
@@ -171,16 +197,26 @@ class LicenseServer:
         license masking runs, one part at a time, so neither endpoint ever
         pays a whole-packet pass.  The session is logged immediately (an
         abandoned sync must still appear in the audit trail); its live
-        entry accumulates bytes/entries as parts are fetched."""
+        entry accumulates bytes/entries as parts are fetched.
+
+        ``resume`` is a :meth:`UpdateCursor.tell` snapshot from a
+        previous session against the same ``(model, client_version)``:
+        a client whose connection died mid-stream reopens here and the
+        fresh cursor is seeked past everything it already durably
+        applied — the delta query is deterministic, so the row ranges
+        line up and the re-fetched entries are identical."""
         tier = self.tier(model, license_name)
         packet = self.store.delta_since(model, client_version)
         entry = UpdateLog(model=model, from_version=client_version,
                           to_version=packet.to_version, tier=license_name,
                           bytes_sent=0, entries=0)
         self.log.append(entry)
-        return UpdateCursor(model=model, from_version=client_version,
-                            to_version=packet.to_version, tier=license_name,
-                            deltas=packet.deltas, tier_obj=tier, _log=entry)
+        cursor = UpdateCursor(model=model, from_version=client_version,
+                              to_version=packet.to_version, tier=license_name,
+                              deltas=packet.deltas, tier_obj=tier, _log=entry)
+        if resume is not None:
+            cursor.seek(resume)
+        return cursor
 
     def fetch_update(self, cursor: UpdateCursor,
                      max_bytes: int = 1 << 20) -> List[LayerDelta]:
@@ -272,8 +308,21 @@ class EdgeClient:
         self.bytes_downloaded = 0
         self.updates = 0
 
-    def request_update(self, server: LicenseServer) -> UpdatePacket:
-        packet = server.handle_update(self.model, self.version, self.license_name)
+    def request_update(self, server, retry=None) -> UpdatePacket:
+        """Pull one whole-packet update.  ``server`` may be a raw
+        :class:`LicenseServer` or any ``core.transport.Transport`` over
+        one; ``retry`` is an optional ``RetryPolicy`` — with it, a
+        timed-out or corrupted delivery is re-requested (the query is a
+        pure read, so re-issuing is idempotent) instead of raised."""
+        from repro.core.transport import as_transport
+
+        transport = as_transport(server)
+
+        def _pull() -> UpdatePacket:
+            return transport.handle_update(self.model, self.version,
+                                           self.license_name)
+
+        packet = _pull() if retry is None else retry.run(_pull)
         if packet.to_version != self.version:
             self.params = delta_lib.apply_packet(self.params, packet)
             self.version = packet.to_version

@@ -58,6 +58,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.licensing import FULL_TIER, LicenseTier, apply_license
+from repro.core.transport import (DirectTransport, RetryPolicy, Transport,
+                                  TransportDisconnect, TransportError,
+                                  TransportTimeout)
 from repro.models import model as model_lib
 from repro.serving.engine import right_align
 from repro.serving.paging import NoPagedLeavesError, PagedCachePool, cdiv
@@ -110,6 +113,13 @@ class ModelSlot:
         history: int = 10_000,
         telemetry: Any = True,
         clock: Optional[Callable[[], float]] = None,
+        transport: Optional[Transport] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        lease_ttl_s: float = 60.0,
+        lease_grace_s: float = 300.0,
+        lease_policy: str = "reject",
+        lease_floor_tier: Optional[str] = None,
+        quarantine_after: int = 3,
     ):
         self.cfg = cfg
         # observability substrate first: the scheduler takes the clock,
@@ -245,7 +255,42 @@ class ModelSlot:
             lane0,
         )
 
+        if transport is not None and server is None:
+            server = transport.server
         self._server = server
+        # every wire call to the license server goes through the
+        # transport seam; a raw server gets the pass-through wrapper
+        if transport is not None:
+            self._transport: Optional[Transport] = transport
+        elif isinstance(server, Transport):
+            self._transport = server
+            self._server = server.server
+        else:
+            self._transport = (DirectTransport(server)
+                               if server is not None else None)
+        self.retry_policy = (retry_policy if retry_policy is not None
+                             else RetryPolicy())
+        # license lease: grants are fresh for ttl after the last
+        # successful server exchange; past that the slot serves DEGRADED
+        # (pinned views only, no new server grants) until grace runs out,
+        # then OFFLINE applies ``lease_policy`` at admission
+        if lease_policy not in ("reject", "floor"):
+            raise ValueError(f"lease_policy={lease_policy!r} not in "
+                             f"('reject', 'floor')")
+        self.lease_ttl_s = float(lease_ttl_s)
+        self.lease_grace_s = float(lease_grace_s)
+        self.lease_policy = lease_policy
+        self.lease_floor_tier = lease_floor_tier
+        self._lease_state = "healthy"
+        self._lease_renewed_t = self.clock()
+        self._lease_degraded_since: Optional[float] = None
+        self._degraded_seconds = 0.0
+        self._lease_recheck_t: Optional[float] = None
+        self._tiers_stale = False     # refresh deferred by a wire fault
+        # version quarantine: consecutive failed syncs per target version
+        self.quarantine_after = int(quarantine_after)
+        self._sync_failures: Dict[int, int] = {}
+        self.quarantined_versions: set = set()
         self.model = model
         self._client = None           # EdgeClient when booted from a server
         self._server_tiers: set = set()  # tier names learned from the server
@@ -287,6 +332,10 @@ class ModelSlot:
             # tenant enforcement: requests bounced by entitlement /
             # concurrency / rate-limit checks (submit OR admission)
             "quota_rejections": 0,
+            # fault tolerance: wire retries across all sync/tier calls,
+            # the subset whose cause was a timeout/disconnect, and
+            # versions quarantined after repeated failed syncs
+            "sync_retries": 0, "sync_timeouts": 0, "sync_quarantines": 0,
         }
         # prefix-aware admission: prefill batches served per suffix-width
         # bucket (the grouping decision, exported via metrics())
@@ -346,8 +395,22 @@ class ModelSlot:
              "Prompt tokens served from the prefix cache"),
             ("cow_copies", "serving_cow_copies_total",
              "Copy-on-write block copies before shared-block writes"),
+            ("sync_retries", "serving_sync_retries_total",
+             "Wire-call retries across sync and tier fetches"),
+            ("sync_timeouts", "serving_sync_timeouts_total",
+             "Wire-call retries caused by timeouts/disconnects"),
+            ("sync_quarantines", "serving_sync_quarantines_total",
+             "Versions quarantined after repeated failed syncs"),
         ):
             t.counter(name, labels=lb, help=help_, fn=_stat(key))
+        _LEASE_LEVEL = {"healthy": 0, "degraded": 1, "offline": 2}
+        t.gauge("serving_license_lease_state", labels=lb,
+                help="License lease state (0 healthy, 1 degraded, 2 offline)",
+                fn=lambda: _LEASE_LEVEL[self._lease_state])
+        t.counter("serving_degraded_seconds_total", labels=lb,
+                  help="Cumulative seconds spent outside the healthy "
+                       "lease state",
+                  fn=self.degraded_seconds_total)
         t.gauge("serving_queue_depth", labels=lb,
                 help="Requests waiting for admission",
                 fn=lambda: len(self.scheduler.waiting))
@@ -390,18 +453,167 @@ class ModelSlot:
                                "(the decode-stall bound)")
         t.declare(*GATEWAY_METRICS_KEYS)
 
+    # ------------------------------------------- license lease & fault handling
+    def degraded_seconds_total(self) -> float:
+        """Cumulative wall time outside HEALTHY, including the open span."""
+        total = self._degraded_seconds
+        if self._lease_degraded_since is not None:
+            total += self.clock() - self._lease_degraded_since
+        return total
+
+    def _lease_renew(self) -> None:
+        """Record a successful server exchange.
+
+        Timestamp-only store: safe to call from the background fetch
+        worker.  State *transitions* (and their audit/trace events)
+        happen lazily in :meth:`_lease_tick` on the serving thread."""
+        self._lease_renewed_t = self.clock()
+
+    def _lease_target(self, now: float) -> str:
+        age = now - self._lease_renewed_t
+        if age <= self.lease_ttl_s:
+            return "healthy"
+        if age <= self.lease_ttl_s + self.lease_grace_s:
+            return "degraded"
+        return "offline"
+
+    def _lease_tick(self) -> None:
+        """Advance the lease state machine (serving thread only).
+
+        Purely time-driven: the target state is a function of the age of
+        the last successful exchange vs ttl/grace, so a renewal from the
+        fetch worker heals the lease on the next tick without any
+        cross-thread state writes.  While unhealthy, a rate-limited probe
+        (``production_version``) gives an idle gateway — no sync in
+        flight, no tier fetches — a path back to HEALTHY."""
+        if self._server is None:
+            return
+        now = self.clock()
+        target = self._lease_target(now)
+        if target != "healthy":
+            # self-heal probe, at most ~4 per ttl so an unreachable
+            # server costs bounded wire attempts per serving step
+            interval = max(0.05, min(1.0, self.lease_ttl_s / 4))
+            if (self._lease_recheck_t is None
+                    or now - self._lease_recheck_t >= interval):
+                self._lease_recheck_t = now
+                try:
+                    self._transport.production_version(self.model)
+                    self._lease_renew()
+                    target = "healthy"
+                except (TransportError, KeyError):
+                    pass
+        if target == self._lease_state:
+            return
+        prev, self._lease_state = self._lease_state, target
+        if prev == "healthy":
+            self._lease_degraded_since = now
+        elif target == "healthy":
+            if self._lease_degraded_since is not None:
+                self._degraded_seconds += now - self._lease_degraded_since
+            self._lease_degraded_since = None
+        event = ("lease_restored" if target == "healthy"
+                 else "lease_" + target)
+        if self.obs:
+            self.audit.record(event, model=self.model, prev=prev,
+                              state=target,
+                              renew_age_s=round(now - self._lease_renewed_t, 3))
+            self.tracer.instant("lease:" + target,
+                                attrs={"model": self.model, "prev": prev})
+        if target == "healthy" and self._tiers_stale:
+            # a tier refresh was deferred by a wire fault mid-sync;
+            # rerun it now that the server is reachable again
+            owner = self.gateway if self.gateway is not None else self
+            refresh = getattr(owner, "_refresh_server_tiers", None)
+            if refresh is not None:
+                refresh()
+
+    def _lease_admission(self, license: str) -> Tuple[str, Optional[str]]:
+        """Admission-time lease gate: ``(serve_as_tier, error)``.
+
+        HEALTHY/DEGRADED serve every already-granted tier unchanged
+        (DEGRADED only refuses *new* server grants — that lives in
+        :meth:`_resolve_tier`).  OFFLINE applies the configured policy:
+        ``floor`` substitutes the floor tier when it is locally known,
+        ``reject`` (or a missing floor) bounces the request."""
+        self._lease_tick()
+        if self._lease_state != "offline":
+            return license, None
+        if (self.lease_policy == "floor"
+                and self.lease_floor_tier is not None
+                and self.lease_floor_tier in self.tiers):
+            return self.lease_floor_tier, None
+        return license, (f"license lease offline (policy="
+                         f"{self.lease_policy}): cannot validate tier "
+                         f"{license!r} against an unreachable server")
+
+    def _count_wire_retry(self, attempt: int, exc: BaseException,
+                          delay: float, to_version: Optional[int] = None,
+                          ) -> None:
+        """RetryPolicy ``on_retry`` hook: counters + audit per backoff."""
+        self.stats["sync_retries"] += 1
+        if isinstance(exc, (TransportTimeout, TransportDisconnect)):
+            self.stats["sync_timeouts"] += 1
+        if self.obs:
+            self.audit.record("sync_retry", model=self.model,
+                              attempt=attempt, error=type(exc).__name__,
+                              backoff_s=round(delay, 4),
+                              to_version=to_version)
+
+    def _note_sync_failure(self, version: int) -> None:
+        """Count a consecutive failed sync toward quarantining ``version``."""
+        n = self._sync_failures.get(version, 0) + 1
+        self._sync_failures[version] = n
+        if (n >= self.quarantine_after
+                and version not in self.quarantined_versions):
+            self.quarantined_versions.add(version)
+            self.stats["sync_quarantines"] += 1
+            if self.obs:
+                self.audit.record("sync_quarantine", model=self.model,
+                                  version=version, failures=n)
+                self.tracer.instant("sync:quarantine",
+                                    attrs={"model": self.model,
+                                           "version": version})
+
+    def _note_sync_success(self, version: int) -> None:
+        self._sync_failures.pop(version, None)
+        self._lease_renew()
+
+    def clear_quarantine(self, version: Optional[int] = None) -> None:
+        """Operator override: drop the quarantine (one version or all)."""
+        if version is None:
+            self.quarantined_versions.clear()
+            self._sync_failures.clear()
+        else:
+            self.quarantined_versions.discard(version)
+            self._sync_failures.pop(version, None)
+
     # ------------------------------------------------------------ weight views
     def _resolve_tier(self, name: str) -> LicenseTier:
         tier = self.tiers.get(name)
         if tier is None and self._server is not None:
+            # an unhealthy lease refuses NEW grants: every tier served
+            # during an outage must have been validated while the server
+            # was reachable (the pinned-view guarantee)
+            if self._lease_state != "healthy":
+                raise KeyError(
+                    f"unknown license tier {name!r} (lease "
+                    f"{self._lease_state}: refusing new tier grant)")
             try:
-                tier = self._server.tier(self.model, name)
+                tier = self.retry_policy.run(
+                    lambda: self._transport.tier(self.model, name),
+                    on_retry=self._count_wire_retry)
+                self._lease_renew()
                 self.tiers[name] = tier
                 self._server_tiers.add(name)
                 self.audit.record("tier_grant", model=self.model, tier=name,
                                   version=self.version, source="server")
             except KeyError:
                 tier = None
+            except TransportError as exc:
+                raise KeyError(
+                    f"unknown license tier {name!r} (license server "
+                    f"unreachable: {exc})") from exc
         if tier is None:
             raise KeyError(f"unknown license tier {name!r}")
         return tier
@@ -953,7 +1165,13 @@ class FleetGateway:
             self._rr = (self._rr + 1) % n if n else 0
         syncing = [g for g in order if g.sync_active]
         if syncing:
-            syncing[self._stager_rr % len(syncing)].sync_step()
+            try:
+                syncing[self._stager_rr % len(syncing)].sync_step()
+            except TransportError:
+                # retries exhausted: the stager already aborted (weights
+                # dropped, failure counted toward quarantine) — the slot
+                # keeps serving its current version
+                pass
             self._stager_rr += 1
         return act
 

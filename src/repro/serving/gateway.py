@@ -106,6 +106,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.transport import Transport, TransportError
 from repro.serving.engine import (prefill_step, prefill_suffix_step,
                                   right_align, sample, sample_lane,
                                   serve_step, serve_step_paged)
@@ -389,17 +390,35 @@ class LicensedGateway:
         drain.  While a revocation OR redefinition is pending, new
         admissions to the tier are rejected: nothing new may be served
         under the superseded masks, and with no new joiners the tier
-        drains (and the change lands) in bounded time."""
+        drains (and the change lands) in bounded time.
+
+        Under a wire fault the refresh *defers* rather than fails: the
+        current tiers keep serving (the DEGRADED-lease contract) and the
+        stale flag re-runs this on the next lease restore."""
+        touched = False
         for name in list(self._server_tiers):
             try:
-                fresh = self._server.tier(self.model, name)
+                fresh = self.retry_policy.run(
+                    lambda n=name: self._transport.tier(self.model, n),
+                    on_retry=self._count_wire_retry)
+                touched = True
             except KeyError:
                 fresh = None                       # revoked server-side
+                touched = True
+            except TransportError:
+                self._tiers_stale = True
+                if touched:
+                    self._lease_renew()
+                self._apply_pending_tiers()
+                return
             cur = self.tiers.get(name)
             if fresh is not None and cur is not None and fresh.masks == cur.masks:
                 self._pending_tiers.pop(name, None)
                 continue
             self._pending_tiers[name] = fresh
+        if touched:
+            self._lease_renew()
+        self._tiers_stale = False
         self._apply_pending_tiers()
 
     def _tier_in_flight(self, name: str) -> bool:
@@ -525,6 +544,18 @@ class LicensedGateway:
         self._next_rid += 1
         req.submit_t = self.clock()
         try:
+            serve_as, lease_err = self._lease_admission(license)
+            if lease_err is not None:
+                raise KeyError(lease_err)
+            if serve_as != license:
+                # OFFLINE floor policy: serve the most restrictive
+                # locally-known tier instead of an unverifiable grant
+                if self.obs:
+                    self.tracer.instant("lease_floor", req.rid,
+                                        {"requested": license,
+                                         "served_as": serve_as})
+                license = serve_as
+                req.license = serve_as
             if license in self._pending_tiers:
                 # a pending revocation OR redefinition refuses admissions:
                 # serving new requests under the superseded masks while
@@ -599,7 +630,15 @@ class LicensedGateway:
                     self.tracer.counter("blocks_held",
                                         self.pool.allocator.num_held)
         if drive_stager and self._stager is not None and self._stager.active:
-            self._stager.step()
+            try:
+                self._stager.step()
+            except TransportError:
+                # retries exhausted: the stager aborted inside step()
+                # (staged weights dropped, failure counted toward
+                # quarantine) — serving continues on the current version
+                pass
+        if self._server is not None:
+            self._lease_tick()
         if act is None:
             return None
         # a decode whose whole batch was preempted executed nothing —
@@ -1253,19 +1292,24 @@ class LicensedGateway:
     # ------------------------------------------------------- protocol plumbing
     @classmethod
     def from_server(cls, cfg: ModelConfig, server, model: str, template: Any,
-                    **kw) -> "LicensedGateway":
+                    transport: Optional[Transport] = None,
+                    retry: Any = None, **kw) -> "LicensedGateway":
         """Boot a gateway as an edge serving pod of ``server`` (Fig. 2).
 
         ``template`` is a zeroed params pytree; the full production
         snapshot is pulled through the §3.1.2 delta protocol, and
-        :meth:`sync` keeps pulling increments from then on.
-        """
+        :meth:`sync` keeps pulling increments from then on.  An explicit
+        ``transport`` routes every wire call (boot pull included) through
+        it — a ChaosTransport here exercises the whole path; ``retry``
+        overrides the gateway's RetryPolicy."""
         from repro.core.protocol import EdgeClient
 
         client = EdgeClient(model, template, license_name="full")
-        client.request_update(server)
+        client.request_update(transport if transport is not None else server,
+                              retry=retry)
         gw = cls(cfg, client.params, server=server, model=model,
-                 version=client.version, **kw)
+                 version=client.version, transport=transport,
+                 **({} if retry is None else {"retry_policy": retry}), **kw)
         gw._client = client
         return gw
 
@@ -1318,7 +1362,10 @@ class LicensedGateway:
         version flips in atomically at a step boundary.  Returns False
         when the client is already current (tier-only redefinitions are
         applied immediately — there is no flip to couple them to).  A
-        sync already in progress is left to finish (returns True)."""
+        sync already in progress is left to finish (returns True).  A
+        wire fault that outlives the retry budget during the probe
+        returns False — the gateway keeps serving and the caller may
+        try again later."""
         server = server or self._server
         if server is None or self._client is None:
             raise RuntimeError("gateway was not booted with from_server()")
@@ -1327,9 +1374,12 @@ class LicensedGateway:
         from repro.serving.updates import UpdateStager
 
         stager = UpdateStager(self, server, **stager_kw)
-        if stager.begin():
-            self._stager = stager
-            return True
+        try:
+            if stager.begin():
+                self._stager = stager
+                return True
+        except TransportError:
+            pass
         return False
 
     def sync_step(self) -> Optional[str]:
@@ -1425,6 +1475,17 @@ class LicensedGateway:
             # full-match batch shows up under width 1, never padded to a
             # cold batch's max_prompt
             "batches_by_suffix_width": dict(self.bucket_batches)}
+        out["lease"] = {
+            "state": self._lease_state,
+            "server_attached": self._server is not None,
+            "ttl_s": self.lease_ttl_s,
+            "grace_s": self.lease_grace_s,
+            "policy": self.lease_policy,
+            "renew_age_s": self.clock() - self._lease_renewed_t,
+            "degraded_seconds_total": self.degraded_seconds_total(),
+            "quarantined_versions": sorted(self.quarantined_versions),
+            "pinned_views": len(self.scheduler.pinned_tier_versions()),
+        }
         out["prefix_cache"] = {"enabled": self.prefix is not None}
         if self.prefix is not None:
             out["prefix_cache"].update(self.prefix.stats())

@@ -417,6 +417,12 @@ class Scheduler:
         """Weight versions still referenced by queued or running requests."""
         return {r.version for r in self.waiting} | {r.version for r in self.running}
 
+    def pinned_tier_versions(self) -> set:
+        """(tier, version) pairs referenced by queued or running requests —
+        the views DEGRADED lease serving is contractually pinned to."""
+        return {(r.license, r.version)
+                for r in list(self.waiting) + list(self.running)}
+
     def hot_tiers(self) -> List[str]:
         """License tiers with queued or running requests, busiest first.
 

@@ -357,13 +357,14 @@ GATEWAY_METRICS_KEYS: Tuple[str, ...] = (
     "resident_decode_steps", "tokens_generated", "preempted", "max_running",
     "max_blocks_in_use", "prefill_lane_tokens", "prefix_tokens_reused",
     "cow_copies", "prefill_chunks", "quota_rejections",
+    "sync_retries", "sync_timeouts", "sync_quarantines",
     "model",
     # nested sections
     "view_cache.hits", "view_cache.misses", "view_cache.evictions",
     "view_cache.invalidations", "view_cache.entries",
     "oldest_wait_s", "queue_wait_by_tier.*", "tenants.*",
     "cache_pool.*", "decode_path.kernel_resident", "decode_path.pallas",
-    "staged_update.*",
+    "staged_update.*", "lease.*",
     "chunked_prefill.enabled", "chunked_prefill.chunk_size",
     "chunked_prefill.chunks",
     "admission_grouping.enabled", "admission_grouping.batches_by_suffix_width.*",

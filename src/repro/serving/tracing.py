@@ -29,6 +29,7 @@ balanced ``B``/``E`` pairs per (pid, tid).
 """
 from __future__ import annotations
 
+import itertools
 import json
 import time
 from collections import deque
@@ -193,9 +194,12 @@ class AuditLog:
 
     Events: ``tier_grant``, ``tier_revoke``, ``tier_redefine``,
     ``view_materialize``, ``version_install``, ``version_flip``,
-    ``sync_begin``, ``sync_abort``, ``quota_reject``, ``rate_reject``,
-    ``tenant_reject``.  Each record is ``(ts, seq, event, attrs)`` —
-    one tuple append, no formatting until export.
+    ``sync_begin``, ``sync_abort``, ``sync_retry``, ``sync_quarantine``,
+    ``lease_degraded``, ``lease_offline``, ``lease_restored``,
+    ``quota_reject``, ``rate_reject``, ``tenant_reject``.  Each record
+    is ``(ts, seq, event, attrs)`` — one tuple append, no formatting
+    until export.  ``record`` is safe from the background fetch worker:
+    the deque append and the itertools counter are both atomic.
     """
 
     __slots__ = ("clock", "enabled", "records", "_seq")
@@ -206,13 +210,12 @@ class AuditLog:
         self.enabled = bool(enabled)
         self.records: "deque[Tuple[float, int, str, Dict]]" = \
             deque(maxlen=maxlen)
-        self._seq = 0
+        self._seq = itertools.count()
 
     def record(self, event: str, **attrs: Any) -> None:
         if not self.enabled:
             return
-        self.records.append((self.clock(), self._seq, event, attrs))
-        self._seq += 1
+        self.records.append((self.clock(), next(self._seq), event, attrs))
 
     def events(self, event: Optional[str] = None) -> List[Dict[str, Any]]:
         out = []

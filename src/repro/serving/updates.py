@@ -61,12 +61,22 @@ Invariants the stager preserves:
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Set
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.core.pytree_io import flatten_params, unflatten_like
+from repro.core.transport import (PayloadCorruption, RetryPolicy, Transport,
+                                  TransportDisconnect, TransportError,
+                                  TransportTimeout, as_transport)
 from repro.serving.tracing import STAGER_TID
+
+
+class _ReopenRequired(Exception):
+    """Internal worker→serving-thread signal: the cursor is dead (a
+    disconnect or corrupted delivery) and reopening it needs the §4.2
+    delta query — sqlite, which is bound to the serving thread.  Never
+    escapes the stager."""
 
 
 @functools.cache
@@ -98,9 +108,28 @@ class UpdateStager:
                  max_step_bytes: int = 256 << 10,
                  requant_layers_per_step: int = 2,
                  background_fetch: bool = True,
-                 fetch_depth: int = 2):
+                 fetch_depth: int = 2,
+                 transport: Optional[Transport] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 join_timeout_s: float = 5.0):
         self.gw = gateway
-        self.server = server
+        # every wire call goes through a Transport; ``server`` may be a
+        # raw LicenseServer or a Transport over one.  When the gateway
+        # was booted against the same server, its transport (and any
+        # chaos schedule on it) is reused so one seam governs the sync.
+        if transport is not None:
+            self.transport = transport
+        elif isinstance(server, Transport):
+            self.transport = server
+        else:
+            gwt = getattr(gateway, "_transport", None)
+            self.transport = (gwt if gwt is not None and gwt.server is server
+                              else as_transport(server))
+        self.server = self.transport.server
+        self.retry = (retry if retry is not None
+                      else getattr(gateway, "retry_policy", None)
+                      or RetryPolicy())
+        self.join_timeout_s = float(join_timeout_s)
         self.max_step_bytes = int(max_step_bytes)
         self.requant_layers_per_step = int(requant_layers_per_step)
         # true background fetch: the wire transfer (server.fetch_update
@@ -122,10 +151,19 @@ class UpdateStager:
         self._touched: Set[str] = set()   # layer names the delta touched
         self._requant_queue: List[str] = []
         self._prewarm_queue: List[str] = []
+        # fault-tolerance state: the last durably-applied cursor
+        # position (the resume token), wire bytes accumulated across
+        # reopened sessions, and whether the current cursor may have
+        # advanced past parts the client never received
+        self._pos: Tuple[int, int] = (0, 0)
+        self._wire_bytes = 0
+        self._cursor_dead = False
         self.stats_: Dict[str, Any] = {
             "steps": 0, "parts_applied": 0, "bytes_applied": 0,
             "max_step_bytes_applied": 0, "layers_requantized": 0,
             "views_prewarmed": 0, "flips": 0,
+            "retries": 0, "resumes": 0, "corrupt_parts": 0,
+            "fetch_workers_leaked": 0,
         }
 
     # ------------------------------------------------------------------ state
@@ -140,6 +178,7 @@ class UpdateStager:
         out["layers_touched"] = len(self._touched)
         out["max_step_bytes_bound"] = self.max_step_bytes
         out["background_fetch"] = self.background_fetch
+        out["wire"] = dict(self.transport.stats)
         return out
 
     # ------------------------------------------------------------------ begin
@@ -147,18 +186,30 @@ class UpdateStager:
         """Poll the server.  Returns True when a staged update session
         started (a newer production version exists); False when the
         client is current — in which case tier-only redefinitions are
-        applied immediately, since there is no version flip to join."""
+        applied immediately, since there is no version flip to join —
+        or when the newer version is quarantined (repeated failed syncs
+        toward it; serving continues on the current version).  Wire
+        faults retry under the policy; exhaustion raises
+        ``TransportError`` (``begin_sync`` turns that into "no sync
+        started, keep serving")."""
         gw, client = self.gw, self.gw._client
         # cheap poll first: a no-op sync must not pay the §4.2 delta
         # query or leave an empty session in the server's audit log
-        if self.server.production_version(gw.model) == client.version:
+        prod = self._wire(lambda: self.transport.production_version(gw.model))
+        if prod == client.version:
             gw._refresh_server_tiers()
             self.phase = "done"
             return False
-        cursor = self.server.open_update(gw.model, client.version,
-                                         client.license_name)
+        if prod in gw.quarantined_versions:
+            self.phase = "done"
+            return False
+        cursor = self._wire(lambda: self.transport.open_update(
+            gw.model, client.version, client.license_name))
         if cursor.to_version == client.version:   # raced: moved back to us
             gw._refresh_server_tiers()
+            self.phase = "done"
+            return False
+        if cursor.to_version in gw.quarantined_versions:
             self.phase = "done"
             return False
         if cursor.to_version < gw.version:
@@ -167,6 +218,9 @@ class UpdateStager:
                 f"than the gateway's current version {gw.version}")
         self._cursor = cursor
         self.to_version = cursor.to_version
+        self._pos = cursor.tell()
+        self._wire_bytes = 0
+        self._cursor_dead = False
         # flat staging view: untouched layers stay the client's own (np)
         # arrays by reference; a touched layer is uploaded once, patched
         # in place on device part-by-part, and downloaded once when the
@@ -193,6 +247,96 @@ class UpdateStager:
             self._start_fetch_worker()
         return True
 
+    # ------------------------------------------------------------ wire faults
+    def _note_retry(self, attempt: int, exc: BaseException,
+                    delay: float) -> None:
+        """Per-retry accounting hook (runs on whichever thread made the
+        wire call): stager counters, slot counters, and the
+        ``sync_retry`` audit event."""
+        self.stats_["retries"] += 1
+        if isinstance(exc, PayloadCorruption):
+            self.stats_["corrupt_parts"] += 1
+        gw = self.gw
+        gw._count_wire_retry(attempt, exc, delay,
+                             to_version=self.to_version)
+
+    def _wire(self, fn):
+        """One wire call under the retry policy; success renews the
+        license lease."""
+        result = self.retry.run(fn, on_retry=self._note_retry)
+        self.gw._lease_renew()
+        return result
+
+    def _reopen(self) -> None:
+        """Reconnect after a lost or corrupted delivery: the dead
+        cursor may have advanced past parts this client never received,
+        so it is abandoned (its session log entry stays — an abandoned
+        stream is still audit-visible) and a fresh session is opened,
+        seeked to the last durably-applied position.  The delta query
+        is deterministic, so the resumed row ranges line up exactly."""
+        gw, client = self.gw, self.gw._client
+        old, self._cursor = self._cursor, None
+        if old is not None:
+            self._wire_bytes += old.fetched_bytes
+        cursor = self.transport.open_update(gw.model, client.version,
+                                            client.license_name,
+                                            resume=self._pos)
+        if cursor.to_version != self.to_version:
+            # the server moved on mid-sync: resuming would splice two
+            # different deltas — not transient, abort the session
+            raise RuntimeError(
+                f"server production version moved {self.to_version} -> "
+                f"{cursor.to_version} mid-sync; aborting this session")
+        self._cursor = cursor
+        self.stats_["resumes"] += 1
+
+    def _reconnect(self) -> None:
+        """Serving-thread reopen: clears the dead-cursor flag once the
+        fresh session is seeked into place."""
+        self._reopen()
+        self._cursor_dead = False
+
+    def _fetch_parts(self, allow_reopen: bool = True,
+                     ) -> Tuple[List[Any], bool]:
+        """One bounded parts batch off the wire, surviving faults: a
+        failed delivery retries under the policy, resuming from the
+        last durable cursor position instead of tearing the sync down.
+        Returns ``(parts, done)``.  Runs on the fetch worker when
+        background fetch is on, on the serving thread otherwise — it is
+        the only mutator of cursor/position state while fetching.
+
+        ``allow_reopen=False`` (the worker): a dead cursor raises
+        :class:`_ReopenRequired` instead of reopening, because the
+        reopen runs the sqlite-backed delta query and sqlite connections
+        are bound to the serving thread.  Timeouts (the cursor never
+        moved) still retry in place — pure in-memory work."""
+
+        def attempt():
+            if self._cursor_dead:
+                if not allow_reopen:
+                    raise _ReopenRequired()
+                self._reconnect()
+            try:
+                return self.transport.fetch_update(self._cursor,
+                                                   self.max_step_bytes)
+            except TransportTimeout:
+                # the request never reached the server: the cursor is
+                # intact, a plain retry re-issues the same fetch
+                raise
+            except TransportError:
+                # a disconnect may have advanced the cursor past lost
+                # parts; a corrupt delivery did advance it — both resume
+                # via a reopen seeked to _pos
+                self._cursor_dead = True
+                raise
+
+        parts = self.retry.run(attempt, on_retry=self._note_retry)
+        # durable position: everything up to here is about to be applied
+        # locally (apply cannot fault — it is host/device work)
+        self._pos = self._cursor.tell()
+        self.gw._lease_renew()
+        return parts, self._cursor.done
+
     # ------------------------------------------------------- background fetch
     def _start_fetch_worker(self) -> None:
         """Spawn the wire-transfer worker: it loops ``fetch_update``
@@ -206,13 +350,24 @@ class UpdateStager:
 
         q: "queue.Queue" = queue.Queue(maxsize=self.fetch_depth)
         stop = threading.Event()
-        cursor, server, cap = self._cursor, self.server, self.max_step_bytes
 
         def _loop() -> None:
             try:
                 while not stop.is_set():
-                    parts = server.fetch_update(cursor, cap)
-                    done = cursor.done
+                    # timeouts retry in place here; a dead cursor
+                    # (disconnect/corruption) hands off to the serving
+                    # thread, which owns the sqlite-backed reopen
+                    try:
+                        parts, done = self._fetch_parts(allow_reopen=False)
+                    except _ReopenRequired:
+                        while not stop.is_set():
+                            try:
+                                q.put(("reconnect", None, False),
+                                      timeout=0.05)
+                                return
+                            except queue.Full:
+                                continue
+                        return
                     while not stop.is_set():
                         try:
                             q.put(("parts", parts, done), timeout=0.05)
@@ -238,11 +393,16 @@ class UpdateStager:
             target=_loop, name="update-stager-fetch", daemon=True)
         self._fetch_thread.start()
 
-    def _stop_fetch_worker(self) -> None:
+    def _stop_fetch_worker(self) -> bool:
         """Tear the worker down (idempotent): signal stop, unblock any
-        pending put by draining, join."""
+        pending put by draining, join.  Returns False — and records the
+        leak in ``stats()`` — when the worker is still alive after
+        ``join_timeout_s``: a live worker may still be writing cursor
+        and staging state, so callers on the flip path must FAIL the
+        sync rather than proceed (the old code silently ignored the
+        join timeout and flipped anyway)."""
         if self._fetch_thread is None:
-            return
+            return True
         import queue
 
         self._fetch_stop.set()
@@ -251,10 +411,14 @@ class UpdateStager:
                 self._fetch_queue.get_nowait()
         except queue.Empty:
             pass
-        self._fetch_thread.join(timeout=5.0)
+        self._fetch_thread.join(timeout=self.join_timeout_s)
+        leaked = self._fetch_thread.is_alive()
+        if leaked:
+            self.stats_["fetch_workers_leaked"] += 1
         self._fetch_thread = None
         self._fetch_queue = None
         self._fetch_stop = None
+        return not leaked
 
     # ------------------------------------------------------------------- step
     def step(self) -> Optional[str]:
@@ -317,6 +481,8 @@ class UpdateStager:
         if gw.obs:
             gw.audit.record("sync_abort", model=gw.model,
                             phase=self.phase, to_version=self.to_version)
+        if self.to_version is not None:
+            gw._note_sync_failure(self.to_version)
         self.phase = "failed"
 
     def _apply_part(self, part) -> None:
@@ -365,10 +531,21 @@ class UpdateStager:
             kind, payload, done = self._fetch_queue.get()
             if kind == "error":
                 raise payload
+            if kind == "reconnect":
+                # the worker exited on a dead cursor: reopen it here
+                # (the sqlite-bound delta query) and restart the worker
+                # — this stager step's bounded unit IS the reconnect
+                if not self._stop_fetch_worker():
+                    raise RuntimeError(
+                        "background fetch worker failed to stop during "
+                        "reconnect")
+                self.retry.run(self._reconnect, on_retry=self._note_retry)
+                self.gw._lease_renew()
+                self._start_fetch_worker()
+                return
             parts = payload
         else:
-            parts = self.server.fetch_update(self._cursor, self.max_step_bytes)
-            done = self._cursor.done
+            parts, done = self._fetch_parts()
         if parts:
             for part in parts:
                 self._apply_part(part)
@@ -383,7 +560,10 @@ class UpdateStager:
             # queue with the final batch, so cursor fields read from the
             # serving thread from here on (fetched_bytes at the flip)
             # are past the last worker write
-            self._stop_fetch_worker()
+            if not self._stop_fetch_worker():
+                raise RuntimeError(
+                    "background fetch worker failed to stop; refusing to "
+                    "flip with a live worker still writing")
             if self._pending_layer is not None:
                 self._finalize_layer()
             # assemble the staged tree: touched layers are the patched
@@ -459,9 +639,10 @@ class UpdateStager:
         gw._install_staged(self.to_version)
         client.params = self._staged
         client.version = self.to_version
-        client.bytes_downloaded += self._cursor.fetched_bytes
+        client.bytes_downloaded += self._wire_bytes + self._cursor.fetched_bytes
         client.updates += 1
         self.stats_["flips"] += 1
+        gw._note_sync_success(self.to_version)
         self._cursor = None
         self._staged = self._staged_q = None
         self.phase = "done"

@@ -1,0 +1,280 @@
+"""Wire-seam unit tests: RetryPolicy, payload checksums, the chaos
+transport's deterministic fault schedule, and cursor resume.
+
+These exercise ``core/transport.py`` against a real in-memory
+``LicenseServer`` but below the serving stack — the end-to-end
+differential (tokens bit-identical under a seeded fault schedule) lives
+in ``test_chaos.py``."""
+import numpy as np
+import pytest
+
+from repro.core.protocol import EdgeClient, LicenseServer
+from repro.core.transport import (ChaosTransport, DirectTransport,
+                                  PayloadCorruption, RetryPolicy,
+                                  TransportDisconnect, TransportError,
+                                  TransportTimeout, as_transport,
+                                  part_checksum, verify_parts)
+from repro.core.weightstore import LayerDelta, WeightStore
+
+
+def _noop_sleep(_s):
+    pass
+
+
+def _server(chunk_elems=4):
+    store = WeightStore(":memory:", row_limit=8, chunk_elems=chunk_elems)
+    store.register_model("m", "mlp")
+    server = LicenseServer(store)
+    rng = np.random.default_rng(0)
+    p = {"big/kernel": rng.standard_normal((16, 4)).astype(np.float32),
+         "small/kernel": rng.standard_normal((2, 3)).astype(np.float32)}
+    v1 = server.publish("m", p)
+    p2 = {k: v * 1.01 for k, v in p.items()}
+    server.publish("m", p2, parent=v1)
+    return server, p, p2
+
+
+# ----------------------------------------------------------------- RetryPolicy
+def test_retry_succeeds_after_transient_faults():
+    calls = []
+    retries = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransportTimeout("boom")
+        return "ok"
+
+    rp = RetryPolicy(max_attempts=5, base_delay_s=0.01, sleep=_noop_sleep)
+    out = rp.run(flaky, on_retry=lambda a, e, d: retries.append((a, d)))
+    assert out == "ok" and len(calls) == 3
+    assert [a for a, _ in retries] == [1, 2]
+    # exponential: second backoff larger than the first (jitter is +/-10%)
+    assert retries[1][1] > retries[0][1]
+
+
+def test_retry_exhausts_attempts_and_reraises():
+    rp = RetryPolicy(max_attempts=3, base_delay_s=0.0, sleep=_noop_sleep)
+    calls = []
+
+    def always():
+        calls.append(1)
+        raise TransportDisconnect("down")
+
+    with pytest.raises(TransportDisconnect):
+        rp.run(always)
+    assert len(calls) == 3
+
+
+def test_retry_deadline_cuts_budget_short():
+    now = [0.0]
+    rp = RetryPolicy(max_attempts=100, base_delay_s=1.0, multiplier=1.0,
+                     jitter=0.0, deadline_s=2.5, clock=lambda: now[0],
+                     sleep=lambda s: now.__setitem__(0, now[0] + s))
+    calls = []
+
+    def always():
+        calls.append(1)
+        raise TransportTimeout("down")
+
+    with pytest.raises(TransportTimeout):
+        rp.run(always)
+    # 2 sleeps of 1s fit under the 2.5s deadline, the third would not
+    assert len(calls) == 3
+
+
+def test_retry_jitter_is_deterministic_per_seed():
+    a = RetryPolicy(seed=7)
+    b = RetryPolicy(seed=7)
+    c = RetryPolicy(seed=8)
+    da = [a.delay(i) for i in range(1, 6)]
+    assert da == [b.delay(i) for i in range(1, 6)]
+    assert da != [c.delay(i) for i in range(1, 6)]
+
+
+def test_retry_does_not_catch_non_retryable():
+    rp = RetryPolicy(max_attempts=5, base_delay_s=0.0, sleep=_noop_sleep)
+    calls = []
+
+    def wrong():
+        calls.append(1)
+        raise KeyError("not a wire fault")
+
+    with pytest.raises(KeyError):
+        rp.run(wrong)
+    assert len(calls) == 1
+
+
+# ------------------------------------------------------------------- checksums
+def test_part_checksum_detects_flipped_byte_rows_and_chunks():
+    rows = LayerDelta(layer="l/kernel", shape=(4, 2), dtype="float32",
+                      indices=np.array([0, 3], np.int64),
+                      values=np.array([[1, 2], [3, 4]], np.float32))
+    d = part_checksum(rows)
+    bad_vals = rows.values.copy()
+    bad_vals.view(np.uint8).reshape(-1)[3] ^= 0xFF
+    bad = LayerDelta(layer=rows.layer, shape=rows.shape, dtype=rows.dtype,
+                     indices=rows.indices, values=bad_vals)
+    assert part_checksum(bad) != d
+    with pytest.raises(PayloadCorruption, match="l/kernel"):
+        verify_parts([bad], [d])
+    verify_parts([rows], [d])                 # pristine passes
+
+    page = np.arange(4, dtype=np.float32).tobytes()
+    chunked = LayerDelta(layer="l/kernel", shape=(8, 1), dtype="float32",
+                         indices=np.array([0], np.int64), chunks=[page],
+                         chunk_elems=4, chunk_compressed=[False])
+    dc = part_checksum(chunked)
+    blob = bytearray(page)
+    blob[5] ^= 0xFF
+    bad_c = LayerDelta(layer="l/kernel", shape=(8, 1), dtype="float32",
+                       indices=np.array([0], np.int64), chunks=[bytes(blob)],
+                       chunk_elems=4, chunk_compressed=[False])
+    assert part_checksum(bad_c) != dc
+
+
+# ------------------------------------------------------------ chaos scheduling
+def test_chaos_schedule_deterministic_per_seed():
+    def drain(seed):
+        server, _, _ = _server()
+        tr = ChaosTransport(server, seed=seed, fault_rate=0.3,
+                            sleep=_noop_sleep)
+        rp = RetryPolicy(max_attempts=10, base_delay_s=0.0,
+                         sleep=_noop_sleep)
+        outcomes = []
+        for _ in range(30):
+            try:
+                rp.run(lambda: tr.production_version("m"))
+                outcomes.append("ok")
+            except TransportError as e:
+                outcomes.append(type(e).__name__)
+        return outcomes, dict(tr.stats)
+
+    o1, s1 = drain(3)
+    o2, s2 = drain(3)
+    o3, s3 = drain(4)
+    assert o1 == o2 and s1 == s2
+    assert s1 != s3
+    assert s1["faults"] > 0
+
+
+def test_chaos_timeout_vs_disconnect_server_state():
+    """A timeout faults BEFORE the server sees the call (cursor does not
+    move); a disconnect faults AFTER (cursor advanced past parts the
+    client never received)."""
+    server, _, _ = _server()
+    cursor = server.open_update("m", 1, "full")
+
+    tr = ChaosTransport(server, seed=0, fault_rate=1.0, disconnect_weight=0,
+                        corrupt_weight=0, sleep=_noop_sleep)
+    pos = cursor.tell()
+    with pytest.raises(TransportTimeout):
+        tr.fetch_update(cursor, 64)
+    assert cursor.tell() == pos               # server never saw the call
+
+    tr = ChaosTransport(server, seed=0, fault_rate=1.0, timeout_weight=0,
+                        corrupt_weight=0, sleep=_noop_sleep)
+    with pytest.raises(TransportDisconnect):
+        tr.fetch_update(cursor, 64)
+    assert cursor.tell() != pos               # parts were lost mid-stream
+
+
+def test_chaos_corruption_caught_and_server_payload_untouched():
+    server, _, _ = _server()
+    cursor = server.open_update("m", 1, "full")
+    tr = ChaosTransport(server, seed=1, fault_rate=1.0, timeout_weight=0,
+                        disconnect_weight=0, sleep=_noop_sleep)
+    with pytest.raises(PayloadCorruption):
+        tr.fetch_update(cursor, 1 << 20)
+    assert tr.stats["corruptions"] >= 1
+    # the same rows re-fetched through a clean transport verify fine:
+    # only the delivered copy was damaged, never the server's bytes
+    cursor2 = server.open_update("m", 1, "full")
+    clean = DirectTransport(server)
+    parts = clean.fetch_update(cursor2, 1 << 20)
+    assert parts and cursor2.done
+
+
+def test_chaos_duplicate_delivery_does_not_advance_cursor():
+    server, _, _ = _server()
+    cursor = server.open_update("m", 1, "full")
+    tr = ChaosTransport(server, seed=0, fault_rate=0.0, dup_rate=1.0,
+                        sleep=_noop_sleep)
+    first = tr.fetch_update(cursor, 64)
+    pos = cursor.tell()
+    dup = tr.fetch_update(cursor, 64)         # re-delivery of ``first``
+    assert cursor.tell() == pos
+    assert tr.stats["duplicates"] == 1
+    assert [p.layer for p in dup] == [p.layer for p in first]
+    for a, b in zip(first, dup):
+        np.testing.assert_array_equal(np.asarray(a.indices),
+                                      np.asarray(b.indices))
+
+
+def test_chaos_fault_ops_filter():
+    server, _, _ = _server()
+    tr = ChaosTransport(server, seed=0, fault_rate=1.0,
+                        fault_ops=("fetch_update",), sleep=_noop_sleep)
+    # ops outside the filter never fault
+    for _ in range(5):
+        assert tr.production_version("m") == 2
+    assert tr.stats["faults"] == 0
+
+
+# ------------------------------------------------------------- cursor + resume
+def test_cursor_tell_seek_resume_matches_uninterrupted_drain():
+    server, _, p2 = _server()
+
+    ref_cursor = server.open_update("m", 1, "full")
+    ref_parts = []
+    while not ref_cursor.done:
+        ref_parts.extend(server.fetch_update(ref_cursor, 48))
+
+    cursor = server.open_update("m", 1, "full")
+    got = list(server.fetch_update(cursor, 48))
+    pos = cursor.tell()
+    server.fetch_update(cursor, 48)           # delivered but LOST on the wire
+    resumed = server.open_update("m", 1, "full", resume=pos)
+    assert resumed.tell() == pos
+    while not resumed.done:
+        got.extend(server.fetch_update(resumed, 48))
+
+    assert [p.layer for p in got] == [p.layer for p in ref_parts]
+    for a, b in zip(got, ref_parts):
+        np.testing.assert_array_equal(np.asarray(a.indices),
+                                      np.asarray(b.indices))
+        assert part_checksum(a) == part_checksum(b)
+
+
+def test_cursor_seek_rejects_bad_positions():
+    server, _, _ = _server()
+    cursor = server.open_update("m", 1, "full")
+    with pytest.raises(ValueError):
+        cursor.seek((99, 0))
+    with pytest.raises(ValueError):
+        cursor.seek((0, 10 ** 9))
+
+
+# -------------------------------------------------------------- client-side use
+def test_edge_client_pull_through_chaos_matches_direct():
+    server, _, _ = _server()
+    direct = EdgeClient("m", {"big/kernel": np.zeros((16, 4), np.float32),
+                              "small/kernel": np.zeros((2, 3), np.float32)})
+    direct.request_update(server)
+
+    chaotic = EdgeClient("m", {"big/kernel": np.zeros((16, 4), np.float32),
+                               "small/kernel": np.zeros((2, 3), np.float32)})
+    tr = ChaosTransport(server, seed=5, fault_rate=0.4, sleep=_noop_sleep)
+    rp = RetryPolicy(max_attempts=10, base_delay_s=0.0, sleep=_noop_sleep)
+    chaotic.request_update(tr, retry=rp)
+
+    assert chaotic.version == direct.version
+    for k in direct.params:
+        np.testing.assert_array_equal(chaotic.params[k], direct.params[k])
+
+
+def test_as_transport_passthrough():
+    server, _, _ = _server()
+    tr = DirectTransport(server)
+    assert as_transport(tr) is tr
+    assert as_transport(server).server is server

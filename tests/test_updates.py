@@ -554,3 +554,179 @@ def test_sync_already_current_refreshes_tiers_only(setup):
     # no-op polls use the cheap production_version probe: no delta query,
     # no empty sessions accumulating in the audit log
     assert len(server.log) == log_before
+
+
+# ----------------------------------------------------- fault-tolerance edges
+def test_leaked_fetch_worker_fails_sync_instead_of_flipping(setup):
+    """A worker still alive after the join timeout must FAIL the sync —
+    the old code ignored the timeout and flipped with a live thread
+    still writing cursor/staging state — and the leak must be visible
+    in stats()."""
+    import time as _time
+
+    cfg, params = setup
+    server = _server_with(params)
+    gw = _boot(cfg, server, params)
+    newp = jax.tree_util.tree_map(lambda x: np.asarray(x) * 1.01, params)
+    server.publish("lm", newp, tag="v2")
+
+    assert gw.begin_sync(max_step_bytes=1 << 30, join_timeout_s=0.05) is True
+    st = gw._stager
+    # swap in a stubborn worker that ignores the stop signal; the real
+    # worker finishes its single batch and exits on its own
+    real = st._fetch_thread
+    gate = threading.Event()
+    stubborn = threading.Thread(target=gate.wait, daemon=True)
+    stubborn.start()
+    for _ in range(100):                      # let the real worker finish
+        if not real.is_alive():
+            break
+        _time.sleep(0.05)
+    assert not real.is_alive()
+    st._fetch_thread = stubborn
+
+    with pytest.raises(RuntimeError, match="refusing to flip"):
+        while gw.sync_active:
+            gw.sync_step()
+    gate.set()
+    assert not gw.sync_active
+    assert st.stats()["fetch_workers_leaked"] == 1
+    assert gw.version == 1 and gw._staging_version is None
+    assert 2 not in gw._weights                # nothing half-flipped
+    # the gateway still serves and a clean retry lands
+    r = gw.submit(_prompt(1), license="free", max_new_tokens=2)
+    gw.run()
+    assert r.state == RequestState.DONE
+    assert gw.sync() is True and gw.version == 2
+
+
+def test_backpressure_stalled_consumer_neither_drops_nor_spins(setup):
+    """With the consumer stalled, the bounded queue must hold the worker
+    at ~fetch_depth batches ahead (no unbounded fetching, no dropped
+    parts); an abort while the queue is full must still join the
+    worker."""
+    import time as _time
+
+    cfg, params = setup
+
+    def _chunked_server():
+        store = WeightStore(":memory:", row_limit=2048, chunk_elems=2048)
+        server = LicenseServer(store)
+        server.publish("lm", params, tag="v1")
+        server.publish_tier("lm", LicenseTier(name="free",
+                                              masks={"*": ((0.0, 0.004),)}))
+        return server
+
+    def _publish_v2(server):
+        newp = jax.tree_util.tree_map(lambda x: np.asarray(x) * 1.01,
+                                      params)
+        server.publish("lm", newp, tag="v2")
+
+    server = _chunked_server()
+    gw = _boot(cfg, server, params)
+    _publish_v2(server)
+    calls = []
+    orig = server.fetch_update
+
+    def spy(cursor, max_bytes):
+        calls.append(1)
+        return orig(cursor, max_bytes)
+
+    server.fetch_update = spy
+    assert gw.begin_sync(max_step_bytes=16 << 10, fetch_depth=1) is True
+    # stalled consumer: no sync_step for a while — the worker must park
+    # on the full queue, not keep fetching (depth + one batch in hand)
+    _time.sleep(0.6)
+    assert len(calls) <= 3
+    # consumer resumes: every part arrives exactly once, the sync lands
+    while gw.sync_active:
+        gw.sync_step()
+    del server.fetch_update
+    st = gw.metrics()["staged_update"]
+    assert st["flips"] == 1 and st["fetch_workers_leaked"] == 0
+    assert gw.version == gw._client.version == 2
+    fresh = _boot(cfg, server, params)           # no dropped parts: weights
+    for x, y in zip(jax.tree_util.tree_leaves(gw._client.params),
+                    jax.tree_util.tree_leaves(fresh._client.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    # abort with the queue full must still join the worker cleanly
+    server2 = _chunked_server()
+    gw2 = _boot(cfg, server2, params)
+    _publish_v2(server2)
+    assert gw2.begin_sync(max_step_bytes=16 << 10, fetch_depth=1) is True
+    st2 = gw2._stager
+    _time.sleep(0.3)                             # queue fills, worker parked
+    st2.abort()
+    assert st2._fetch_thread is None
+    assert st2.stats()["fetch_workers_leaked"] == 0
+    assert gw2.version == 1 and gw2._staging_version is None
+
+
+def test_abort_mid_prewarm_leaves_registry_clean(setup):
+    """Aborting after the staging version (and possibly its views) are
+    pre-registered must leave the view cache and version registry
+    exactly as before the sync — the _gc_versions invariant."""
+    cfg, params = setup
+    server = _server_with(params)
+    gw = _boot(cfg, server, params)
+    # a long request keeps the "free" tier hot so prewarm has work
+    r = gw.submit(_prompt(1), license="free", max_new_tokens=16)
+    gw.step()
+    newp = jax.tree_util.tree_map(lambda x: np.asarray(x) * 1.01, params)
+    server.publish("lm", newp, tag="v2")
+
+    assert gw.begin_sync(max_step_bytes=1 << 20) is True
+    while gw.sync_active and gw._stager.phase != "prewarm":
+        gw.sync_step()
+    assert gw._stager.phase == "prewarm"
+    assert gw._staging_version == 2 and 2 in gw._weights
+    gw._stager.abort()
+
+    assert gw._staging_version is None
+    assert 2 not in gw._weights
+    assert ("free", 2) not in gw.views
+    gw._gc_versions()                            # invariant holds post-abort
+    assert set(gw._weights) == gw.scheduler.pinned_versions() | {1}
+    gw.run()
+    assert r.state == RequestState.DONE and r.version == 1
+
+    # a clean re-begin lands with exactly one version_flip ever recorded
+    assert gw.sync() is True
+    assert gw.version == 2
+    assert len(gw.audit.events("version_flip")) == 1
+    assert len(gw.audit.events("sync_abort")) == 1
+
+
+def test_abort_then_retry_of_quarantined_version(setup):
+    """abort → quarantine → begin refuses → clear_quarantine → clean
+    re-sync; at every stage the view cache and version registry hold the
+    no-staged-version-leak invariant."""
+    cfg, params = setup
+    server = _server_with(params)
+    gw = _boot(cfg, server, params, quarantine_after=1)
+    warm = gw.submit(_prompt(0), license="free", max_new_tokens=1)
+    gw.run()
+    assert warm.state == RequestState.DONE
+    newp = jax.tree_util.tree_map(lambda x: np.asarray(x) * 1.01, params)
+    server.publish("lm", newp, tag="v2")
+
+    assert gw.begin_sync(max_step_bytes=16 << 10) is True
+    gw.sync_step()                               # some parts staged
+    gw._stager.abort()
+    assert gw.quarantined_versions == {2}
+    assert gw._staging_version is None and 2 not in gw._weights
+    assert ("free", 2) not in gw.views           # no staged-view leak
+    gw._gc_versions()
+    assert set(gw._weights) == gw.scheduler.pinned_versions() | {1}
+
+    assert gw.begin_sync() is False              # quarantined: refuses
+    assert gw._staging_version is None and 2 not in gw._weights
+
+    gw.clear_quarantine(2)
+    assert gw.sync() is True                     # operator override: lands
+    assert gw.version == gw._client.version == 2
+    assert len(gw.audit.events("version_flip")) == 1
+    r = gw.submit(_prompt(2), license="free", max_new_tokens=2)
+    gw.run()
+    assert r.state == RequestState.DONE and r.version == 2
