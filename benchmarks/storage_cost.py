@@ -11,10 +11,9 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from repro.configs.paper_mlp import TABLE1_A, TABLE1_B
-from repro.core import compress_pipeline, flatten_params, prune_params
+from repro.core import compress_pipeline
 from repro.core.weightstore import WeightStore
 from repro.training import init_mlp_params
 
@@ -54,9 +53,7 @@ def run() -> list:
         t_full = time.perf_counter() - t0
 
         pruned, quant, stats = compress_pipeline(params, sparsity=0.8)
-        t0 = time.perf_counter()
         pruned_sz = _store_size(pruned)
-        t_pruned = time.perf_counter() - t0
 
         mb = 1e6
         rows.append({

@@ -10,7 +10,6 @@ Run:  PYTHONPATH=src python examples/train_lm_with_versioned_checkpoints.py [--s
 """
 import argparse
 
-import jax
 
 from repro.configs import get_config, smoke_variant
 from repro.core.weightstore import WeightStore

@@ -1,0 +1,32 @@
+"""Serving-invariant static analysis + runtime sanitizers.
+
+Nine PRs of serving work accumulated cross-cutting invariants that were
+enforced only by convention: the injectable-clock discipline, ``self.obs``
+telemetry guards, BlockAllocator refcount/CoW rules, the bounded-queue
+staged-sync worker protocol, and Pallas-kernel/oracle pairing.  This
+package machine-checks them at three layers:
+
+* :mod:`repro.analysis.lint` — project-specific AST lint pass
+  (``python -m repro.analysis.lint src/``), one module per rule under
+  :mod:`repro.analysis.rules`, with ``# lint: allow-<rule>`` suppressions.
+* :mod:`repro.analysis.sanitize` — opt-in runtime sanitizers
+  (``LicensedGateway(..., sanitize=True)`` or ``REPRO_SANITIZE=1``): a
+  shadow-model block sanitizer mirroring BlockAllocator/PagedCachePool
+  state, and a retracing sentinel bounding jit specialization counts.
+* :mod:`repro.analysis.lockstep` — a seeded deterministic lockstep
+  scheduler serializing the staged-sync fetch worker against the serving
+  thread at annotated yield points, asserting ``guarded-by`` field
+  ownership dynamically across explored interleavings.
+
+This module deliberately imports nothing at package-import time: serving
+modules import :mod:`repro.analysis.lockstep` hooks, and a package-level
+import of the lint/metrics machinery would create an import cycle back
+into ``repro.serving``.
+
+See ``docs/ANALYSIS.md`` for the rule catalog and annotation grammar.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "lint", "lockstep", "metrics", "rules", "sanitize",
+]

@@ -1,0 +1,105 @@
+"""RULE-HOT-PATH: no host<->device sync inside scheduler/allocator loops.
+
+The serving loop's latency contract (one bounded host transfer per
+scheduler step, at the step boundary) dies quietly when a per-lane loop
+body forces a device sync: ``.block_until_ready()``,
+``jax.device_get(...)``, or ``float()/int()/np.asarray()`` applied to a
+traced/device value all stall the dispatch pipeline once per iteration
+instead of once per step.
+
+Checks, over the serving step-loop modules (scheduler, paging, gateway,
+fleet, engine):
+
+* any ``.block_until_ready`` use — benchmarks are the only sanctioned
+  callers and they live outside ``src/repro`` (flagged anywhere in the
+  module, loops or not);
+* ``jax.device_get(...)`` calls (same scope: the serving path transfers
+  via one ``np.asarray`` per step at the boundary, never device_get);
+* inside ``for``/``while`` bodies only: ``float(...)``, ``int(...)``,
+  ``np.asarray(...)``, ``np.array(...)`` whose argument expression
+  references ``jnp``/``jax`` — the textual device-value heuristic that
+  catches per-lane materialization while leaving the sanctioned
+  once-per-step ``outs = np.asarray(outs)`` (outside any loop) alone.
+  Host->device staging (``jnp.asarray(host_list)``) is not a sync and
+  stays legal.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.lint import Diagnostic, ModuleInfo, ancestors
+from repro.analysis.rules import Rule, _attr_chain
+
+_SCOPED_FILES = {"scheduler.py", "paging.py", "gateway.py", "fleet.py",
+                 "engine.py"}
+_CASTS = {"float", "int"}
+
+
+def _mentions_device(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and n.id in ("jnp", "jax"):
+            return True
+    return False
+
+
+def _in_loop(node: ast.AST) -> bool:
+    child: ast.AST = node
+    for parent in ancestors(node):
+        if isinstance(parent, (ast.For, ast.While)) \
+                and child is not getattr(parent, "iter", None) \
+                and child is not getattr(parent, "test", None):
+            return True
+        if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Lambda)):
+            return False          # nested fn bodies judged on their own
+        child = parent
+    return False
+
+
+class HotPathRule(Rule):
+    name = "hot-path"
+
+    def applies(self, module: ModuleInfo) -> bool:
+        return "serving" in module.parts and module.name in _SCOPED_FILES
+
+    def check(self, module: ModuleInfo) -> Iterable[Diagnostic]:
+        if not self.applies(module):
+            return []
+        out: List[Diagnostic] = []
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Attribute) \
+                    and node.attr == "block_until_ready":
+                d = module.diag(
+                    node, self.name,
+                    "`.block_until_ready` in the serving path forces a "
+                    "device sync; only benchmarks may fence explicitly")
+                if d:
+                    out.append(d)
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if chain == ["jax", "device_get"]:
+                d = module.diag(
+                    node, self.name,
+                    "`jax.device_get` in the serving path; transfer once "
+                    "per step via np.asarray at the step boundary")
+                if d:
+                    out.append(d)
+                continue
+            is_cast = (isinstance(node.func, ast.Name)
+                       and node.func.id in _CASTS)
+            is_np_mat = chain in (["np", "asarray"], ["np", "array"],
+                                  ["numpy", "asarray"], ["numpy", "array"])
+            if (is_cast or is_np_mat) and node.args \
+                    and _mentions_device(node.args[0]) and _in_loop(node):
+                what = (node.func.id if is_cast else ".".join(chain))
+                d = module.diag(
+                    node, self.name,
+                    f"`{what}(...)` on a device value inside a step loop "
+                    f"syncs per iteration; hoist the transfer to the "
+                    f"step boundary")
+                if d:
+                    out.append(d)
+        return out

@@ -1,0 +1,168 @@
+"""RULE-KERNEL: every Pallas kernel is oracle-paired and test-runnable.
+
+The kernel contract (``kernels/ref.py``): each ``pl.pallas_call`` site
+ships with a pure-jnp oracle of the same name that tests
+``assert_allclose`` against, and an ``interpret=`` seam so the kernel
+*body* runs on CPU CI.  Donation must line up with aliasing — a jit
+wrapper that donates its buffer but whose kernel never aliases an
+operand silently clones the buffer anyway, voiding the in-place
+contract staged sync relies on.
+
+Checks, per module under ``kernels/`` (the oracle file itself, the
+``ops.py`` dispatch layer, and ``__init__.py`` are exempt):
+
+* every ``pl.pallas_call(...)`` passes an explicit ``interpret=`` kwarg
+  (the CPU-test seam);
+* every public kernel entry (top-level jit-wrapped function, or any
+  public function whose body reaches a ``pallas_call``) has a same-named
+  oracle in the sibling ``ref.py`` (prefix match covers ``_inplace``
+  variants);
+* a jit wrapper declaring ``donate_argnums`` requires at least one
+  ``pallas_call`` in the module carrying ``input_output_aliases``;
+* literal ``input_output_aliases`` keys must index real operands of the
+  call (operand indices count scalar-prefetch args first, matching
+  Pallas semantics).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, List, Optional, Set
+
+from repro.analysis.lint import Diagnostic, ModuleInfo
+from repro.analysis.rules import Rule, _attr_chain
+
+_EXEMPT = {"ref.py", "ops.py", "__init__.py"}
+
+
+def _ref_names(module: ModuleInfo) -> Optional[Set[str]]:
+    ref = Path(module.path).parent / "ref.py"
+    if not ref.is_file():
+        return None
+    try:
+        tree = ast.parse(ref.read_text())
+    except (OSError, SyntaxError):
+        return None
+    return {n.name for n in tree.body if isinstance(n, ast.FunctionDef)}
+
+
+def _pallas_calls(tree: ast.AST) -> List[ast.Call]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, ast.Call)
+            and _attr_chain(n.func)[-1:] == ["pallas_call"]]
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _has_alias_dict(expr: Optional[ast.expr]) -> bool:
+    """True when the expression can produce a non-empty alias mapping."""
+    if expr is None:
+        return False
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Dict) and n.keys:
+            return True
+    return False
+
+
+def _donates(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        for n in ast.walk(dec):
+            if isinstance(n, ast.keyword) and n.arg == "donate_argnums":
+                return True
+    return False
+
+
+def _is_jit_wrapped(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        for n in ast.walk(dec):
+            if _attr_chain(n)[-1:] == ["jit"]:
+                return True
+    return False
+
+
+class KernelRule(Rule):
+    name = "kernel"
+
+    def applies(self, module: ModuleInfo) -> bool:
+        return "kernels" in module.parts and module.name not in _EXEMPT
+
+    def check(self, module: ModuleInfo) -> Iterable[Diagnostic]:
+        if not self.applies(module):
+            return []
+        calls = _pallas_calls(module.tree)
+        if not calls:
+            return []
+        out: List[Diagnostic] = []
+
+        for call in calls:
+            if _kw(call, "interpret") is None:
+                d = module.diag(
+                    call, self.name,
+                    "pl.pallas_call without an `interpret=` kwarg; the "
+                    "kernel body must be runnable on CPU CI")
+                if d:
+                    out.append(d)
+            alias = _kw(call, "input_output_aliases")
+            parent = getattr(call, "_lint_parent", None)
+            if isinstance(alias, ast.Dict) and alias.keys \
+                    and isinstance(parent, ast.Call) and parent.func is call:
+                n_ops = len(parent.args)
+                for key in alias.keys:
+                    if isinstance(key, ast.Constant) \
+                            and isinstance(key.value, int) \
+                            and key.value >= n_ops:
+                        d = module.diag(
+                            call, self.name,
+                            f"input_output_aliases key {key.value} exceeds "
+                            f"the call's {n_ops} operands")
+                        if d:
+                            out.append(d)
+
+        refs = _ref_names(module)
+        has_pallas_fn: Set[str] = set()
+        for fn in [n for n in module.tree.body
+                   if isinstance(n, ast.FunctionDef)]:
+            if any(c in ast.walk(fn) for c in calls):
+                has_pallas_fn.add(fn.name)
+        for fn in [n for n in module.tree.body
+                   if isinstance(n, ast.FunctionDef)]:
+            if fn.name.startswith("_"):
+                continue
+            if not (_is_jit_wrapped(fn) or fn.name in has_pallas_fn):
+                continue
+            if refs is None:
+                d = module.diag(
+                    fn, self.name,
+                    f"kernel entry `{fn.name}` has no sibling ref.py to "
+                    f"hold its oracle")
+                if d:
+                    out.append(d)
+                continue
+            if not any(fn.name == r or fn.name.startswith(r + "_")
+                       or fn.name.startswith(r) for r in refs):
+                d = module.diag(
+                    fn, self.name,
+                    f"kernel entry `{fn.name}` has no oracle counterpart "
+                    f"in ref.py")
+                if d:
+                    out.append(d)
+
+        if any(_donates(fn) for fn in module.tree.body
+               if isinstance(fn, ast.FunctionDef)) \
+                and not any(_has_alias_dict(_kw(c, "input_output_aliases"))
+                            for c in calls):
+            fn = next(f for f in module.tree.body
+                      if isinstance(f, ast.FunctionDef) and _donates(f))
+            d = module.diag(
+                fn, self.name,
+                f"`{fn.name}` declares donate_argnums but no pallas_call "
+                f"in this module aliases an operand; the donated buffer "
+                f"is silently copied")
+            if d:
+                out.append(d)
+        return out

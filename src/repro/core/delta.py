@@ -11,7 +11,7 @@ update into a multi-host collective-free update.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax.numpy as jnp
 import numpy as np

@@ -24,13 +24,12 @@ when the cursor drains.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import delta as delta_lib
 from repro.core.licensing import FULL_TIER, LicenseTier
-from repro.core.pytree_io import flatten_params
 from repro.core.weightstore import LayerDelta, UpdatePacket, WeightStore
 
 

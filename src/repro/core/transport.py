@@ -33,7 +33,7 @@ import random
 import threading
 import time
 import zlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
@@ -314,9 +314,9 @@ class ChaosTransport(Transport):
         self.latency_spike_s = float(latency_spike_s)
         self.sleep = sleep
         self.fault_ops = None if fault_ops is None else frozenset(fault_ops)
-        self._counts: Dict[str, int] = {}
         self._lock = threading.Lock()
-        self._last_fetch: Optional[Tuple[List[Any], List[int]]] = None
+        self._counts: Dict[str, int] = {}                   # guarded-by: _lock
+        self._last_fetch: Optional[Tuple[List[Any], List[int]]] = None  # guarded-by: _lock
 
     def _decide(self, op: str):
         with self._lock:
@@ -347,11 +347,14 @@ class ChaosTransport(Transport):
             self.stats["faults"] += 1
             self.stats["timeouts"] += 1
             raise TransportTimeout(f"{op}: request timed out")
-        if dup and self._last_fetch is not None:
-            # duplicate delivery: the previous batch arrives again; the
-            # server (and its cursor) never sees this call
-            self.stats["duplicates"] += 1
-            return copy.deepcopy(self._last_fetch)
+        if dup:
+            with self._lock:
+                last = copy.deepcopy(self._last_fetch)
+            if last is not None:
+                # duplicate delivery: the previous batch arrives again;
+                # the server (and its cursor) never sees this call
+                self.stats["duplicates"] += 1
+                return last
         result = thunk()
         if fault == "disconnect":
             self.stats["faults"] += 1
@@ -386,5 +389,7 @@ class ChaosTransport(Transport):
                                            to_version=packet.to_version,
                                            deltas=deltas), digest)
         if op == "fetch_update" and isinstance(result, tuple):
-            self._last_fetch = copy.deepcopy(result)
+            snap = copy.deepcopy(result)
+            with self._lock:
+                self._last_fetch = snap
         return result

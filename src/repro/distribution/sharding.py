@@ -15,7 +15,7 @@ their sequence dim over "data" instead (sequence-parallel KV).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np

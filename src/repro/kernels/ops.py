@@ -92,7 +92,6 @@ def masked_dequant(
     r, c = codes.shape
     if r * c < 256 * 256:
         return ref.masked_dequant(codes, jnp.broadcast_to(scale, codes.shape), lo, hi, out_dtype)
-    br = min(block_r, r) if r % min(block_r, r) == 0 else block_r
     cp = _pad_to(codes, (block_r, block_c))
     if scale.ndim != 2:
         scale = scale.reshape((1, -1)) if scale.size == c else scale.reshape((-1, 1))

@@ -7,7 +7,6 @@ sliding windows and decode-with-cache all route through here.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

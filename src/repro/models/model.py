@@ -13,12 +13,10 @@ Entry points:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import layers as L
 from repro.models import moe as M
@@ -244,7 +242,7 @@ def forward(
     def unit_step(carry, xs):
         x, aux = carry
         unit_params, unit_cache = xs
-        from repro.serving.quantized import dequant_tree, is_qleaf
+        from repro.serving.quantized import dequant_tree
 
         unit_params = dequant_tree(unit_params, license_intervals, cfg.dtype)
         new_caches = {}
@@ -277,8 +275,6 @@ def forward(
             step, (x, aux_total), (params["units"], cache["units"])
         )
     else:
-        n_units = cfg.pattern_units
-        dummy = jax.tree_util.tree_map(lambda _: None, ())  # placeholder
         (x, aux_total), _ = jax.lax.scan(
             lambda c, p_: (step(c, (p_, None))[0], ()), (x, aux_total),
             params["units"],

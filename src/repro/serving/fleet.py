@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitize import ServingSanitizer, sanitize_from_env
 from repro.configs.base import ModelConfig
 from repro.core.licensing import FULL_TIER, LicenseTier, apply_license
 from repro.core.transport import (DirectTransport, RetryPolicy, Transport,
@@ -120,6 +121,7 @@ class ModelSlot:
         lease_policy: str = "reject",
         lease_floor_tier: Optional[str] = None,
         quarantine_after: int = 3,
+        sanitize: Optional[bool] = None,
     ):
         self.cfg = cfg
         # observability substrate first: the scheduler takes the clock,
@@ -249,6 +251,29 @@ class ModelSlot:
                                        clock=self.clock)
             self.prefix = None
             zero_cap = self.capacity
+        # opt-in runtime sanitizers (docs/ANALYSIS.md): shadow block
+        # lifecycle + retracing sentinel.  Attached HERE — before any
+        # block traffic — so the shadow sees every allocation.
+        if sanitize is None:
+            sanitize = sanitize_from_env()
+        self.sanitizer = ServingSanitizer() if sanitize else None
+        if self.sanitizer is not None:
+            rt = self.sanitizer.retrace
+            # sampling-variant families: unfused (1 key) or fused
+            # (rng/topk on demand, <= 3 keys)
+            for fam in ("steps", "prefix_prefill", "paged_decode"):
+                rt.bound(fam, 4)
+            if self.paged:
+                self.sanitizer.attach_allocator(self.pool.allocator)
+                bpl = self.pool.blocks_per_lane
+                # chunked prefill pow2-buckets both axes:
+                # b in {1,2,..,max_batch}, cols in {1,2,..,pow2(bpl)}
+                rt.bound("prefill_chunk",
+                         (self.max_batch.bit_length() + 1)
+                         * (bpl.bit_length() + 2))
+                # decode tables are trimmed to the batch's exact used
+                # width (unbucketed by design): bounded by the lane cap
+                rt.bound("decode_width", bpl)
         lane0 = model_lib.init_cache(cfg, 1, zero_cap)  # pristine batch-1 cache
         self._zero_lanes = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (self.max_batch, *x.shape)),
@@ -282,7 +307,7 @@ class ModelSlot:
         self.lease_policy = lease_policy
         self.lease_floor_tier = lease_floor_tier
         self._lease_state = "healthy"
-        self._lease_renewed_t = self.clock()
+        self._lease_renewed_t = self.clock()  # guarded-by: owner(__init__, _lease_renew)
         self._lease_degraded_since: Optional[float] = None
         self._degraded_seconds = 0.0
         self._lease_recheck_t: Optional[float] = None
@@ -353,9 +378,10 @@ class ModelSlot:
 
         self._register_telemetry()
         # seed the audit ledger: the tiers this slot can serve from birth
-        for name in self.tiers:
-            self.audit.record("tier_grant", model=self.model, tier=name,
-                              version=self.version, source="config")
+        if self.obs:
+            for name in self.tiers:
+                self.audit.record("tier_grant", model=self.model, tier=name,
+                                  version=self.version, source="config")
 
     # ---------------------------------------------------------- observability
     def _register_telemetry(self) -> None:
@@ -606,8 +632,10 @@ class ModelSlot:
                 self._lease_renew()
                 self.tiers[name] = tier
                 self._server_tiers.add(name)
-                self.audit.record("tier_grant", model=self.model, tier=name,
-                                  version=self.version, source="server")
+                if self.obs:
+                    self.audit.record("tier_grant", model=self.model,
+                                      tier=name, version=self.version,
+                                      source="server")
             except KeyError:
                 tier = None
             except TransportError as exc:
@@ -621,9 +649,10 @@ class ModelSlot:
     def _materialize(self, tier_name: str, version: Optional[int]):
         """Build the (params, intervals) view served to one (tier, version)."""
         tier = self._resolve_tier(tier_name)
-        self.audit.record("view_materialize", model=self.model,
-                          tier=tier_name, version=version,
-                          fingerprint=tier.fingerprint())
+        if self.obs:
+            self.audit.record("view_materialize", model=self.model,
+                              tier=tier_name, version=version,
+                              fingerprint=tier.fingerprint())
         base = self._weights[version]
         if not self.quantized:
             return apply_license(base, tier), None
@@ -904,9 +933,11 @@ class FleetGateway:
     def __init__(self, *, cache_budget_bytes: Optional[int] = None,
                  tenants: Optional[TenantRegistry] = None,
                  telemetry: Any = True,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 sanitize: Optional[bool] = None):
         self.cache_budget_bytes = (None if cache_budget_bytes is None
                                    else int(cache_budget_bytes))
+        self.sanitize = sanitize           # default for add_model slots
         # one shared registry for the whole fleet: ``add_model`` passes
         # it to every slot (distinct {"model": name} labels keep their
         # instruments apart), ``attach`` adopts a standalone gateway's
@@ -995,6 +1026,7 @@ class FleetGateway:
         kw.pop("model", None)
         kw.setdefault("telemetry", self.telemetry)
         kw.setdefault("clock", self.clock)
+        kw.setdefault("sanitize", self.sanitize)
         gw = LicensedGateway(cfg, params, model=name, **kw)
         return self.attach(gw)
 
@@ -1103,9 +1135,10 @@ class FleetGateway:
         self.tenants.drop_queued(req.tenant)
         gw.stats["quota_rejections"] += 1
         gw.stats["rejected"] += 1
-        self.audit.record("tenant_reject", tenant=req.tenant,
-                          model=gw.model, tier=req.license,
-                          reason="entitlement revoked while queued")
+        if self.obs:
+            self.audit.record("tenant_reject", tenant=req.tenant,
+                              model=gw.model, tier=req.license,
+                              reason="entitlement revoked while queued")
         return False
 
     def submit(self, model: str, prompt, *, tenant: Optional[str] = None,
@@ -1132,8 +1165,10 @@ class FleetGateway:
                 req.error = reason
                 gw.stats["quota_rejections"] += 1
                 gw.stats["rejected"] += 1
-                self.audit.record("quota_reject", tenant=tenant,
-                                  model=model, tier=license, reason=reason)
+                if self.obs:
+                    self.audit.record("quota_reject", tenant=tenant,
+                                      model=model, tier=license,
+                                      reason=reason)
                 return req
         req = gw.submit(prompt, license=license, tenant=tenant, **kw)
         if tenant is not None and req.state is RequestState.REJECTED:

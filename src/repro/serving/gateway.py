@@ -98,7 +98,6 @@ Licensing integration
 from __future__ import annotations
 
 import functools
-from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -347,31 +346,43 @@ class LicensedGateway:
         else:
             object.__setattr__(self, name, value)
 
+    def _note_retrace(self, family: str, key: Any) -> None:
+        """Feed one jit-specialization key to the retracing sentinel
+        (no-op unless the slot was built with ``sanitize=True``)."""
+        if self.sanitizer is not None:
+            self.sanitizer.retrace.note(family, key)
+
     def _steps(self, reqs: List[GatewayRequest]):
         """(prefill, decode) jitted pair specialized to this micro-batch's
         sampling needs; batches with no stochastic lane skip the
         categorical draw, batches with no top-k lane skip the sort."""
         if not self.fuse_sampling:
+            self._note_retrace("steps", (False, False, False))
             return _compiled_steps(self.cfg, False)
         with_rng = any(r.temperature > 0 for r in reqs)
         with_topk = with_rng and any(r.top_k for r in reqs)
+        self._note_retrace("steps", (True, with_rng, with_topk))
         return _compiled_steps(self.cfg, True, with_rng, with_topk)
 
     def _prefix_steps(self, reqs: List[GatewayRequest]):
         """Suffix-prefill jit specialized like :meth:`_steps`."""
         if not self.fuse_sampling:
+            self._note_retrace("prefix_prefill", (False, False, False))
             return _compiled_prefix_prefill(self.cfg, False)
         with_rng = any(r.temperature > 0 for r in reqs)
         with_topk = with_rng and any(r.top_k for r in reqs)
+        self._note_retrace("prefix_prefill", (True, with_rng, with_topk))
         return _compiled_prefix_prefill(self.cfg, True, with_rng, with_topk)
 
     def _paged_decode_step(self, reqs: List[GatewayRequest]):
         """Kernel-resident decode jit specialized like :meth:`_steps`."""
         if not self.fuse_sampling:
+            self._note_retrace("paged_decode", (False, False, False))
             return _compiled_paged_decode(self.cfg, False,
                                           kernel=self.decode_pallas)
         with_rng = any(r.temperature > 0 for r in reqs)
         with_topk = with_rng and any(r.top_k for r in reqs)
+        self._note_retrace("paged_decode", (True, with_rng, with_topk))
         return _compiled_paged_decode(self.cfg, True, with_rng, with_topk,
                                       kernel=self.decode_pallas)
 
@@ -458,11 +469,12 @@ class LicensedGateway:
         (None = just close).  Per-request lifecycle phases (queue ->
         prefill -> decode) are sequential, never nested, so one slot per
         request suffices and every B gets its E."""
-        if req._open_span is not None:
-            self.tracer.end(req._open_span, req.rid)
+        if self.obs:
+            if req._open_span is not None:
+                self.tracer.end(req._open_span, req.rid)
+            if name is not None:
+                self.tracer.begin(name, req.rid, attrs)
         req._open_span = name
-        if name is not None:
-            self.tracer.begin(name, req.rid, attrs)
 
     def _note_admission(self, req: GatewayRequest) -> None:
         """Record a request leaving the queue for a lane: queue-wait
@@ -639,6 +651,8 @@ class LicensedGateway:
                 pass
         if self._server is not None:
             self._lease_tick()
+        if self.sanitizer is not None and act is not None:
+            self.sanitizer.after_step(self)
         if act is None:
             return None
         # a decode whose whole batch was preempted executed nothing —
@@ -657,6 +671,10 @@ class LicensedGateway:
         try:
             for _ in range(max_steps):
                 if self.step() is None and not self.sync_active:
+                    if self.sanitizer is not None:
+                        # queue and lanes are empty: anything still held
+                        # must be reachable via the prefix tree
+                        self.sanitizer.check_drained(self)
                     break
         finally:
             self._drain_sink = None
@@ -950,6 +968,7 @@ class LicensedGateway:
         # past the real rows (causally unattended, scattered to null).
         need = max(cdiv(r.cursor + w, bs) for r in reqs)
         cols = min(self.pool.blocks_per_lane, _pow2(need))
+        self._note_retrace("prefill_chunk", (b, cols))
         sub = np.zeros((b, w), np.int32)
         poss = np.zeros(b, np.int32)
         lasts = np.zeros(b, np.int32)
@@ -1137,6 +1156,9 @@ class LicensedGateway:
             act.requests = self._grow_block_tables(act.requests)
             if not act.requests:
                 return                     # whole batch preempted
+            if self.sanitizer is not None:
+                # post-CoW: every table entry live, write targets private
+                self.sanitizer.check_decode_writes(act.requests, self.pool)
         view_params, li = self.views.get(act.tier, act.version)
         reqs = act.requests
         lanes = self.pool.pad_lanes([r.lane for r in reqs], self.max_batch)
@@ -1155,6 +1177,7 @@ class LicensedGateway:
             # shared tail before this step), and shared prefix blocks are
             # never write targets, so no null-redirect is needed.
             used = max(r.pos // self.pool.block_size + 1 for r in reqs)
+            self._note_retrace("decode_width", used)
             tables = self.pool.pad_tables([r.blocks[:used] for r in reqs],
                                           self.max_batch, used)
             caches = self.pool.decode_cache(lanes)

@@ -51,7 +51,7 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "Telemetry",
     "DEFAULT_LATENCY_BUCKETS", "GATEWAY_METRICS_KEYS", "FLEET_METRICS_KEYS",
     "FLEET_MODEL_EXTRA_KEYS",
-    "flatten_metric_keys", "unregistered_metric_keys",
+    "flatten_metric_keys",
     "validate_gateway_metrics", "validate_fleet_metrics",
 ]
 
@@ -275,7 +275,7 @@ class Telemetry:
     # ---------------------------------------------------------- metrics() lint
     def declare(self, *paths: str) -> None:
         """Declare ``metrics()`` key paths as registered (see
-        :func:`unregistered_metric_keys`)."""
+        :func:`repro.analysis.metrics.unregistered_metric_keys`)."""
         self._declared.update(paths)
 
     @property
@@ -404,24 +404,6 @@ def flatten_metric_keys(d: Any, prefix: str = "") -> List[str]:
     return out
 
 
-def _declared_match(path: str, declared: Iterable[str]) -> bool:
-    for d in declared:
-        if d.endswith(".*"):
-            if path == d[:-2] or path.startswith(d[:-1]):
-                return True
-        elif path == d:
-            return True
-    return False
-
-
-def unregistered_metric_keys(metrics: Dict[str, Any],
-                             declared: Iterable[str]) -> List[str]:
-    """Leaf paths of ``metrics`` not covered by the declared schema."""
-    declared = list(declared)
-    return [p for p in flatten_metric_keys(metrics)
-            if not _declared_match(p, declared)]
-
-
 def validate_gateway_metrics(metrics: Dict[str, Any],
                              extra: Iterable[str] = ()) -> None:
     """Assert ``metrics`` carries exactly the single-gateway schema.
@@ -429,25 +411,22 @@ def validate_gateway_metrics(metrics: Dict[str, Any],
     Checks both directions: no unregistered keys (modulo ``extra``, the
     fleet's documented per-model additions), and every non-wildcard,
     non-conditional declared key present — the schema-drift guard shared
-    by the standalone-gateway test and the fleet per-model test."""
+    by the standalone-gateway test and the fleet per-model test.  The
+    set-difference primitives live in :mod:`repro.analysis.metrics`
+    (imported lazily: analysis depends on this module for
+    ``flatten_metric_keys``)."""
+    from repro.analysis.metrics import (missing_metric_keys,
+                                        unregistered_metric_keys)
+
     unknown = unregistered_metric_keys(
         metrics, list(GATEWAY_METRICS_KEYS) + list(extra))
     assert not unknown, f"unregistered metrics() keys: {unknown}"
-    conditional = {"latency_p50_ms", "latency_p99_ms"}
-    flat = set(flatten_metric_keys(metrics))
-
-    def _present(decl: str) -> bool:
-        if decl.endswith(".*"):
-            stem = decl[:-2]
-            return any(p == stem or p.startswith(stem + ".")
-                       for p in flat)
-        return decl in flat
-
-    missing = [d for d in GATEWAY_METRICS_KEYS
-               if d not in conditional and not _present(d)
-               # sections that legitimately depend on configuration
-               and not d.startswith(("tenants.", "queue_wait_by_tier.",
-                                     "admission_grouping.batches_by_suffix"))]
+    missing = missing_metric_keys(
+        metrics, GATEWAY_METRICS_KEYS,
+        # conditional keys and configuration-dependent sections
+        optional=("latency_p50_ms", "latency_p99_ms", "tenants.",
+                  "queue_wait_by_tier.",
+                  "admission_grouping.batches_by_suffix_width.*"))
     assert not missing, f"metrics() keys missing from schema: {missing}"
 
 
@@ -456,15 +435,18 @@ def validate_fleet_metrics(metrics: Dict[str, Any]) -> None:
     guarantee: every ``models.<name>`` section passes the EXACT
     single-gateway check (plus the documented fleet extras), so one
     dashboard/parser serves standalone and fleet deployments alike."""
+    from repro.analysis.metrics import (missing_metric_keys,
+                                        unregistered_metric_keys)
+
     assert set(metrics) == {"fleet", "models", "tenants"}, \
         f"fleet metrics sections: {sorted(metrics)}"
     unknown = unregistered_metric_keys(
         {"fleet": metrics["fleet"], "tenants": metrics["tenants"]},
         FLEET_METRICS_KEYS)
     assert not unknown, f"unregistered fleet metrics() keys: {unknown}"
-    flat = set(flatten_metric_keys({"fleet": metrics["fleet"]}))
-    missing = [d for d in FLEET_METRICS_KEYS
-               if not d.endswith(".*") and d not in flat]
+    missing = missing_metric_keys(
+        {"fleet": metrics["fleet"]},
+        [d for d in FLEET_METRICS_KEYS if not d.endswith(".*")])
     assert not missing, f"fleet metrics() keys missing: {missing}"
     for name, m in metrics["models"].items():
         validate_gateway_metrics(m, extra=FLEET_MODEL_EXTRA_KEYS)

@@ -65,11 +65,17 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.analysis import lockstep
 from repro.core.pytree_io import flatten_params, unflatten_like
 from repro.core.transport import (PayloadCorruption, RetryPolicy, Transport,
-                                  TransportDisconnect, TransportError,
-                                  TransportTimeout, as_transport)
+                                  TransportError, TransportTimeout,
+                                  as_transport)
 from repro.serving.tracing import STAGER_TID
+
+# the cursor-protocol fields whose ownership moves with the fetch
+# worker (see the guarded-by annotations in __init__ and
+# repro.analysis.lockstep for the dynamic check)
+_WORKER_FIELDS = ("_cursor", "_pos", "_cursor_dead")
 
 
 class _ReopenRequired(Exception):
@@ -145,7 +151,7 @@ class UpdateStager:
         self._fetch_stop = None
         self.phase = "idle"
         self.to_version: Optional[int] = None
-        self._cursor = None
+        self._cursor = None  # guarded-by: owner(__init__, begin, _reopen, abort, _flip)
         self._staged: Any = None          # staging copy of the raw params
         self._staged_q: Any = None        # staging int8 store (quantized path)
         self._touched: Set[str] = set()   # layer names the delta touched
@@ -155,9 +161,9 @@ class UpdateStager:
         # position (the resume token), wire bytes accumulated across
         # reopened sessions, and whether the current cursor may have
         # advanced past parts the client never received
-        self._pos: Tuple[int, int] = (0, 0)
-        self._wire_bytes = 0
-        self._cursor_dead = False
+        self._pos: Tuple[int, int] = (0, 0)  # guarded-by: owner(__init__, begin, _fetch_parts)
+        self._wire_bytes = 0  # guarded-by: owner(__init__, begin, _reopen)
+        self._cursor_dead = False  # guarded-by: owner(__init__, begin, _reconnect, _fetch_parts)
         self.stats_: Dict[str, Any] = {
             "steps": 0, "parts_applied": 0, "bytes_applied": 0,
             "max_step_bytes_applied": 0, "layers_requantized": 0,
@@ -275,6 +281,8 @@ class UpdateStager:
         seeked to the last durably-applied position.  The delta query
         is deterministic, so the resumed row ranges line up exactly."""
         gw, client = self.gw, self.gw._client
+        lockstep.checkpoint("stager.reopen",
+                            touches=("_cursor", "_wire_bytes"))
         old, self._cursor = self._cursor, None
         if old is not None:
             self._wire_bytes += old.fetched_bytes
@@ -311,6 +319,8 @@ class UpdateStager:
         are bound to the serving thread.  Timeouts (the cursor never
         moved) still retry in place — pure in-memory work."""
 
+        lockstep.checkpoint("stager.fetch_parts", touches=_WORKER_FIELDS)
+
         def attempt():
             if self._cursor_dead:
                 if not allow_reopen:
@@ -333,6 +343,7 @@ class UpdateStager:
         parts = self.retry.run(attempt, on_retry=self._note_retry)
         # durable position: everything up to here is about to be applied
         # locally (apply cannot fault — it is host/device work)
+        lockstep.checkpoint("stager.advance_pos", touches=("_pos",))
         self._pos = self._cursor.tell()
         self.gw._lease_renew()
         return parts, self._cursor.done
@@ -391,6 +402,9 @@ class UpdateStager:
         self._fetch_stop = stop
         self._fetch_thread = threading.Thread(
             target=_loop, name="update-stager-fetch", daemon=True)
+        # the handoff point: from here until the join in
+        # _stop_fetch_worker, cursor state belongs to the worker
+        lockstep.transfer_ownership(_WORKER_FIELDS, "worker")
         self._fetch_thread.start()
 
     def _stop_fetch_worker(self) -> bool:
@@ -415,6 +429,12 @@ class UpdateStager:
         leaked = self._fetch_thread.is_alive()
         if leaked:
             self.stats_["fetch_workers_leaked"] += 1
+        else:
+            # join is the visibility barrier: cursor state is the
+            # serving thread's again.  A LEAKED worker keeps ownership —
+            # any serve-side touch after a failed join is the exact
+            # hazard the lockstep checker exists to flag.
+            lockstep.transfer_ownership(_WORKER_FIELDS, "serve")
         self._fetch_thread = None
         self._fetch_queue = None
         self._fetch_stop = None
@@ -524,6 +544,7 @@ class UpdateStager:
         self._pending_buf = None
 
     def _step_stage(self) -> None:
+        lockstep.checkpoint("stager.stage")
         if self._fetch_thread is not None:
             # the wire transfer already happened (or is happening) on the
             # worker; a blocking get here is never slower than the
@@ -636,6 +657,8 @@ class UpdateStager:
     def _flip(self) -> None:
         """Atomic install: new weights + tier redefinitions in one step."""
         gw, client = self.gw, self.gw._client
+        lockstep.checkpoint("stager.flip",
+                            touches=("_cursor", "_wire_bytes"))
         gw._install_staged(self.to_version)
         client.params = self._staged
         client.version = self.to_version

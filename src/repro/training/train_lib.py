@@ -4,7 +4,7 @@ checkpoint substrate — every checkpoint is a delta commit)."""
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 
 import jax

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ASSIGNED_ARCHS, get_config, smoke_variant
-from repro.models import forward, init_cache, init_params, lm_loss
+from repro.models import forward, init_cache, init_params
 from repro.training import OptimizerConfig, make_train_step
 from repro.training import optimizer as opt_lib
 

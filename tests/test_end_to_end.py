@@ -19,7 +19,7 @@ from repro.core import (
     unflatten_like,
 )
 from repro.data import LMDataConfig, lm_batches
-from repro.models import forward, init_params
+from repro.models import forward
 from repro.serving import Request, ServingEngine
 from repro.training import OptimizerConfig, train_loop
 
@@ -83,7 +83,6 @@ def test_full_lifecycle(trained):
 def test_licensed_lm_serving_both_modes(trained):
     cfg, params, _ = trained
     tiers = {"free": LicenseTier(name="free", masks={"*": ((0.0, 0.002),)})}
-    prompts = [Request(prompt=np.arange(12, dtype=np.int32), max_new_tokens=4)]
 
     eng_load = ServingEngine(cfg, params, tiers=tiers)              # paper
     eng_q = ServingEngine(cfg, params, tiers=tiers, quantized=True)  # ours

@@ -1,5 +1,4 @@
 """Flash-attention Pallas kernel vs materialized-softmax oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -47,7 +47,6 @@ def test_micro_batches_are_tier_homogeneous(setup):
     assert len(gw.trace) > 0
     # the invariant the masked-view batching rests on: one (tier, version)
     # per micro-batch -- recorded per action by the gateway
-    by_rid = {r.rid: r for r in reqs}
     for kind, tier, version, n in gw.trace:
         assert kind in ("prefill", "decode")
         assert 1 <= n <= 2

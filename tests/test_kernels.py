@@ -14,7 +14,6 @@ except ImportError:  # property tests skip; plain tests still run
     from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
-from repro.kernels.masked_dequant import MAX_INTERVALS
 
 jax.config.update("jax_enable_x64", False)
 

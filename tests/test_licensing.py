@@ -1,7 +1,6 @@
 """Licensing (paper §3.5, Algorithm 1) + compression (§3.2) behaviour."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -14,7 +13,6 @@ from repro.core.licensing import (
     LicenseTier,
     apply_license,
     calibrate_license,
-    interval_mask,
     license_stats,
     mask_weight,
 )

@@ -1,5 +1,4 @@
 """Paged-attention decode kernel vs the gather-then-softmax oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -54,7 +54,7 @@ def test_second_update_ships_only_delta(server):
 
 def test_skipped_patches_one_packet(server):
     p = params()
-    v1 = server.publish("prod", p)
+    server.publish("prod", p)
     client = EdgeClient("prod", zeros_like(p))
     client.request_update(server)
     # three server-side versions while the client is offline
@@ -71,7 +71,7 @@ def test_skipped_patches_one_packet(server):
 
 def test_license_masks_applied_server_side(server):
     p = params(7)
-    v = server.publish("prod", p)
+    server.publish("prod", p)
     tier = LicenseTier(name="free", masks={"l1": ((0.5, 0.8),)}, accuracy=0.7)
     server.publish_tier("prod", tier)
 

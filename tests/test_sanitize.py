@@ -1,0 +1,203 @@
+"""Runtime sanitizer suite: seeded lifecycle violations against the
+shadow block model, retrace-sentinel bound busting, and the sanitized
+gateway end to end (the ``REPRO_SANITIZE=1`` CI lane runs the full
+paging/decode/update suites under the same wiring)."""
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import (RetraceSentinel, SanitizerError,
+                                     ServingSanitizer, sanitize_from_env)
+from repro.configs import get_config, smoke_variant
+from repro.models import init_params
+from repro.serving import LicensedGateway, RequestState
+from repro.serving.paging import BlockAllocator
+
+
+def _attached(num_blocks=8):
+    alloc = BlockAllocator(num_blocks)
+    san = ServingSanitizer()
+    san.attach_allocator(alloc)
+    return alloc, san
+
+
+# ------------------------------------------------------------ shadow mirror
+def test_shadow_mirrors_clean_lifecycle():
+    alloc, san = _attached()
+    a, b = alloc.alloc(2)
+    assert san.shadow == {a: 1, b: 1}
+    assert alloc.incref(a) == 2          # wrapper preserves the count
+    assert alloc.decref(a) == 1
+    assert alloc.decref(b) == 0
+    alloc.free([a])
+    assert san.shadow == {} and alloc.num_held == 0
+
+
+def test_double_free_caught_at_the_op():
+    alloc, san = _attached()
+    (b,) = alloc.alloc(1)
+    alloc.free([b])
+    with pytest.raises(SanitizerError, match="double free"):
+        alloc.free([b])
+    with pytest.raises(SanitizerError, match="double free"):
+        alloc.decref(b)
+
+
+def test_incref_after_free_is_use_after_free():
+    alloc, san = _attached()
+    (b,) = alloc.alloc(1)
+    alloc.decref(b)
+    with pytest.raises(SanitizerError, match="use-after-free"):
+        alloc.incref(b)
+
+
+def test_free_of_shared_block_rejected():
+    alloc, san = _attached()
+    (b,) = alloc.alloc(1)
+    alloc.incref(b)
+    with pytest.raises(SanitizerError, match="shared"):
+        alloc.free([b])
+
+
+def test_free_list_corruption_on_realloc():
+    alloc, san = _attached(num_blocks=2)
+    got = alloc.alloc(2)
+    alloc._free.append(got[0])           # seeded corruption: live id re-listed
+    with pytest.raises(SanitizerError, match="free-list corruption"):
+        alloc.alloc(1)
+
+
+def test_shadow_divergence_detected():
+    alloc, san = _attached()
+    a, b = alloc.alloc(2)
+    alloc._ref[a] += 1                   # mutation behind the wrappers' back
+    with pytest.raises(SanitizerError, match="divergence"):
+        alloc.decref(b)
+
+
+def test_attach_requirements():
+    alloc = BlockAllocator(4)
+    alloc.alloc(1)
+    with pytest.raises(SanitizerError, match="live blocks"):
+        ServingSanitizer().attach_allocator(alloc)
+    alloc2, san = _attached()
+    with pytest.raises(SanitizerError, match="already attached"):
+        san.attach_allocator(BlockAllocator(4))
+
+
+# ------------------------------------------------------------ gateway hooks
+def _req(rid, blocks, pos):
+    return SimpleNamespace(rid=rid, blocks=blocks, pos=pos)
+
+
+def test_decode_write_table_entry_to_freed_block():
+    alloc, san = _attached()
+    a, b = alloc.alloc(2)
+    alloc.decref(b)                      # freed, but the table still holds it
+    pool = SimpleNamespace(block_size=4)
+    with pytest.raises(SanitizerError, match="freed block"):
+        san.check_decode_writes([_req("r0", [a, b], pos=5)], pool)
+
+
+def test_decode_write_to_shared_block_without_cow():
+    alloc, san = _attached()
+    a, b = alloc.alloc(2)
+    alloc.incref(b)                      # tail shared (e.g. by the prefix tree)
+    pool = SimpleNamespace(block_size=4)
+    with pytest.raises(SanitizerError, match="without CoW"):
+        san.check_decode_writes([_req("r0", [a, b], pos=5)], pool)
+    # exclusively-owned tail (CoW done) passes
+    alloc.decref(b)
+    san.check_decode_writes([_req("r0", [a, b], pos=5)], pool)
+
+
+def test_after_step_and_drain_leak_detection():
+    alloc, san = _attached()
+    a, b, c = alloc.alloc(3)
+    req = _req("r0", [a], pos=0)
+    gw = SimpleNamespace(
+        scheduler=SimpleNamespace(running=[req], waiting=[]),
+        prefix=SimpleNamespace(_by_block={b: object()}))
+    san.after_step(gw)                   # all request blocks live: fine
+    with pytest.raises(SanitizerError, match=rf"leak at drain.*{c}"):
+        san.check_drained(gw)            # c: no request, no prefix node
+    alloc.decref(c)
+    san.check_drained(gw)                # prefix-retained b is NOT a leak
+    alloc.decref(b)
+    req.blocks = [a, b]                  # table entry outlived the block
+    with pytest.raises(SanitizerError, match="holds freed block"):
+        san.after_step(gw)
+
+
+# --------------------------------------------------------- retrace sentinel
+def test_retrace_sentinel_bounds_distinct_keys():
+    rt = RetraceSentinel()
+    rt.bound("decode_width", 2)
+    rt.note("decode_width", 4)
+    rt.note("decode_width", 4)           # repeat key: no new specialization
+    rt.note("decode_width", 8)
+    assert rt.stats() == {"decode_width": 2}
+    with pytest.raises(SanitizerError, match="decode_width.*over its bound"):
+        rt.note("decode_width", 16)
+    rt.note("unbounded_family", "x")     # families without bounds only count
+
+
+def test_sanitize_env_opt_in(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert sanitize_from_env() is False
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert sanitize_from_env() is False
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_from_env() is True
+
+
+# ------------------------------------------------------------- end to end
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_variant(get_config("qwen2.5-3b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_sanitized_gateway_serves_clean(setup):
+    cfg, params = setup
+    gw = LicensedGateway(cfg, params, sanitize=True, max_batch=2,
+                         max_prompt=8, max_new_cap=8, block_size=4)
+    assert gw.sanitizer is not None
+    rng = np.random.default_rng(0)
+    reqs = [gw.submit(rng.integers(0, 500, 8, dtype=np.int32),
+                      max_new_tokens=6) for _ in range(3)]
+    gw.run()
+    assert all(r.state == RequestState.DONE for r in reqs), \
+        [r.error for r in reqs]
+    # the shadow tracked every mutation and agrees with the allocator
+    assert gw.sanitizer.shadow == dict(gw.pool.allocator._ref)
+    # the bucketed jit families actually specialized, within bounds
+    stats = gw.sanitizer.retrace.stats()
+    assert stats and all(v >= 1 for v in stats.values())
+
+
+def test_env_opt_in_arms_the_gateway(setup, monkeypatch):
+    cfg, params = setup
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    gw = LicensedGateway(cfg, params, max_batch=1, max_prompt=4,
+                         max_new_cap=4, block_size=4)
+    assert gw.sanitizer is not None
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    gw2 = LicensedGateway(cfg, params, max_batch=1, max_prompt=4,
+                          max_new_cap=4, block_size=4)
+    assert gw2.sanitizer is None
+
+
+def test_sanitized_gateway_catches_injected_double_free(setup):
+    cfg, params = setup
+    gw = LicensedGateway(cfg, params, sanitize=True, max_batch=1,
+                         max_prompt=8, max_new_cap=4, block_size=4,
+                         prefix_cache=False)
+    alloc = gw.pool.allocator
+    got = alloc.alloc(1)
+    alloc.decref(got[0])
+    with pytest.raises(SanitizerError, match="double free"):
+        alloc.decref(got[0])

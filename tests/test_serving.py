@@ -43,8 +43,6 @@ def test_licensed_view_differs_and_is_cached(engine):
     free1 = engine.params_for("free")
     free2 = engine.params_for("free")
     assert free1 is free2  # cached view
-    fl = jax.tree_util.tree_leaves(full)[1]
-    fr = jax.tree_util.tree_leaves(free1)[1]
     # some weights masked in at least one leaf
     diff = any(
         not np.array_equal(np.asarray(a), np.asarray(b))

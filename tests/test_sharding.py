@@ -1,8 +1,5 @@
 """Partition-rule unit tests (distribution/sharding.py) on a tiny mesh."""
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distribution import sharding as shd

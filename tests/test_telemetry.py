@@ -18,7 +18,7 @@ from repro.serving import (Histogram, LicensedGateway, RequestState,
                            Telemetry, TraceRecorder, validate_chrome_trace,
                            validate_gateway_metrics)
 from repro.serving.tracing import AuditLog
-from repro.serving.telemetry import unregistered_metric_keys
+from repro.analysis.metrics import declared_match, unregistered_metric_keys
 
 MAX_PROMPT = 8
 MAX_NEW = 8
@@ -320,8 +320,12 @@ def test_staged_flip_emits_exactly_one_version_flip(setup):
 
 # ------------------------------------------------------------- schema lint
 def test_unregistered_keys_lint_flags_strays():
+    # the schema primitives live in repro.analysis.metrics now; this
+    # exercises them through a live Telemetry declaration set
     t = Telemetry()
     t.declare("known", "nested.*")
     assert unregistered_metric_keys(
         {"known": 1, "nested": {"a": 2, "b": 3}}, t.declared) == []
     assert unregistered_metric_keys({"stray": 1}, t.declared) == ["stray"]
+    assert declared_match("nested.deep.leaf", t.declared)
+    assert not declared_match("nested2", t.declared)
